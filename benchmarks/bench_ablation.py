@@ -1,0 +1,107 @@
+"""Paper Table 6 (ablation) + Fig 12 (partition size) + Fig 13 (memory).
+
+Ablation axes mapped onto in-repo systems:
+- ART + per-edge versioning  -> PerEdgeVersionedAdjacency (baseline)
+- ART + SC                   -> RapidStore(B=4, all vertices in trees)
+- C-ART + SC                 -> RapidStore(B=512, no clustered index)
+- C-ART + SC + VEC           -> VecStore (exact per-vertex vectors)
+- C-ART + SC + CI            -> full RapidStore (default config)
+"""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import RapidStore
+from repro.core.analytics import pagerank_coo
+from repro.core.baselines import CSRGraph, PerEdgeVersionedAdjacency, VecStore
+
+from .common import dataset, record, store_defaults, timeit
+
+
+def _insert_tput(make_store, edges, m):
+    def run():
+        s = make_store()
+        for i in range(0, m, 1024):
+            s.insert_edges(edges[i : i + 1024])
+        return s
+
+    t = timeit(run, repeat=1)
+    return m / t
+
+
+def _pr_latency(store, n, kind):
+    if kind == "pev":
+        src = []
+        dst = []
+        for u in range(n):
+            nb = store.scan(u)
+            src.extend([u] * len(nb))
+            dst.extend(nb.tolist())
+        src = np.asarray(src, np.int64)
+        dst = np.asarray(dst, np.int32)
+    elif kind == "vec":
+        src, dst = [], []
+        for u in range(n):
+            nb = store.scan(u)
+            src.extend([u] * len(nb))
+            dst.extend(nb.tolist())
+        src = np.asarray(src, np.int64)
+        dst = np.asarray(dst, np.int32)
+    else:
+        with store.read_view() as view:
+            src, dst = view.to_coo()
+    pagerank_coo(src, dst, n, iters=5).block_until_ready()
+    return timeit(lambda: pagerank_coo(src, dst, n, iters=5).block_until_ready(),
+                  repeat=2)
+
+
+def run(quick: bool = False) -> None:
+    n, edges = dataset("g5")
+    m = 40_000 if quick else 100_000
+    base = edges[:m]
+    dflt = store_defaults()
+
+    systems = {
+        "art_per_edge": (lambda: PerEdgeVersionedAdjacency(n), "pev"),
+        "art_sc": (lambda: RapidStore(n, partition_size=dflt["partition_size"],
+                                      B=4, high_threshold=0,
+                                      tracer_k=dflt["tracer_k"]), "store"),
+        "cart_sc": (lambda: RapidStore(n, partition_size=dflt["partition_size"],
+                                       B=dflt["B"], high_threshold=0,
+                                       tracer_k=dflt["tracer_k"]), "store"),
+        "cart_sc_vec": (lambda: VecStore(n, dflt["partition_size"]), "vec"),
+        "cart_sc_ci": (lambda: RapidStore(n, **dflt), "store"),
+    }
+    for label, (mk, kind) in systems.items():
+        tput = _insert_tput(mk, base, m)
+        s = mk()
+        s.insert_edges(base)
+        lat = _pr_latency(s, n, kind)
+        mem = s.memory_bytes() if hasattr(s, "memory_bytes") else 0
+        record(f"ablation/{label}/insert", 1e6 / max(tput, 1),
+               f"teps={tput / 1e3:.1f}k pr_s={lat:.3f} mem_mb={mem / 2**20:.1f}")
+
+    # Fig 12: partition size sweep
+    for p in ([16, 64] if quick else [4, 16, 64, 256]):
+        mk = lambda: RapidStore(n, partition_size=p, B=dflt["B"],
+                                high_threshold=dflt["high_threshold"],
+                                tracer_k=dflt["tracer_k"])
+        tput = _insert_tput(mk, base, m)
+        s = mk()
+        s.insert_edges(base)
+        lat = _pr_latency(s, n, "store")
+        record(f"partition/P{p}", 1e6 / max(tput, 1),
+               f"insert_teps={tput / 1e3:.1f}k pr_s={lat:.3f}")
+
+    # Fig 13: memory after full load (+ fill ratio, paper Table 3)
+    g = CSRGraph.from_edges(n, base)
+    csr_bytes = g.offsets.nbytes + g.indices.nbytes
+    full = RapidStore.from_edges(n, base, **dflt)
+    pev = PerEdgeVersionedAdjacency.from_edges(n, base)
+    vec = VecStore.from_edges(n, base)
+    record("memory/csr", 0.0, f"mb={csr_bytes / 2**20:.1f}")
+    record("memory/rapidstore", 0.0,
+           f"mb={full.memory_bytes() / 2**20:.1f} fill={full.fill_ratio():.2f}")
+    record("memory/per_edge_versioned", 0.0, f"mb={pev.memory_bytes() / 2**20:.1f}")
+    record("memory/vec", 0.0, f"mb={vec.memory_bytes() / 2**20:.1f}")

@@ -1,0 +1,96 @@
+"""Paper Figs 2/3/9/10 + Fig 16: concurrent readers x writers — reader
+latency under write load, writer throughput under read load, batch sizes."""
+
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+
+from repro.core import RapidStore
+from repro.core.analytics import pagerank_coo
+from repro.core.baselines import PerEdgeVersionedAdjacency
+
+from .common import dataset, record, store_defaults
+
+
+def _run_mix(store, n, edges, n_readers, n_writers, duration=2.0, pev=False):
+    stop = threading.Event()
+    reader_times, writer_ops = [], [0] * max(n_writers, 1)
+    errors = []
+
+    def reader(idx):
+        try:
+            while not stop.is_set():
+                t0 = time.perf_counter()
+                if pev:
+                    # per-edge store: scan-everything snapshot (version checks)
+                    total = 0
+                    for u in range(0, n, 7):
+                        total += len(store.scan(u))
+                else:
+                    with store.read_view() as view:
+                        src, dst = view.to_coo()
+                        pagerank_coo(src, dst, n, iters=2).block_until_ready()
+                reader_times.append(time.perf_counter() - t0)
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    def writer(idx):
+        rng = np.random.default_rng(idx)
+        try:
+            while not stop.is_set():
+                e = rng.integers(0, n, size=(64, 2), dtype=np.int64)
+                e = e[e[:, 0] != e[:, 1]]
+                store.delete_edges(e)
+                store.insert_edges(e)
+                writer_ops[idx] += 2 * len(e)
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=reader, args=(i,)) for i in range(n_readers)]
+    threads += [threading.Thread(target=writer, args=(i,)) for i in range(n_writers)]
+    for t in threads:
+        t.start()
+    time.sleep(duration)
+    stop.set()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    lat = float(np.median(reader_times)) if reader_times else float("nan")
+    wps = sum(writer_ops) / duration
+    return lat, wps
+
+
+def run(quick: bool = False) -> None:
+    n, edges = dataset("lj")
+    dur = 1.0 if quick else 2.0
+    mixes = [(2, 0), (2, 2), (1, 3)] if quick else [(4, 0), (4, 2), (2, 4), (1, 6)]
+
+    for n_r, n_w in mixes:
+        store = RapidStore.from_edges(n, edges, **store_defaults())
+        lat, wps = _run_mix(store, n, edges, n_r, n_w, duration=dur)
+        record(f"concurrent/rapidstore/r{n_r}w{n_w}/read_latency", lat * 1e6,
+               f"writes_per_s={wps:.0f}")
+
+    # per-edge-versioned comparison: readers pay version checks + vertex locks
+    for n_r, n_w in mixes[:2]:
+        pev = PerEdgeVersionedAdjacency.from_edges(n, edges)
+        lat, wps = _run_mix(pev, n, edges, n_r, n_w, duration=dur, pev=True)
+        record(f"concurrent/per_edge_versioned/r{n_r}w{n_w}/read_latency",
+               lat * 1e6, f"writes_per_s={wps:.0f}")
+
+    # Fig 16: batch-size sweep — write throughput + point reads
+    n2, edges2 = dataset("ldbc")
+    for bs in ([16, 256] if quick else [4, 64, 1024]):
+        store = RapidStore.from_edges(n2, edges2[:100_000], **store_defaults())
+        rng = np.random.default_rng(0)
+        updates = rng.integers(0, n2, size=(20_000, 2), dtype=np.int64)
+        updates = updates[updates[:, 0] != updates[:, 1]]
+        t0 = time.perf_counter()
+        for i in range(0, len(updates), bs):
+            store.insert_edges(updates[i : i + bs])
+        dt = time.perf_counter() - t0
+        record(f"concurrent/batch_update/bs{bs}", dt / len(updates) * 1e6,
+               f"teps={len(updates) / dt / 1e3:.1f}k")

@@ -1,0 +1,61 @@
+"""Kernel micro-benchmarks.
+
+On this CPU container the Pallas kernels execute in interpret mode, so the
+numbers are CORRECTNESS-path timings, not TPU performance — the TPU story
+lives in the roofline analysis.  The jnp reference path timings double as
+the expected XLA fallback cost.
+"""
+
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.kernels.intersect.ref import intersect_count_ref
+from repro.kernels.leaf_search.ref import leaf_search_ref
+from repro.kernels.spmm.ref import leaf_scan_reduce_ref
+from repro.kernels.flash_decode.ref import flash_decode_ref
+
+from .common import record, timeit
+
+SENT = np.iinfo(np.int32).max
+
+
+def run(quick: bool = False) -> None:
+    rng = np.random.default_rng(0)
+    Q, B = (256, 512)
+    rows = np.full((Q, B), SENT, np.int32)
+    for i in range(Q):
+        k = rng.integers(1, B)
+        rows[i, :k] = np.sort(rng.choice(100_000, k, replace=False))
+    targets = rng.integers(0, 100_000, Q).astype(np.int32)
+    rows_j, targets_j = jnp.asarray(rows), jnp.asarray(targets)
+
+    import jax
+
+    f = jax.jit(leaf_search_ref)
+    f(rows_j, targets_j)[0].block_until_ready()
+    t = timeit(lambda: f(rows_j, targets_j)[0].block_until_ready())
+    record("kernels/leaf_search_xla", t / Q * 1e6, f"probes_per_s={Q / t / 1e3:.0f}k")
+
+    a, b = rows_j, jnp.asarray(rows[rng.permutation(Q)])
+    g = jax.jit(intersect_count_ref)
+    g(a, b).block_until_ready()
+    t = timeit(lambda: g(a, b).block_until_ready())
+    record("kernels/intersect_xla", t / Q * 1e6, f"pairs_per_s={Q / t / 1e3:.1f}k")
+
+    x = jnp.asarray(rng.normal(size=100_000).astype(np.float32))
+    h = jax.jit(leaf_scan_reduce_ref)
+    h(rows_j, x).block_until_ready()
+    t = timeit(lambda: h(rows_j, x).block_until_ready())
+    record("kernels/scan_reduce_xla", t / Q * 1e6, f"blocks_per_s={Q / t / 1e3:.1f}k")
+
+    Bt, S, KV, G, dh = 4, 2048, 2, 4, 64
+    q = jnp.asarray(rng.normal(size=(Bt, KV, G, dh)).astype(np.float32))
+    kk = jnp.asarray(rng.normal(size=(Bt, S, KV, dh)).astype(np.float32))
+    vv = jnp.asarray(rng.normal(size=(Bt, S, KV, dh)).astype(np.float32))
+    kl = jnp.full((Bt,), S, jnp.int32)
+    fd = jax.jit(flash_decode_ref)
+    fd(q, kk, vv, kl).block_until_ready()
+    t = timeit(lambda: fd(q, kk, vv, kl).block_until_ready())
+    record("kernels/flash_decode_xla", t * 1e6, f"kv_len={S}")

@@ -1,0 +1,88 @@
+"""Paper Tables 1-2 + Fig 14: Search/Scan throughput (TEPS) across systems
+and degree regimes, with and without per-edge versioning."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import RapidStore
+from repro.core.baselines import CSRGraph, PerEdgeVersionedAdjacency
+
+from .common import dataset, record, store_defaults, timeit
+
+
+def _query_sets(g: CSRGraph, n_q: int, rng):
+    deg = np.diff(g.offsets)
+    order = np.argsort(deg)
+    low = order[: max(1, len(order) // 10)]
+    high = order[-max(1, len(order) // 10):]
+    out = {}
+    for label, pool in (("general", np.arange(g.n_vertices)),
+                        ("low", low), ("high", high)):
+        us = rng.choice(pool, n_q)
+        vs = rng.integers(0, g.n_vertices, n_q).astype(np.int32)
+        out[label] = (us.astype(np.int64), vs)
+    return out
+
+
+def run(quick: bool = False) -> None:
+    name = "g5"
+    n, edges = dataset(name)
+    g = CSRGraph.from_edges(n, edges)
+    store = RapidStore.from_edges(n, edges, **store_defaults())
+    pev = PerEdgeVersionedAdjacency.from_edges(n, edges)
+    # create version churn so per-edge version checks are non-trivial
+    rng = np.random.default_rng(0)
+    churn = edges[rng.choice(len(edges), 20_000, replace=False)]
+    pev.delete_edges(churn[:10_000])
+    pev.insert_edges(churn[:10_000])
+
+    n_q = 2_000 if quick else 10_000
+    queries = _query_sets(g, n_q, rng)
+
+    with store.read_view() as view:
+        for label, (us, vs) in queries.items():
+            t = timeit(lambda: [view.search(int(u), int(v)) for u, v in zip(us, vs)],
+                       repeat=2)
+            record(f"ops/search/{label}/rapidstore", t / n_q * 1e6,
+                   f"teps={n_q / t / 1e3:.1f}k")
+            t = timeit(lambda: g.search_many(us, vs), repeat=2)
+            record(f"ops/search/{label}/csr", t / n_q * 1e6,
+                   f"teps={n_q / t / 1e3:.1f}k")
+            t = timeit(lambda: [pev.search(int(u), int(v)) for u, v in zip(us, vs)],
+                       repeat=2)
+            record(f"ops/search/{label}/per_edge_versioned", t / n_q * 1e6,
+                   f"teps={n_q / t / 1e3:.1f}k")
+
+        # scans (edges/second)
+        for label, (us, _) in queries.items():
+            us_s = us[:2000]
+
+            def scan_store():
+                tot = 0
+                for u in us_s:
+                    tot += len(view.scan(int(u)))
+                return tot
+
+            def scan_csr():
+                tot = 0
+                for u in us_s:
+                    tot += len(g.neighbors(int(u)))
+                return tot
+
+            def scan_pev():
+                tot = 0
+                for u in us_s:
+                    tot += len(pev.scan(int(u)))  # per-edge version checks
+                return tot
+
+            m = max(scan_csr(), 1)
+            t = timeit(scan_store, repeat=2)
+            record(f"ops/scan/{label}/rapidstore", t / len(us_s) * 1e6,
+                   f"edges_per_s={m / t / 1e3:.0f}k")
+            t = timeit(scan_csr, repeat=2)
+            record(f"ops/scan/{label}/csr", t / len(us_s) * 1e6,
+                   f"edges_per_s={m / t / 1e3:.0f}k")
+            t = timeit(scan_pev, repeat=2)
+            record(f"ops/scan/{label}/per_edge_versioned", t / len(us_s) * 1e6,
+                   f"edges_per_s={m / t / 1e3:.0f}k (version checks)")

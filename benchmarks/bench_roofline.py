@@ -1,0 +1,31 @@
+"""Roofline table from the dry-run artifacts (results/dryrun.json)."""
+
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from .common import record
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun.json"
+
+
+def run(quick: bool = False) -> None:
+    if not RESULTS.exists():
+        record("roofline/missing", 0.0, "run `python -m repro.launch.dryrun` first")
+        return
+    data = json.loads(RESULTS.read_text())
+    for key, v in sorted(data.items()):
+        if v.get("status") != "ok":
+            record(f"roofline/{key}", 0.0, f"ERROR {v.get('error', '?')[:60]}")
+            continue
+        step = v["compute_s"], v["memory_s"], v["collective_s"]
+        mfu = v.get("mfu_bound")
+        record(
+            f"roofline/{key}",
+            max(step) * 1e6,  # roofline step-time bound
+            f"bound={v['bound']} compute_ms={step[0]*1e3:.2f} "
+            f"memory_ms={step[1]*1e3:.2f} coll_ms={step[2]*1e3:.2f} "
+            f"mfu_bound={mfu:.3f} mem_gb={v['memory']['peak_per_device_gb']}"
+            if mfu is not None else f"bound={v['bound']}",
+        )

@@ -1,0 +1,92 @@
+"""Paper Fig 8 + Fig 18: write throughput (insert, delete+reinsert update)
+and insertion with growing neighbor size."""
+
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core import RapidStore
+from repro.core.baselines import PerEdgeVersionedAdjacency, VecStore
+from repro.graph.generators import update_stream
+
+from .common import dataset, record, store_defaults, timeit
+
+
+def run(quick: bool = False) -> None:
+    name = "lj"
+    n, edges = dataset(name)
+    m = 50_000 if quick else 150_000
+    batch = edges[:m]
+
+    # -- insert throughput (Fig 8a) ------------------------------------------
+    def insert_rapidstore():
+        s = RapidStore(n, **store_defaults())
+        for i in range(0, m, 1024):
+            s.insert_edges(batch[i : i + 1024])
+        return s
+
+    def insert_pev():
+        s = PerEdgeVersionedAdjacency(n)
+        for i in range(0, m, 1024):
+            s.insert_edges(batch[i : i + 1024])
+        return s
+
+    def insert_vec():
+        s = VecStore(n)
+        for i in range(0, m, 1024):
+            s.insert_edges(batch[i : i + 1024])
+        return s
+
+    for label, fn in (("rapidstore", insert_rapidstore),
+                      ("per_edge_versioned", insert_pev),
+                      ("vec", insert_vec)):
+        t = timeit(fn, repeat=1)
+        record(f"write/insert/{label}", t / m * 1e6, f"meps={m / t / 1e6:.3f}")
+
+    # -- update churn (Fig 8b): delete + re-insert 20% x rounds ----------------
+    rounds = 1 if quick else 2
+    store = RapidStore.from_edges(n, batch, **store_defaults())
+    ops = update_stream(batch, rounds=rounds, frac=0.2, seed=1)
+    n_ops = sum(len(sel) for _, sel in ops)
+
+    def churn():
+        for op, sel in ops:
+            for i in range(0, len(sel), 1024):
+                blk = sel[i : i + 1024]
+                (store.delete_edges if op == "-" else store.insert_edges)(blk)
+
+    t = timeit(churn, repeat=1)
+    record("write/update/rapidstore", t / n_ops * 1e6, f"meps={n_ops / t / 1e6:.3f}")
+
+    pev = PerEdgeVersionedAdjacency.from_edges(n, batch)
+
+    def churn_pev():
+        for op, sel in ops:
+            for i in range(0, len(sel), 1024):
+                blk = sel[i : i + 1024]
+                (pev.delete_edges if op == "-" else pev.insert_edges)(blk)
+
+    t = timeit(churn_pev, repeat=1)
+    record("write/update/per_edge_versioned", t / n_ops * 1e6,
+           f"meps={n_ops / t / 1e6:.3f}")
+
+    # -- Fig 18: insertion with growing neighbor size -------------------------
+    for log_nbr in (2, 6, 10):
+        nn = 1 << log_nbr
+        n_v = 2048 // nn if not quick else 1024 // nn
+        n_v = max(n_v, 1)
+        es = np.stack([
+            np.repeat(np.arange(n_v, dtype=np.int64), nn),
+            np.tile(np.arange(nn, dtype=np.int64) + n_v, n_v),
+        ], 1)
+        rngl = np.random.default_rng(log_nbr)
+        es = es[rngl.permutation(len(es))]
+
+        def grow():
+            s = RapidStore(n_v + nn + 1, **store_defaults())
+            for i in range(0, len(es), 256):
+                s.insert_edges(es[i : i + 256])
+
+        t = timeit(grow, repeat=1)
+        record(f"write/grow_neighbors/N{nn}", t / len(es) * 1e6,
+               f"meps={len(es) / t / 1e6:.3f}")

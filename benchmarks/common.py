@@ -1,0 +1,64 @@
+"""Shared benchmark scaffolding: datasets, timing, reporting.
+
+Datasets are laptop-scale synthetic stand-ins matching the paper's skew
+regimes (Table 5): `lj` -> uniform-ish social, `g5` -> R-MAT power law,
+`ldbc` -> zipf-hotspot destinations.  Sizes chosen so the full suite runs
+in minutes on one CPU core; all comparisons are *relative* (system vs
+system on identical data), which is what the paper's tables report.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Callable, Dict
+
+import numpy as np
+
+from repro.graph.generators import rmat_edges, uniform_edges, zipf_edges
+
+ROWS = []
+
+
+def record(name: str, us_per_call: float, derived: str = "") -> None:
+    ROWS.append((name, us_per_call, derived))
+    print(f"{name},{us_per_call:.3f},{derived}", flush=True)
+
+
+def timeit(fn: Callable, repeat: int = 3, number: int = 1) -> float:
+    """Median wall time (seconds) of `number` calls, over `repeat` trials."""
+    best = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        for _ in range(number):
+            fn()
+        best.append((time.perf_counter() - t0) / number)
+    return float(np.median(best))
+
+
+_DATASETS: Dict[str, tuple] = {}
+
+
+def dataset(name: str):
+    """(n_vertices, edges) for a named synthetic stand-in (cached)."""
+    if name not in _DATASETS:
+        if name == "lj":
+            n, e = 20_000, uniform_edges(20_000, 300_000, seed=1)
+        elif name == "g5":
+            n, e = 1 << 14, rmat_edges(14, 400_000, seed=2)
+        elif name == "ldbc":
+            n, e = 20_000, zipf_edges(20_000, 300_000, seed=3)
+        else:
+            raise KeyError(name)
+        _DATASETS[name] = (n, e)
+    return _DATASETS[name]
+
+
+def store_defaults() -> dict:
+    from repro.configs.rapidstore import CONFIG
+
+    return dict(
+        partition_size=CONFIG.partition_size,
+        B=CONFIG.leaf_width,
+        high_threshold=CONFIG.high_degree_threshold,
+        tracer_k=CONFIG.tracer_k,
+    )

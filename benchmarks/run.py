@@ -1,0 +1,60 @@
+"""Benchmark harness — one module per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    python -m benchmarks.run            # full suite
+    python -m benchmarks.run --quick    # reduced sizes
+    python -m benchmarks.run --only write,ablation
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", default="", help="comma list: analytics,ops,write,"
+                                               "concurrent,ablation,kernels,roofline")
+    args = ap.parse_args()
+
+    from . import (
+        bench_ablation,
+        bench_analytics,
+        bench_concurrent,
+        bench_kernels,
+        bench_ops,
+        bench_roofline,
+        bench_write,
+    )
+
+    suites = {
+        "analytics": bench_analytics.run,  # paper Table 4
+        "ops": bench_ops.run,  # paper Tables 1-2, Fig 14
+        "write": bench_write.run,  # paper Figs 8, 18
+        "concurrent": bench_concurrent.run,  # paper Figs 2/3/9/10/16
+        "ablation": bench_ablation.run,  # paper Table 6, Figs 12-13
+        "kernels": bench_kernels.run,  # kernel micro-bench (XLA path)
+        "roofline": bench_roofline.run,  # dry-run roofline table
+    }
+    selected = [s.strip() for s in args.only.split(",") if s.strip()] or list(suites)
+
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for name in selected:
+        print(f"# --- {name} ---", flush=True)
+        try:
+            suites[name](quick=args.quick)
+        except Exception as e:  # noqa: BLE001 — a suite failure must not hide others
+            print(f"{name}/SUITE_ERROR,0,{type(e).__name__}: {e}", flush=True)
+            import traceback
+
+            traceback.print_exc(file=sys.stderr)
+    print(f"# total {time.time() - t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

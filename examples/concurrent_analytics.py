@@ -1,0 +1,83 @@
+"""Concurrent readers x writers — the paper's headline scenario (Figs 2/9).
+
+Four writer threads churn edges through MV2PL transactions while four
+reader threads run PageRank on lock-free snapshots.  At the end, every
+observed snapshot is replay-verified against the commit history —
+the serializability argument of paper §5.4, executed.
+"""
+
+import threading
+import time
+
+import numpy as np
+
+from repro.core import RapidStore
+from repro.core.analytics import pagerank_coo
+from repro.graph.generators import uniform_edges
+
+N = 2048
+initial = uniform_edges(N, 30_000, seed=1)
+store = RapidStore.from_edges(N, initial, partition_size=64, B=512, tracer_k=16)
+base_state = {(int(u), int(v)) for u, v in initial}  # version-0 contents
+
+history, observations, errors = [], [], []
+hlock = threading.Lock()
+stop = threading.Event()
+
+
+def writer(seed: int):
+    rng = np.random.default_rng(seed)
+    try:
+        while not stop.is_set():
+            e = rng.integers(0, N, size=(64, 2), dtype=np.int64)
+            e = e[e[:, 0] != e[:, 1]]
+            if rng.random() < 0.6:
+                t, op = store.insert_edges(e), "+"
+            else:
+                t, op = store.delete_edges(e), "-"
+            if t > 0:
+                with hlock:
+                    history.append((t, op, e.copy()))
+    except Exception as exc:  # pragma: no cover
+        errors.append(exc)
+
+
+def reader(seed: int):
+    try:
+        while not stop.is_set():
+            t0 = time.perf_counter()
+            with store.read_view() as view:
+                observations.append((view.ts, frozenset(view.edge_set())))
+                src, dst = view.to_coo()
+                pagerank_coo(src, dst, N, iters=3).block_until_ready()
+            _ = time.perf_counter() - t0
+    except Exception as exc:  # pragma: no cover
+        errors.append(exc)
+
+
+threads = [threading.Thread(target=writer, args=(i,)) for i in range(4)]
+threads += [threading.Thread(target=reader, args=(100 + i,)) for i in range(4)]
+for t in threads:
+    t.start()
+time.sleep(3.0)
+stop.set()
+for t in threads:
+    t.join()
+assert not errors, errors
+
+# replay-verify every snapshot against the committed history
+history.sort(key=lambda h: h[0])
+for obs_ts, obs_edges in observations:
+    state = set(base_state)  # replay from the bulk-loaded version 0
+    for t, op, e in history:
+        if t > obs_ts:
+            break
+        for u, v in e:
+            (state.add if op == "+" else state.discard)((int(u), int(v)))
+    assert state == set(obs_edges), f"snapshot at t={obs_ts} inconsistent!"
+
+print(f"{len(history)} commits, {len(observations)} lock-free snapshots, "
+      f"all replay-consistent; max chain length "
+      f"{int(store.chain_lengths().max())} (bound: tracer_k+1={16+1})")
+store.check_invariants()
+print("OK")

@@ -1,0 +1,109 @@
+"""End-to-end driver: train a GIN on a LIVE dynamic graph for ~300 steps.
+
+The paper's read-intensive workload as a training system: a writer thread
+streams edge updates into the RapidStore while the trainer samples
+neighbor-fanout minibatches from lock-free snapshots and takes jitted
+train steps with checkpoint/restart support.
+"""
+
+import argparse
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import manager as ckpt
+from repro.configs import registry
+from repro.core import RapidStore
+from repro.data.pipeline import GraphUpdateStream
+from repro.graph.generators import rmat_edges
+from repro.graph.sampler import NeighborSampler, pad_subgraph
+from repro.models import gnn as G
+from repro.optim import adamw
+from repro.train.step import make_gnn_train_step
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_gnn_ckpt")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    N = 4096
+    store = RapidStore.from_edges(N, rmat_edges(12, 80_000, seed=0),
+                                  partition_size=64, B=512, tracer_k=8)
+    cfg = registry.get_smoke_config("gin-tu")
+    d_feat = 16
+    rng = np.random.default_rng(0)
+    feat_table = rng.normal(size=(N, d_feat)).astype(np.float32)
+    label_table = (feat_table @ rng.normal(size=d_feat) > 0).astype(np.int32)
+
+    params = G.init_gnn(cfg, jax.random.PRNGKey(0), d_feat)
+    opt = adamw.init(params)
+    start = 0
+    if args.resume and ckpt.latest_step(args.ckpt_dir) is not None:
+        (params, opt), meta = ckpt.restore(args.ckpt_dir, (params, opt))
+        start = meta["step"] + 1
+        print(f"resumed from step {meta['step']}")
+
+    MAX_N, MAX_E = 2048, 4096
+    step_fn = jax.jit(make_gnn_train_step(cfg, n_nodes=MAX_N, lr=3e-3))
+    saver = ckpt.AsyncCheckpointer(args.ckpt_dir)
+
+    stop = threading.Event()
+
+    def writer():
+        stream = GraphUpdateStream(N, batch=128, seed=42)
+        i = 0
+        while not stop.is_set():
+            u = stream[i]
+            store.insert_edges(u["insert"])
+            store.delete_edges(u["delete"])
+            i += 1
+            time.sleep(0.002)
+
+    w = threading.Thread(target=writer, daemon=True)
+    w.start()
+
+    t0 = time.time()
+    losses = []
+    try:
+        for it in range(start, args.steps):
+            with store.read_view() as view:  # lock-free snapshot
+                sampler = NeighborSampler(view.scan, fanouts=[8, 4], seed=it)
+                seeds = np.random.default_rng(it).choice(N, 64, replace=False)
+                sub = sampler.sample(seeds.astype(np.int64))
+                nodes, src, dst, nmask, emask = pad_subgraph(sub, MAX_N, MAX_E)
+            feats = feat_table[nodes] * nmask[:, None]
+            labels = label_table[nodes]
+            lmask = np.zeros(MAX_N, np.float32)
+            lmask[: sub.n_seeds] = 1.0
+            params, opt, metrics = step_fn(params, opt, feats, src, dst,
+                                           emask, labels, lmask)
+            losses.append(float(metrics["loss"]))
+            if it % 25 == 0:
+                print(f"step {it:4d} loss {losses[-1]:.4f} "
+                      f"(graph @ t={store.clock.read_timestamp()})", flush=True)
+            if it and it % 100 == 0:
+                saver.save(it, (params, opt))
+    finally:
+        stop.set()
+        w.join(timeout=2)
+        saver.save(args.steps - 1, (params, opt))
+        saver.wait()
+    dt = time.time() - t0
+    k = max(len(losses) // 10, 1)
+    print(f"done: {len(losses)} steps in {dt:.1f}s "
+          f"({dt / max(len(losses),1) * 1e3:.0f} ms/step); "
+          f"loss {np.mean(losses[:k]):.4f} -> {np.mean(losses[-k:]):.4f} "
+          f"on a graph that changed {store.stats['commits']} times")
+    assert np.mean(losses[-k:]) < np.mean(losses[:k]), "did not learn"
+    store.check_invariants()
+    print("OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,94 @@
+"""Calibrate XLA-CPU SPMD compile time for a scanned transformer on a 16x16 fake mesh."""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+import time
+
+t0 = time.time()
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P, NamedSharding
+
+print(f"import+init: {time.time()-t0:.1f}s, devices={len(jax.devices())}")
+
+mesh = jax.make_mesh((16, 16), ("data", "model"))
+
+L, D, F, H, KV, V = 4, 6144, 32768, 48, 8, 131072
+HD = D // H
+B, S = 256, 4096
+
+
+def init_specs():
+    layer = {
+        "wq": jax.ShapeDtypeStruct((L, D, H * HD), jnp.bfloat16),
+        "wkv": jax.ShapeDtypeStruct((L, D, 2 * KV * HD), jnp.bfloat16),
+        "wo": jax.ShapeDtypeStruct((L, H * HD, D), jnp.bfloat16),
+        "w1": jax.ShapeDtypeStruct((L, D, F), jnp.bfloat16),
+        "w2": jax.ShapeDtypeStruct((L, F, D), jnp.bfloat16),
+    }
+    return {"emb": jax.ShapeDtypeStruct((V, D), jnp.bfloat16), "layers": layer}
+
+
+def p_specs():
+    layer = {
+        "wq": P(None, None, "model"),
+        "wkv": P(None, None, "model"),
+        "wo": P(None, "model", None),
+        "w1": P(None, None, "model"),
+        "w2": P(None, "model", None),
+    }
+    return {"emb": P("model", None), "layers": layer}
+
+
+def fwd(params, tokens):
+    x = params["emb"][tokens]  # gather
+
+    def body(x, lw):
+        q = jnp.einsum("bsd,dh->bsh", x, lw["wq"]).reshape(B, S, H, HD)
+        kv = jnp.einsum("bsd,dh->bsh", x, lw["wkv"]).reshape(B, S, 2 * KV, HD)
+        k, v = kv[:, :, :KV], kv[:, :, KV:]
+        k = jnp.repeat(k, H // KV, axis=2)
+        v = jnp.repeat(v, H // KV, axis=2)
+        s = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(HD).astype(jnp.bfloat16)
+        mask = jnp.tril(jnp.ones((S, S), bool))
+        s = jnp.where(mask, s, -1e9)
+        a = jax.nn.softmax(s.astype(jnp.float32), axis=-1).astype(jnp.bfloat16)
+        o = jnp.einsum("bhqk,bkhd->bqhd", a, v).reshape(B, S, H * HD)
+        x = x + jnp.einsum("bsh,hd->bsd", o, lw["wo"])
+        h = jnp.einsum("bsd,df->bsf", x, lw["w1"])
+        x = x + jnp.einsum("bsf,fd->bsd", jax.nn.gelu(h), lw["w2"])
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    logits = jnp.einsum("bsd,vd->bsv", x, params["emb"])
+    return jnp.mean(logits.astype(jnp.float32))
+
+
+def train_step(params, tokens):
+    loss, grads = jax.value_and_grad(fwd)(params, tokens)
+    return loss, grads
+
+
+with mesh:
+    in_sh = (
+        jax.tree.map(lambda s: NamedSharding(mesh, s), p_specs()),
+        NamedSharding(mesh, P("data", None)),
+    )
+    t0 = time.time()
+    lowered = jax.jit(train_step, in_shardings=in_sh).lower(
+        init_specs(), jax.ShapeDtypeStruct((B, S), jnp.int32)
+    )
+    print(f"lower: {time.time()-t0:.1f}s")
+    t0 = time.time()
+    compiled = lowered.compile()
+    print(f"compile: {time.time()-t0:.1f}s")
+    ma = compiled.memory_analysis()
+    print("mem:", ma)
+    ca = compiled.cost_analysis()
+    print("flops:", ca.get("flops", None) if hasattr(ca, "get") else ca)
+    txt = compiled.as_text()
+    import re
+
+    colls = re.findall(r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)", txt)
+    from collections import Counter
+
+    print("collectives:", Counter(colls))

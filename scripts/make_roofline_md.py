@@ -1,0 +1,40 @@
+"""Generate the EXPERIMENTS.md roofline table from results/dryrun.json."""
+
+import json
+import sys
+from pathlib import Path
+
+RESULTS = Path(__file__).resolve().parents[1] / "results" / "dryrun.json"
+
+
+def fmt(v, scale=1e3, nd=2):
+    return f"{v * scale:.{nd}f}"
+
+
+def main(mesh_filter=None):
+    data = json.loads(RESULTS.read_text())
+    rows = []
+    for key, v in data.items():
+        arch, shape, mesh = key.split("|")
+        if v.get("status") != "ok":
+            rows.append((arch, shape, mesh, "ERROR", "", "", "", "", "", ""))
+            continue
+        if mesh_filter and mesh != mesh_filter:
+            continue
+        rows.append((
+            arch, shape, mesh,
+            fmt(v["compute_s"]), fmt(v["memory_s"]), fmt(v["collective_s"]),
+            v["bound"],
+            f"{v['useful_flops_ratio']:.2f}" if v.get("useful_flops_ratio") else "-",
+            f"{v['mfu_bound']:.3f}" if v.get("mfu_bound") is not None else "-",
+            f"{v['memory']['peak_per_device_gb']:.1f}",
+        ))
+    rows.sort()
+    print("| arch | shape | mesh | compute ms | memory ms | collective ms | bound | useful/HLO | MFU bound | mem GB/dev |")
+    print("|---|---|---|---:|---:|---:|---|---:|---:|---:|")
+    for r in rows:
+        print("| " + " | ".join(str(x) for x in r) + " |")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1] if len(sys.argv) > 1 else None)

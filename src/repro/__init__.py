@@ -1,0 +1,15 @@
+"""repro: RapidStore (Hao et al., 2025) as a production-grade JAX framework.
+
+Layers
+------
+- ``repro.core``       — the paper's contribution: subgraph-centric MVCC dynamic
+  graph store (C-ART + clustered index + reader tracer + MV2PL + refcount GC).
+- ``repro.graph``      — graph substrate (segment ops, CSR, generators, samplers).
+- ``repro.kernels``    — Pallas TPU kernels for the paper's hot spots.
+- ``repro.models``     — assigned architectures (LM / GNN / recsys).
+- ``repro.optim/train/serve`` — training & serving substrate.
+- ``repro.dist/launch``       — meshes, sharding rules, multi-pod dry-run.
+- ``repro.roofline``   — compiled-HLO roofline analysis.
+"""
+
+__version__ = "0.1.0"

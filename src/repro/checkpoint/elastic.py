@@ -1,0 +1,46 @@
+"""Elastic resharding: move a checkpoint between mesh shapes.
+
+Checkpoints store full (unsharded) logical arrays, so elasticity reduces to
+re-placing them under a new mesh's NamedSharding — recover from 512 chips
+onto 256, or grow 256 -> 512, without rewriting files.  Divisibility is
+validated up front so a bad target mesh fails loudly before any transfer.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def validate_specs(tree: Any, spec_tree: Any, mesh) -> None:
+    """Check every sharded dim divides under ``mesh`` (raises ValueError)."""
+
+    def check(leaf, spec):
+        if not isinstance(spec, P):
+            return
+        for dim, names in zip(leaf.shape, tuple(spec)):
+            if names is None:
+                continue
+            names = names if isinstance(names, tuple) else (names,)
+            n = 1
+            for a in names:
+                n *= mesh.shape[a]
+            if dim % n != 0:
+                raise ValueError(
+                    f"dim {dim} not divisible by {n} ({names}) on mesh {mesh.shape}"
+                )
+
+    jax.tree.map(check, tree, spec_tree, is_leaf=lambda x: isinstance(x, P))
+
+
+def reshard(tree: Any, spec_tree: Any, mesh) -> Any:
+    """Place host arrays onto ``mesh`` with the given PartitionSpecs."""
+    validate_specs(tree, spec_tree, mesh)
+
+    def place(leaf, spec):
+        sh = NamedSharding(mesh, spec if isinstance(spec, P) else P())
+        return jax.device_put(leaf, sh)
+
+    return jax.tree.map(place, tree, spec_tree, is_leaf=lambda x: isinstance(x, P))

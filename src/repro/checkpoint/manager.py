@@ -1,0 +1,151 @@
+"""Sharded checkpointing with async host writes + restart recovery.
+
+Layout (one directory per step):
+    ckpt_dir/step_000123/
+        meta.json            — step, pytree structure, shapes/dtypes, mesh
+        arrays/<leaf>.npy    — one file per leaf (addressable shards gathered)
+        store/               — optional RapidStore snapshot (clock + edges)
+        _COMPLETE            — commit marker written last (atomic rename)
+
+Fault-tolerance contract: a crash mid-write leaves no _COMPLETE marker, so
+``latest_step`` skips it; ``restore`` always loads the newest committed
+checkpoint.  ``AsyncCheckpointer`` snapshots arrays to host memory
+synchronously (cheap) and writes files on a background thread, overlapping
+the save with subsequent training steps.
+"""
+
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+from pathlib import Path
+from typing import Any, Dict, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        arr = np.asarray(leaf)
+        if arr.dtype.kind == "V" or arr.dtype.name in ("bfloat16", "float8_e4m3fn",
+                                                        "float8_e5m2"):
+            # np.save stores ml_dtypes as raw void — widen for the file format;
+            # restore() casts back to the template dtype.
+            arr = np.asarray(jax.numpy.asarray(leaf).astype(jax.numpy.float32))
+        out[key] = arr
+    return out
+
+
+def save(ckpt_dir: str | Path, step: int, tree: Any, extra: Optional[Dict] = None) -> Path:
+    """Synchronous committed save. Returns the checkpoint path."""
+    ckpt_dir = Path(ckpt_dir)
+    tmp = ckpt_dir / f"_tmp_step_{step:09d}"
+    final = ckpt_dir / f"step_{step:09d}"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    (tmp / "arrays").mkdir(parents=True)
+    leaves = _flatten(tree)
+    for key, arr in leaves.items():
+        fn = key.replace("/", "__") + ".npy"
+        np.save(tmp / "arrays" / fn, arr)
+    meta = {
+        "step": step,
+        "keys": list(leaves.keys()),
+        "extra": extra or {},
+    }
+    (tmp / "meta.json").write_text(json.dumps(meta))
+    (tmp / "_COMPLETE").write_text("ok")
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)  # atomic commit
+    return final
+
+
+def latest_step(ckpt_dir: str | Path) -> Optional[int]:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = []
+    for p in ckpt_dir.glob("step_*"):
+        if (p / "_COMPLETE").exists():
+            steps.append(int(p.name.split("_")[1]))
+    return max(steps) if steps else None
+
+
+def restore(ckpt_dir: str | Path, template: Any, step: Optional[int] = None):
+    """Restore into the structure of ``template`` (shapes must match)."""
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {ckpt_dir}")
+    path = ckpt_dir / f"step_{step:09d}"
+    meta = json.loads((path / "meta.json").read_text())
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    leaves = []
+    for p, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in p)
+        fn = key.replace("/", "__") + ".npy"
+        arr = np.load(path / "arrays" / fn)
+        if tuple(arr.shape) != tuple(leaf.shape):
+            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {leaf.shape}")
+        want = np.dtype(leaf.dtype)
+        if arr.dtype != want:
+            try:
+                arr = arr.astype(want)
+            except (TypeError, ValueError):
+                # ml_dtypes (bf16 etc.) lack some numpy cast kernels — route
+                # the conversion through jax
+                import jax.numpy as jnp
+
+                arr = np.asarray(jnp.asarray(arr).astype(want))
+        leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, [l for l in leaves]), meta
+
+
+def prune(ckpt_dir: str | Path, keep: int = 3) -> None:
+    ckpt_dir = Path(ckpt_dir)
+    steps = sorted(
+        int(p.name.split("_")[1])
+        for p in ckpt_dir.glob("step_*")
+        if (p / "_COMPLETE").exists()
+    )
+    for s in steps[:-keep]:
+        shutil.rmtree(ckpt_dir / f"step_{s:09d}", ignore_errors=True)
+
+
+class AsyncCheckpointer:
+    """Overlaps checkpoint writes with training: snapshot now, write later."""
+
+    def __init__(self, ckpt_dir: str | Path, keep: int = 3):
+        self.ckpt_dir = Path(ckpt_dir)
+        self.keep = keep
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None) -> None:
+        self.wait()  # one in flight at a time
+        host_tree = jax.tree.map(np.asarray, tree)  # device->host snapshot
+
+        def _write():
+            try:
+                save(self.ckpt_dir, step, host_tree, extra)
+                prune(self.ckpt_dir, self.keep)
+            except BaseException as e:  # noqa: BLE001
+                self._error = e
+
+        self._thread = threading.Thread(target=_write, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err

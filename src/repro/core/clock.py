@@ -1,0 +1,63 @@
+"""Logical clocks for subgraph-centric concurrency control (paper §5.2).
+
+Two global timestamps coordinate queries:
+
+- ``t_w`` — the global *write* timestamp: incremented atomically by each
+  committing write query; the new value is the writer's commit timestamp.
+- ``t_r`` — the global *read* timestamp: the newest timestamp whose commit is
+  fully visible to readers.  A writer with commit timestamp ``t`` polls and
+  advances ``t_r`` from ``t - 1`` to ``t`` (the paper's conditional increment),
+  which enforces commit order and guarantees readers always observe a prefix
+  of the commit sequence.
+
+The initial graph ``G_0`` carries version 0, so a reader that starts before
+any write simply pins ``t = 0``.
+"""
+
+from __future__ import annotations
+
+import threading
+
+
+class LogicalClock:
+    """Paper-faithful (t_w, t_r) pair with atomic advance semantics."""
+
+    __slots__ = ("_tw", "_tr", "_lock", "_tr_cond")
+
+    def __init__(self) -> None:
+        self._tw = 0
+        self._tr = 0
+        self._lock = threading.Lock()
+        self._tr_cond = threading.Condition(self._lock)
+
+    # -- write side ---------------------------------------------------------
+    def next_commit_timestamp(self) -> int:
+        """Atomically increment ``t_w`` and return the new commit timestamp."""
+        with self._lock:
+            self._tw += 1
+            return self._tw
+
+    def publish(self, commit_ts: int) -> None:
+        """Advance ``t_r`` to ``commit_ts`` once every earlier commit published.
+
+        Implements the paper's *poll + conditional increment*: a writer with
+        commit timestamp ``t`` may only move ``t_r`` from ``t - 1`` to ``t``.
+        Out-of-order committers wait (bounded, in practice instantaneous)
+        until their predecessor published.
+        """
+        with self._tr_cond:
+            while self._tr != commit_ts - 1:
+                self._tr_cond.wait(timeout=1.0)
+            self._tr = commit_ts
+            self._tr_cond.notify_all()
+
+    # -- read side ----------------------------------------------------------
+    def read_timestamp(self) -> int:
+        """Current ``t_r`` — the snapshot timestamp a new reader pins."""
+        return self._tr  # benign race: monotone int read
+
+    def write_timestamp(self) -> int:
+        return self._tw
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return f"LogicalClock(t_w={self._tw}, t_r={self._tr})"

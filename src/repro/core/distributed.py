@@ -1,0 +1,105 @@
+"""Distributed analytics over sharded snapshot views (DESIGN.md §5).
+
+The store's subgraph partitioning is exactly a distribution unit: subgraph
+``sid`` (vertex block) maps to device ``sid % n_devices``, so the COO
+materialization of a snapshot shards by source-vertex block.  Analytics run
+under ``shard_map``: each device reduces its local edge partition into a
+full-width destination vector, then a single ``psum`` merges (vertex-cut
+pattern).  Frontier/rank vectors are replicated; edge arrays are sharded —
+the collective payload is O(n_vertices), independent of edge count.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+
+def shard_edges(
+    src: np.ndarray, dst: np.ndarray, n_shards: int
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Pad + round-robin edges into equal shards (stacked on axis 0).
+
+    Padding uses self-loops on vertex 0 with zero weight contribution —
+    masked out by passing ``valid``.
+    """
+    m = len(src)
+    per = -(-m // n_shards)
+    pad = per * n_shards - m
+    src_p = np.concatenate([src, np.zeros(pad, src.dtype)])
+    dst_p = np.concatenate([dst, np.zeros(pad, dst.dtype)])
+    valid = np.concatenate([np.ones(m, bool), np.zeros(pad, bool)])
+    return (
+        src_p.reshape(n_shards, per),
+        dst_p.reshape(n_shards, per),
+        valid.reshape(n_shards, per),
+    )
+
+
+def make_pagerank(mesh, axis: str, n: int, iters: int = 10, damping: float = 0.85):
+    """Build a shard_map PageRank over edge shards on ``axis``."""
+
+    def local_out_deg(src, valid):
+        return jax.ops.segment_sum(valid.astype(jnp.float32), src, num_segments=n)
+
+    @partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(P(axis, None), P(axis, None), P(axis, None)),
+        out_specs=P(),
+    )
+    def pr(src, dst, valid):
+        src, dst, valid = src[0], dst[0], valid[0]  # peel the shard axis
+        deg = jax.lax.psum(local_out_deg(src, valid), axis)
+        inv_deg = jnp.where(deg > 0, 1.0 / jnp.maximum(deg, 1.0), 0.0)
+        p0 = jnp.full((n,), 1.0 / n, jnp.float32)
+
+        def body(p, _):
+            contrib = jnp.where(valid, (p * inv_deg)[src], 0.0)
+            agg = jax.ops.segment_sum(contrib, dst, num_segments=n)
+            agg = jax.lax.psum(agg, axis)  # merge vertex-cut partials
+            dangling = jnp.sum(jnp.where(deg == 0, p, 0.0))
+            return (1.0 - damping) / n + damping * (agg + dangling / n), None
+
+        p, _ = jax.lax.scan(body, p0, None, length=iters)
+        return p
+
+    return pr
+
+
+def make_bfs(mesh, axis: str, n: int):
+    """Level-synchronous BFS with replicated frontier, sharded edges."""
+
+    @partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(P(axis, None), P(axis, None), P(axis, None), P()),
+        out_specs=P(),
+    )
+    def bfs(src, dst, valid, root):
+        src, dst, valid = src[0], dst[0], valid[0]
+        level = jnp.full((n,), -1, jnp.int32).at[root].set(0)
+        frontier = jnp.zeros((n,), bool).at[root].set(True)
+
+        def cond(state):
+            _, frontier, _ = state
+            return jnp.any(frontier)
+
+        def body(state):
+            level, frontier, d = state
+            hit = jax.ops.segment_max(
+                (frontier[src] & valid).astype(jnp.int32), dst, num_segments=n
+            )
+            hit = jax.lax.pmax(hit, axis)
+            new = (hit > 0) & (level < 0)
+            return jnp.where(new, d + 1, level), new, d + 1
+
+        level, _, _ = jax.lax.while_loop(cond, body, (level, frontier, jnp.int32(0)))
+        return level
+
+    return bfs

@@ -1,0 +1,148 @@
+"""Leaf memory pool with reference-counting GC (paper §4 "memory pool", §6.4).
+
+All C-ART leaves of every subgraph version live in one pooled ``[capacity, B]``
+int32 matrix.  A *leaf row* holds up to ``B`` sorted neighbor IDs, padded with
+``SENTINEL``.  Rows are immutable once published: copy-on-write allocates a
+fresh row, writes it fully, and only then links it into a new snapshot's
+directory — readers holding older directories never observe the write.
+
+Reference counting (paper §6.4): each row's refcount is the number of snapshot
+directories referencing it.  The COW path increments the new row's count;
+when concurrency control reclaims a snapshot version, its directory decrements
+every referenced row and zero-count rows return to the free list.
+
+This pooled layout is also exactly the device *scan format*: a snapshot view
+is a gather of directory-selected rows, which feeds the Pallas scan/intersect
+kernels as dense ``[n, B]`` tiles (the TPU analogue of the paper's AVX2 leaf
+scans).
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import List
+
+import numpy as np
+
+SENTINEL = np.int32(np.iinfo(np.int32).max)
+
+
+class LeafPool:
+    """Refcounted pool of B-wide sorted leaf rows."""
+
+    def __init__(self, B: int = 512, initial_capacity: int = 64) -> None:
+        if B < 4:
+            raise ValueError(f"leaf width B must be >= 4, got {B}")
+        self.B = int(B)
+        cap = max(4, int(initial_capacity))
+        self.data = np.full((cap, self.B), SENTINEL, dtype=np.int32)
+        self.length = np.zeros(cap, dtype=np.int32)
+        self.refcount = np.zeros(cap, dtype=np.int32)
+        self._free: List[int] = list(range(cap - 1, -1, -1))
+        self._lock = threading.Lock()
+        self.n_allocs = 0  # statistics
+        self.n_frees = 0
+
+    # -- capacity -------------------------------------------------------------
+    @property
+    def capacity(self) -> int:
+        return self.data.shape[0]
+
+    def _grow(self) -> None:
+        old_cap = self.capacity
+        new_cap = old_cap * 2
+        data = np.full((new_cap, self.B), SENTINEL, dtype=np.int32)
+        data[:old_cap] = self.data
+        self.data = data
+        self.length = np.concatenate([self.length, np.zeros(old_cap, np.int32)])
+        self.refcount = np.concatenate([self.refcount, np.zeros(old_cap, np.int32)])
+        self._free.extend(range(new_cap - 1, old_cap - 1, -1))
+
+    # -- allocation -------------------------------------------------------------
+    def alloc(self, values: np.ndarray) -> int:
+        """Allocate a row holding the sorted ``values`` (len <= B), refcount 1."""
+        n = len(values)
+        if n > self.B:
+            raise ValueError(f"leaf overflow: {n} > B={self.B}")
+        with self._lock:
+            if not self._free:
+                self._grow()
+            row = self._free.pop()
+            self.n_allocs += 1
+        self.data[row, :n] = values
+        self.data[row, n:] = SENTINEL
+        self.length[row] = n
+        self.refcount[row] = 1
+        return row
+
+    def incref(self, row: int) -> None:
+        with self._lock:
+            self.refcount[row] += 1
+
+    def incref_many(self, rows: np.ndarray) -> None:
+        with self._lock:
+            np.add.at(self.refcount, rows, 1)
+
+    def decref(self, row: int) -> None:
+        with self._lock:
+            self.refcount[row] -= 1
+            if self.refcount[row] == 0:
+                self.length[row] = 0
+                self._free.append(int(row))
+                self.n_frees += 1
+            elif self.refcount[row] < 0:  # pragma: no cover - invariant guard
+                raise RuntimeError(f"negative refcount on row {row}")
+
+    def decref_many(self, rows: np.ndarray) -> None:
+        with self._lock:
+            np.add.at(self.refcount, rows, -1)
+            dead = rows[self.refcount[rows] == 0]
+            if len(dead):
+                # dedupe (a directory never references a row twice, but be safe)
+                dead = np.unique(dead)
+                self.length[dead] = 0
+                self._free.extend(int(r) for r in dead)
+                self.n_frees += len(dead)
+            if np.any(self.refcount[rows] < 0):  # pragma: no cover
+                raise RuntimeError("negative refcount in decref_many")
+
+    # -- reads ---------------------------------------------------------------
+    def row_values(self, row: int) -> np.ndarray:
+        """The live (unpadded) values of a row — zero-copy slice."""
+        return self.data[row, : self.length[row]]
+
+    # -- invariants / stats -----------------------------------------------------
+    def n_live_rows(self) -> int:
+        return self.capacity - len(self._free)
+
+    def live_rows(self) -> np.ndarray:
+        mask = np.ones(self.capacity, bool)
+        mask[np.asarray(self._free, dtype=np.int64)] = False
+        return np.nonzero(mask)[0]
+
+    def fill_ratio(self) -> float:
+        """Occupied fraction of live leaf rows (paper Table 3)."""
+        live = self.live_rows()
+        if len(live) == 0:
+            return 1.0
+        return float(self.length[live].sum()) / (len(live) * self.B)
+
+    def memory_bytes(self) -> int:
+        return self.data.nbytes + self.length.nbytes + self.refcount.nbytes
+
+    def check_invariants(self) -> None:
+        """Free list and refcounted rows must partition the pool."""
+        free = set(self._free)
+        if len(free) != len(self._free):
+            raise AssertionError("duplicate rows in free list")
+        for row in range(self.capacity):
+            rc = self.refcount[row]
+            if row in free:
+                if rc != 0:
+                    raise AssertionError(f"free row {row} has refcount {rc}")
+            else:
+                if rc <= 0:
+                    raise AssertionError(f"live row {row} has refcount {rc}")
+                vals = self.row_values(row)
+                if len(vals) and not np.all(np.diff(vals.astype(np.int64)) > 0):
+                    raise AssertionError(f"row {row} not strictly sorted")

@@ -1,0 +1,159 @@
+"""Read-query snapshot views (paper §5.2.2).
+
+A :class:`SnapshotView` is the reader workspace: one resolved subgraph
+snapshot pointer per subgraph, pinned at the reader's start timestamp.  All
+read operations (Search/Scan/degree) route through it with zero version
+checks — the decoupling the paper's design buys.
+
+Materializers produce device-ready layouts:
+
+- ``to_coo`` / ``to_csr`` — global COO/CSR arrays for jitted analytics;
+- ``to_leaf_blocks`` — the padded ``[n_blocks, B]`` leaf-tile stream consumed
+  by the Pallas scan/intersect/spmm kernels (the TPU analogue of the paper's
+  AVX2 leaf scans).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Tuple
+
+import numpy as np
+
+from . import cart
+from .subgraph import SubgraphSnapshot
+
+
+@dataclass(frozen=True)
+class CSRView:
+    offsets: np.ndarray  # int64 [n_vertices + 1]
+    indices: np.ndarray  # int32 [n_edges]
+
+    @property
+    def n_vertices(self) -> int:
+        return len(self.offsets) - 1
+
+    @property
+    def n_edges(self) -> int:
+        return len(self.indices)
+
+    def neighbors(self, u: int) -> np.ndarray:
+        return self.indices[self.offsets[u] : self.offsets[u + 1]]
+
+
+@dataclass(frozen=True)
+class LeafBlockView:
+    """Padded leaf-tile stream: the device scan format.
+
+    ``rows[i]`` holds up to B sorted neighbor ids of vertex ``src[i]``,
+    padded with SENTINEL; ``length[i]`` is the live count.  High-degree
+    vertices contribute one entry per C-ART leaf; low-degree vertices'
+    clustered-index segments are chunked to the same width, so the whole
+    graph scan is a single dense [n, B] pass.
+    """
+
+    src: np.ndarray  # int32 [n_blocks]
+    rows: np.ndarray  # int32 [n_blocks, B]
+    length: np.ndarray  # int32 [n_blocks]
+
+
+class SnapshotView:
+    """Reader workspace over resolved per-subgraph snapshots."""
+
+    __slots__ = ("ts", "p", "snaps", "n_vertices")
+
+    def __init__(self, ts: int, p: int, snaps: Tuple[SubgraphSnapshot, ...], n_vertices: int):
+        self.ts = ts
+        self.p = p
+        self.snaps = snaps
+        self.n_vertices = n_vertices
+
+    # -- point reads ------------------------------------------------------------
+    def _local(self, u: int) -> Tuple[SubgraphSnapshot, int]:
+        return self.snaps[u // self.p], u % self.p
+
+    def search(self, u: int, v: int) -> bool:
+        s, lu = self._local(u)
+        return s.search(lu, int(v))
+
+    def scan(self, u: int) -> np.ndarray:
+        s, lu = self._local(u)
+        return s.scan(lu)
+
+    def degree(self, u: int) -> int:
+        s, lu = self._local(u)
+        return s.degree(lu)
+
+    def degrees(self) -> np.ndarray:
+        out = np.concatenate([s.degrees() for s in self.snaps])
+        return out[: self.n_vertices]
+
+    @property
+    def n_edges(self) -> int:
+        return sum(s.n_edges for s in self.snaps)
+
+    # -- materialization -----------------------------------------------------------
+    def to_coo(self) -> Tuple[np.ndarray, np.ndarray]:
+        srcs, dsts = [], []
+        for s in self.snaps:
+            lu, vs = s.to_coo()
+            srcs.append(lu + s.sid * self.p)
+            dsts.append(vs)
+        src = np.concatenate(srcs).astype(np.int64)
+        dst = np.concatenate(dsts).astype(np.int32)
+        return src, dst
+
+    def to_csr(self) -> CSRView:
+        src, dst = self.to_coo()
+        degs = np.bincount(src, minlength=self.n_vertices)
+        offsets = np.zeros(self.n_vertices + 1, np.int64)
+        np.cumsum(degs, out=offsets[1:])
+        # to_coo emits per-subgraph (u sorted, v sorted) — already CSR order.
+        return CSRView(offsets, dst)
+
+    def to_leaf_blocks(self) -> LeafBlockView:
+        from .leaf_pool import SENTINEL
+
+        srcs, rows, lens = [], [], []
+        for s in self.snaps:
+            base = s.sid * self.p
+            B = s.pool.B
+            # clustered index: chunk each segment to width B
+            for lu in range(s.p):
+                if lu in s.dirs:
+                    continue
+                seg = s.scan(lu)
+                if len(seg) == 0:
+                    continue
+                for o in range(0, len(seg), B):
+                    chunk = seg[o : o + B]
+                    padded = np.full(B, SENTINEL, np.int32)
+                    padded[: len(chunk)] = chunk
+                    srcs.append(base + lu)
+                    rows.append(padded)
+                    lens.append(len(chunk))
+            # C-ART leaves are already the right shape — gather pool rows
+            for lu, d in sorted(s.dirs.items()):
+                data = s.pool.data[d.leaf_ids]  # [n_leaves, B]
+                ln = s.pool.length[d.leaf_ids]
+                keep = ln > 0
+                for r, n in zip(data[keep], ln[keep]):
+                    srcs.append(base + lu)
+                    rows.append(r)
+                    lens.append(int(n))
+        if not rows:
+            B = self.snaps[0].pool.B if self.snaps else 8
+            return LeafBlockView(
+                np.zeros(0, np.int32), np.zeros((0, B), np.int32), np.zeros(0, np.int32)
+            )
+        return LeafBlockView(
+            np.asarray(srcs, np.int32),
+            np.stack(rows).astype(np.int32),
+            np.asarray(lens, np.int32),
+        )
+
+    # -- verification ------------------------------------------------------------
+    def edge_set(self) -> set:
+        """Python set of (u, v) — oracle comparisons in tests."""
+        src, dst = self.to_coo()
+        return set(zip(src.tolist(), dst.tolist()))

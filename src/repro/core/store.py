@@ -1,0 +1,247 @@
+"""RapidStore: the multi-version dynamic graph store (paper §4-§6).
+
+Composition:
+
+- a :class:`~repro.core.clock.LogicalClock` coordinating (t_w, t_r);
+- a :class:`~repro.core.reader_tracer.ReaderTracer` with k slots;
+- one :class:`~repro.core.version_chain.VersionChain` per subgraph (vertex
+  blocks of ``|P|`` contiguous ids), each version a copy-on-write
+  :class:`~repro.core.subgraph.SubgraphSnapshot` over a shared
+  :class:`~repro.core.leaf_pool.LeafPool`;
+- per-subgraph writer locks (MV2PL, acquired in subgraph-id order).
+
+Readers never lock: ``read_view()`` registers in the tracer, resolves one
+snapshot per subgraph at the pinned timestamp, and hands back an immutable
+:class:`~repro.core.snapshot.SnapshotView`.
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from dataclasses import dataclass
+from typing import Dict, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+from .clock import LogicalClock
+from .leaf_pool import LeafPool
+from .reader_tracer import ReaderTracer
+from .snapshot import SnapshotView
+from .subgraph import SubgraphSnapshot, build_subgraph
+from .version_chain import VersionChain
+from . import txn as _txn
+
+
+@dataclass
+class ReadHandle:
+    slot: int
+    ts: int
+    view: SnapshotView
+
+
+class RapidStore:
+    """In-memory dynamic graph store for concurrent queries."""
+
+    def __init__(
+        self,
+        n_vertices: int,
+        partition_size: int = 64,
+        B: int = 512,
+        high_threshold: Optional[int] = None,
+        tracer_k: int = 32,
+        initial_pool_rows: int = 64,
+    ) -> None:
+        if n_vertices <= 0:
+            raise ValueError("need at least one vertex")
+        self.p = int(partition_size)
+        self.B = int(B)
+        self.high_threshold = int(high_threshold if high_threshold is not None else B // 2)
+        self.n_vertices = int(n_vertices)
+        self.n_subgraphs = -(-self.n_vertices // self.p)
+        self.pool = LeafPool(B=self.B, initial_capacity=initial_pool_rows)
+        self.clock = LogicalClock()
+        self.tracer = ReaderTracer(k=tracer_k)
+        self.chains: List[VersionChain] = []
+        for sid in range(self.n_subgraphs):
+            empty = build_subgraph(
+                sid, self.p, self.pool, np.empty(0, np.int64), np.empty(0, np.int32),
+                high_threshold=self.high_threshold,
+            )
+            self.chains.append(VersionChain(sid, empty))
+        self.locks = [threading.Lock() for _ in range(self.n_subgraphs)]
+        # vertex lifecycle (paper §6.5): reusable-id queue + atomic grow
+        self._vid_lock = threading.Lock()
+        self._free_vids: List[int] = []
+        self.stats: Dict[str, int] = {"commits": 0, "versions_reclaimed": 0}
+
+    # -- construction -------------------------------------------------------------
+    @classmethod
+    def from_edges(
+        cls,
+        n_vertices: int,
+        edges: np.ndarray,
+        undirected: bool = False,
+        **kw,
+    ) -> "RapidStore":
+        """Bulk-load version 0 from an ``[m, 2]`` edge array."""
+        edges = np.asarray(edges)
+        if undirected and len(edges):
+            edges = np.concatenate([edges, edges[:, ::-1]])
+        store = cls.__new__(cls)
+        store.p = int(kw.get("partition_size", 64))
+        store.B = int(kw.get("B", 512))
+        ht = kw.get("high_threshold")
+        store.high_threshold = int(ht if ht is not None else store.B // 2)
+        store.n_vertices = int(n_vertices)
+        store.n_subgraphs = -(-store.n_vertices // store.p)
+        est_rows = max(64, len(edges) // max(1, store.B) * 2)
+        store.pool = LeafPool(B=store.B, initial_capacity=est_rows)
+        store.clock = LogicalClock()
+        store.tracer = ReaderTracer(k=int(kw.get("tracer_k", 32)))
+        store.locks = [threading.Lock() for _ in range(store.n_subgraphs)]
+        store._vid_lock = threading.Lock()
+        store._free_vids = []
+        store.stats = {"commits": 0, "versions_reclaimed": 0}
+
+        store.chains = []
+        if len(edges):
+            u = edges[:, 0].astype(np.int64)
+            v = edges[:, 1].astype(np.int32)
+            if u.max() >= n_vertices or v.max() >= n_vertices:
+                raise ValueError("vertex id out of range")
+            # de-dup (u,v) pairs, sort by (u,v): clustered bulk order
+            key = (u << 32) | v.astype(np.int64)
+            key = np.unique(key)
+            u = (key >> 32).astype(np.int64)
+            v = (key & 0xFFFFFFFF).astype(np.int32)
+            sid_of = u // store.p
+            bounds = np.searchsorted(sid_of, np.arange(store.n_subgraphs + 1))
+        for sid in range(store.n_subgraphs):
+            if len(edges):
+                lo, hi = bounds[sid], bounds[sid + 1]
+                lu = u[lo:hi] - sid * store.p
+                lv = v[lo:hi]
+            else:
+                lu = np.empty(0, np.int64)
+                lv = np.empty(0, np.int32)
+            snap = build_subgraph(
+                sid, store.p, store.pool, lu, lv, high_threshold=store.high_threshold
+            )
+            store.chains.append(VersionChain(sid, snap))
+        return store
+
+    # -- write API -------------------------------------------------------------
+    def insert_edges(self, edges: np.ndarray) -> int:
+        """Insert a batch of edges in ONE write transaction. Returns commit ts."""
+        edges = np.atleast_2d(np.asarray(edges))
+        return _txn.execute_write(self, ins=edges, dels=np.empty((0, 2), np.int64))
+
+    def delete_edges(self, edges: np.ndarray) -> int:
+        edges = np.atleast_2d(np.asarray(edges))
+        return _txn.execute_write(self, ins=np.empty((0, 2), np.int64), dels=edges)
+
+    def apply(self, ins: np.ndarray, dels: np.ndarray) -> int:
+        """Mixed insert+delete transaction."""
+        return _txn.execute_write(
+            self,
+            ins=np.atleast_2d(np.asarray(ins)) if len(ins) else np.empty((0, 2), np.int64),
+            dels=np.atleast_2d(np.asarray(dels)) if len(dels) else np.empty((0, 2), np.int64),
+        )
+
+    def insert_edge(self, u: int, v: int) -> int:
+        return self.insert_edges(np.array([[u, v]], np.int64))
+
+    def delete_edge(self, u: int, v: int) -> int:
+        return self.delete_edges(np.array([[u, v]], np.int64))
+
+    # -- vertex lifecycle (paper §6.5) ------------------------------------------
+    def insert_vertex(self) -> int:
+        """Add a vertex: reuse a freed id or grow the id space."""
+        with self._vid_lock:
+            if self._free_vids:
+                vid = self._free_vids.pop()
+            else:
+                vid = self.n_vertices
+                self.n_vertices += 1
+                if vid // self.p >= self.n_subgraphs:
+                    sid = self.n_subgraphs
+                    empty = build_subgraph(
+                        sid, self.p, self.pool, np.empty(0, np.int64),
+                        np.empty(0, np.int32), high_threshold=self.high_threshold,
+                    )
+                    self.chains.append(VersionChain(sid, empty))
+                    self.locks.append(threading.Lock())
+                    self.n_subgraphs += 1
+        _txn.execute_write(
+            self,
+            ins=np.empty((0, 2), np.int64),
+            dels=np.empty((0, 2), np.int64),
+            vset={vid: True},
+        )
+        return vid
+
+    def delete_vertex(self, u: int) -> int:
+        """Delete vertex u: remove incident out-edges, clear flag, recycle id.
+
+        In-edges e(w, u) must be deleted by the caller if tracked (directed
+        store semantics; undirected graphs store both directions anyway).
+        """
+        with self.read_view() as view:
+            nbrs = view.scan(u).copy()
+        dels = np.stack([np.full(len(nbrs), u, np.int64), nbrs.astype(np.int64)], 1) \
+            if len(nbrs) else np.empty((0, 2), np.int64)
+        ts = _txn.execute_write(
+            self, ins=np.empty((0, 2), np.int64), dels=dels, vset={u: False}
+        )
+        with self._vid_lock:
+            self._free_vids.append(int(u))
+        return ts
+
+    # -- read API ---------------------------------------------------------------
+    def begin_read(self) -> ReadHandle:
+        """Register a read query and build its snapshot view (paper §5.2.2)."""
+        t = self.clock.read_timestamp()
+        slot = self.tracer.register(t)
+        # Close the register/GC race: re-read t_r after publishing our slot;
+        # if a writer advanced it meanwhile, bump our pin monotonically.
+        t2 = self.clock.read_timestamp()
+        if t2 != t:
+            self.tracer.update(slot, t2)
+            t = t2
+        snaps = tuple(chain.resolve(t) for chain in self.chains)
+        return ReadHandle(slot=slot, ts=t, view=SnapshotView(t, self.p, snaps, self.n_vertices))
+
+    def end_read(self, handle: ReadHandle) -> None:
+        self.tracer.unregister(handle.slot)
+
+    @contextmanager
+    def read_view(self) -> Iterator[SnapshotView]:
+        h = self.begin_read()
+        try:
+            yield h.view
+        finally:
+            self.end_read(h)
+
+    # -- introspection ------------------------------------------------------------
+    def memory_bytes(self) -> int:
+        total = self.pool.memory_bytes()
+        for chain in self.chains:
+            for snap in chain._versions:
+                total += snap.ci.values.nbytes + snap.ci.offsets.nbytes
+                total += snap.active.nbytes
+                for d in snap.dirs.values():
+                    total += d.leaf_ids.nbytes + d.leaf_min.nbytes
+        return total
+
+    def fill_ratio(self) -> float:
+        return self.pool.fill_ratio()
+
+    def chain_lengths(self) -> np.ndarray:
+        return np.array([len(c) for c in self.chains])
+
+    def check_invariants(self) -> None:
+        self.pool.check_invariants()
+        for chain in self.chains:
+            for snap in chain._versions:
+                snap.check_invariants()

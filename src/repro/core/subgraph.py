@@ -1,0 +1,265 @@
+"""Subgraph snapshots (paper §5.1, §6.1).
+
+A subgraph ``S`` owns the contiguous vertex block ``[sid*|P|, (sid+1)*|P|)``
+and every out-edge of those vertices.  A *snapshot* is one immutable version:
+
+- vertex index: per-local-vertex active flag / storage kind,
+- clustered index: packed low-degree neighbor sets (paper §6.3),
+- C-ART directories: per high-degree vertex (paper §6.2), leaves pooled.
+
+``apply_updates`` is the copy-on-write path (paper Fig. 5): it returns a new
+snapshot sharing every untouched leaf row / directory with its predecessor and
+never mutates published state — concurrent readers are unaffected.
+
+Reference ownership: every snapshot version owns one pool reference per leaf
+row reachable from its directories.  ``apply_updates`` settles the accounting
+(new rows are born owned; shared rows gain a reference); ``release`` drops a
+reclaimed version's references wholesale (writer-driven GC, paper §5.3/6.4).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import numpy as np
+
+from . import cart, clustered_index as cidx
+from .cart import CartDir
+from .clustered_index import ClusteredIndex
+from .leaf_pool import LeafPool
+
+
+@dataclass
+class SubgraphSnapshot:
+    sid: int
+    ts: int  # commit timestamp (version); stamped by the committing writer
+    p: int  # |P|
+    pool: LeafPool
+    active: np.ndarray  # bool [P] — vertex flag bit (paper §6.5)
+    ci: ClusteredIndex
+    dirs: Dict[int, CartDir] = field(default_factory=dict)  # local_u -> C-ART
+    high_threshold: int = 256
+
+    # -- degree / kind ---------------------------------------------------------
+    def degree(self, lu: int) -> int:
+        d = self.dirs.get(lu)
+        if d is not None:
+            return cart.degree(self.pool, d)
+        return cidx.degree(self.ci, lu)
+
+    def degrees(self) -> np.ndarray:
+        out = cidx.degrees(self.ci).astype(np.int64)
+        for lu, d in self.dirs.items():
+            out[lu] = cart.degree(self.pool, d)
+        return out
+
+    @property
+    def n_edges(self) -> int:
+        n = self.ci.n_edges
+        for d in self.dirs.values():
+            n += cart.degree(self.pool, d)
+        return n
+
+    # -- reads -----------------------------------------------------------------
+    def search(self, lu: int, v: int) -> bool:
+        d = self.dirs.get(lu)
+        if d is not None:
+            return cart.search(self.pool, d, v)
+        return cidx.search(self.ci, lu, v)
+
+    def scan(self, lu: int) -> np.ndarray:
+        d = self.dirs.get(lu)
+        if d is not None:
+            return cart.scan(self.pool, d)
+        return cidx.neighbors(self.ci, lu)
+
+    # -- copy-on-write update ----------------------------------------------------
+    def apply_updates(
+        self,
+        ins_u: np.ndarray,
+        ins_v: np.ndarray,
+        del_u: np.ndarray,
+        del_v: np.ndarray,
+        vset_active: Optional[Dict[int, bool]] = None,
+    ) -> Optional["SubgraphSnapshot"]:
+        """Return a new (ts=-1, unstamped) snapshot with the edits applied.
+
+        ``*_u`` are LOCAL vertex ids. Returns None when every edit is a no-op
+        (no version is linked — writers skip empty commits per subgraph).
+        Handles CI <-> C-ART promotion/demotion around ``high_threshold``.
+        """
+        ins_u = np.asarray(ins_u, np.int64)
+        ins_v = np.asarray(ins_v, np.int32)
+        del_u = np.asarray(del_u, np.int64)
+        del_v = np.asarray(del_v, np.int32)
+
+        new_dirs = dict(self.dirs)
+        changed = False
+
+        # --- C-ART-resident vertices: route their edits to the tree -----------
+        dir_keys = np.fromiter(self.dirs.keys(), np.int64, len(self.dirs))
+        cart_ins = np.isin(ins_u, dir_keys) if len(dir_keys) else np.zeros(len(ins_u), bool)
+        cart_del = np.isin(del_u, dir_keys) if len(dir_keys) else np.zeros(len(del_u), bool)
+        for lu in np.unique(ins_u[cart_ins]):
+            d0 = new_dirs[int(lu)]
+            d1 = cart.insert_many(self.pool, d0, ins_v[ins_u == lu])
+            if d1 is not d0:
+                new_dirs[int(lu)] = d1
+                changed = True
+        for lu in np.unique(del_u[cart_del]):
+            base = new_dirs[int(lu)]
+            d1 = cart.delete_many(self.pool, base, del_v[del_u == lu])
+            if d1 is not base:
+                orig = self.dirs.get(int(lu))
+                if base is not orig:
+                    # `base` was built earlier in this txn (insert+delete on
+                    # the same vertex): discard rows only it references —
+                    # keep rows carried forward into d1 or owned by `orig`.
+                    keep = np.union1d(orig.leaf_ids, d1.leaf_ids)
+                    drop = np.setdiff1d(base.leaf_ids, keep)
+                    if len(drop):
+                        self.pool.decref_many(drop)
+                new_dirs[int(lu)] = d1
+                changed = True
+
+        # --- CI-resident vertices ---------------------------------------------
+        ci_ins_u, ci_ins_v = ins_u[~cart_ins], ins_v[~cart_ins]
+        ci_del_u, ci_del_v = del_u[~cart_del], del_v[~cart_del]
+        new_ci = self.ci
+        if len(ci_ins_u) or len(ci_del_u):
+            cand = cidx.apply_edits(self.ci, ci_ins_u, ci_ins_v, ci_del_u, ci_del_v)
+            if np.array_equal(cand.values, self.ci.values) and np.array_equal(
+                cand.offsets, self.ci.offsets
+            ):
+                new_ci = self.ci  # all edits were no-ops
+            else:
+                new_ci = cand
+                changed = True
+
+        # --- promotion: CI vertex crossed the high-degree threshold ------------
+        if new_ci is not self.ci and len(ci_ins_u):
+            for lu in np.unique(ci_ins_u):
+                lu = int(lu)
+                if lu in new_dirs:
+                    continue
+                if cidx.degree(new_ci, lu) > self.high_threshold:
+                    vs = cidx.neighbors(new_ci, lu)
+                    new_dirs[lu] = cart.build(self.pool, vs)
+                    new_ci = cidx.extract(new_ci, lu)
+                    changed = True
+
+        # --- demotion: C-ART vertex fell below half the threshold --------------
+        if len(del_u):
+            for lu in np.unique(del_u):
+                lu = int(lu)
+                d = new_dirs.get(lu)
+                if d is None:
+                    continue
+                deg = cart.degree(self.pool, d)
+                if deg < self.high_threshold // 2:
+                    vs = cart.scan(self.pool, d)
+                    base = self.dirs.get(lu)
+                    if base is not None and d is not base:
+                        cart.free_exclusive(self.pool, d, base)
+                    elif base is None:
+                        cart.free(self.pool, d)  # born this txn via promotion
+                    del new_dirs[lu]
+                    new_ci = cidx.inject(new_ci, lu, vs)
+                    changed = True
+
+        new_active = self.active
+        if vset_active:
+            new_active = self.active.copy()
+            for lu, flag in vset_active.items():
+                if new_active[lu] != flag:
+                    new_active[lu] = flag
+                    changed = True
+
+        if not changed:
+            return None
+
+        snap = SubgraphSnapshot(
+            sid=self.sid,
+            ts=-1,
+            p=self.p,
+            pool=self.pool,
+            active=new_active,
+            ci=new_ci,
+            dirs=new_dirs,
+            high_threshold=self.high_threshold,
+        )
+        # Settle reference ownership for the new version: shared rows gain a
+        # reference; brand-new rows were born owned (refcount 1).
+        for lu, d1 in new_dirs.items():
+            d0 = self.dirs.get(lu)
+            if d0 is None:
+                continue  # promotion: all rows new
+            if d1 is d0:
+                cart.incref(self.pool, d1)  # directory shared wholesale
+            else:
+                cart.incref_shared(self.pool, d1, d0)
+        return snap
+
+    def release(self) -> None:
+        """Drop this version's leaf references (GC of a reclaimed version)."""
+        for d in self.dirs.values():
+            cart.free(self.pool, d)
+        self.dirs = {}
+
+    # -- materialization ----------------------------------------------------------
+    def to_coo(self):
+        """(local_src, dst) arrays in (u, v) order — snapshot materialization."""
+        p = self.p
+        if not self.dirs:
+            lu = np.repeat(np.arange(p, dtype=np.int64), np.diff(self.ci.offsets))
+            return lu, self.ci.values.copy()
+        srcs, dsts = [], []
+        for lu in range(p):
+            d = self.dirs.get(lu)
+            vs = cart.scan(self.pool, d) if d is not None else cidx.neighbors(self.ci, lu)
+            if len(vs):
+                srcs.append(np.full(len(vs), lu, np.int64))
+                dsts.append(vs)
+        if not srcs:
+            return np.empty(0, np.int64), np.empty(0, np.int32)
+        return np.concatenate(srcs), np.concatenate(dsts).astype(np.int32)
+
+    def check_invariants(self) -> None:
+        cidx.check_invariants(self.ci)
+        for lu, d in self.dirs.items():
+            cart.check_invariants(self.pool, d)
+            if cidx.degree(self.ci, lu) != 0:
+                raise AssertionError(f"vertex {lu} in both CI and C-ART")
+
+
+def build_subgraph(
+    sid: int,
+    p: int,
+    pool: LeafPool,
+    local_u: np.ndarray,
+    vs: np.ndarray,
+    high_threshold: int = 256,
+) -> SubgraphSnapshot:
+    """Bulk-build the version-0 snapshot of subgraph ``sid`` from its edges."""
+    local_u = np.asarray(local_u, np.int64)
+    vs = np.asarray(vs, np.int32)
+    degs = np.bincount(local_u, minlength=p)
+    high = np.nonzero(degs > high_threshold)[0]
+    dirs: Dict[int, CartDir] = {}
+    low_mask = np.ones(len(local_u), bool)
+    for lu in high:
+        m = local_u == lu
+        low_mask &= ~m
+        dirs[int(lu)] = cart.build(pool, np.sort(np.unique(vs[m])))
+    ci = cidx.build(p, local_u[low_mask], vs[low_mask])
+    return SubgraphSnapshot(
+        sid=sid,
+        ts=0,
+        p=p,
+        pool=pool,
+        active=np.ones(p, bool),
+        ci=ci,
+        dirs=dirs,
+        high_threshold=high_threshold,
+    )

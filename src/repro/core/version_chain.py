@@ -1,0 +1,91 @@
+"""Per-subgraph version chains (paper §5.1) with writer-driven GC (§5.3).
+
+Each subgraph keeps its committed snapshots newest-first.  A version ``v_i``
+is reclaimable when it is not the head and no active reader's start timestamp
+falls in ``[v_i.ts, v_{i-1}.ts)`` (the half-open window during which ``v_i``
+was the visible version).  Proposition 5.2 bounds the chain length at k+1.
+"""
+
+from __future__ import annotations
+
+import threading
+from typing import List, Optional, Sequence
+
+from .subgraph import SubgraphSnapshot
+
+
+class VersionChain:
+    """Newest-first chain of committed subgraph snapshots."""
+
+    __slots__ = ("sid", "_versions", "_lock")
+
+    def __init__(self, sid: int, initial: SubgraphSnapshot) -> None:
+        self.sid = sid
+        self._versions: List[SubgraphSnapshot] = [initial]  # newest first
+        # Guards list mutation only. Readers traverse a list reference that
+        # writers replace wholesale, so reads stay lock-free (paper §5.2.2).
+        self._lock = threading.Lock()
+
+    # -- writer side -----------------------------------------------------------
+    def link(self, snap: SubgraphSnapshot) -> None:
+        """Link a freshly committed snapshot at the head."""
+        if snap.ts <= self.head.ts:
+            raise AssertionError(
+                f"non-monotone version link: {snap.ts} after {self.head.ts}"
+            )
+        with self._lock:
+            self._versions = [snap] + self._versions
+
+    def collect(self, active_ts: Sequence[int]) -> int:
+        """Reclaim versions not needed by any active reader. Returns count.
+
+        ``active_ts`` is the reader-tracer scan made by the committing writer
+        (paper §5.3).  Version v_i (i >= 1, newest-first indexing) is *pinned*
+        iff some t in active_ts satisfies v_i.ts <= t < v_{i-1}.ts.
+        """
+        pinned_ts = sorted(set(active_ts))
+        with self._lock:
+            versions = self._versions
+            keep = [versions[0]]  # head always survives
+            dead = []
+            for i in range(1, len(versions)):
+                newer, cur = versions[i - 1], versions[i]
+                import bisect
+
+                j = bisect.bisect_left(pinned_ts, cur.ts)
+                pinned = j < len(pinned_ts) and pinned_ts[j] < newer.ts
+                if pinned:
+                    keep.append(cur)
+                else:
+                    dead.append(cur)
+            self._versions = keep
+        for snap in dead:
+            snap.release()
+        return len(dead)
+
+    # -- reader side -------------------------------------------------------------
+    @property
+    def head(self) -> SubgraphSnapshot:
+        return self._versions[0]
+
+    def resolve(self, t: int) -> SubgraphSnapshot:
+        """Latest version with ts <= t (paper §5.2.2 snapshot construction).
+
+        Lock-free: captures the list reference once; writers only ever replace
+        the list with a superset-prefix (link) or a pruned copy (collect), and
+        collect never removes a version still visible to a registered reader.
+        """
+        versions = self._versions
+        for snap in versions:
+            if snap.ts <= t:
+                return snap
+        raise RuntimeError(
+            f"no version of subgraph {self.sid} visible at t={t} "
+            f"(chain: {[s.ts for s in versions]})"
+        )
+
+    def __len__(self) -> int:
+        return len(self._versions)
+
+    def timestamps(self) -> List[int]:
+        return [s.ts for s in self._versions]

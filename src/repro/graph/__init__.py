@@ -1,0 +1,19 @@
+"""Graph substrate: segment ops, generators, samplers, batching."""
+
+from .segment_ops import (
+    segment_softmax,
+    segment_sum,
+    segment_max,
+    segment_min,
+    segment_mean,
+    segment_std,
+)
+
+__all__ = [
+    "segment_softmax",
+    "segment_sum",
+    "segment_max",
+    "segment_min",
+    "segment_mean",
+    "segment_std",
+]

@@ -1,0 +1,53 @@
+"""Segment reductions — the message-passing primitive layer.
+
+JAX sparse is BCOO-only, so all GNN aggregation in this framework is built on
+edge-index scatter: ``segment_sum(messages, edge_dst, n_nodes)``.  These thin
+wrappers pin the conventions (int32 ids, num_segments static, indices_are_
+sorted hints from the store's clustered materialization).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum(data, segment_ids, num_segments: int, sorted_ids: bool = False):
+    return jax.ops.segment_sum(
+        data, segment_ids, num_segments=num_segments, indices_are_sorted=sorted_ids
+    )
+
+
+def segment_max(data, segment_ids, num_segments: int, sorted_ids: bool = False):
+    return jax.ops.segment_max(
+        data, segment_ids, num_segments=num_segments, indices_are_sorted=sorted_ids
+    )
+
+
+def segment_min(data, segment_ids, num_segments: int, sorted_ids: bool = False):
+    return jax.ops.segment_min(
+        data, segment_ids, num_segments=num_segments, indices_are_sorted=sorted_ids
+    )
+
+
+def segment_mean(data, segment_ids, num_segments: int, sorted_ids: bool = False):
+    s = segment_sum(data, segment_ids, num_segments, sorted_ids)
+    ones = jnp.ones(data.shape[:1], dtype=data.dtype)
+    cnt = segment_sum(ones, segment_ids, num_segments, sorted_ids)
+    cnt = jnp.maximum(cnt, 1)
+    return s / cnt.reshape((-1,) + (1,) * (data.ndim - 1))
+
+
+def segment_std(data, segment_ids, num_segments: int, eps: float = 1e-5):
+    mean = segment_mean(data, segment_ids, num_segments)
+    sq = segment_mean(data * data, segment_ids, num_segments)
+    return jnp.sqrt(jnp.maximum(sq - mean * mean, 0.0) + eps)
+
+
+def segment_softmax(scores, segment_ids, num_segments: int):
+    """Numerically stable softmax within segments (edge-softmax for GAT)."""
+    m = segment_max(scores, segment_ids, num_segments)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    e = jnp.exp(scores - m[segment_ids])
+    z = segment_sum(e, segment_ids, num_segments)
+    return e / jnp.maximum(z[segment_ids], 1e-16)

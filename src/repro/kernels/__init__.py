@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for RapidStore's hot spots.
+
+Each kernel package ships three modules:
+
+- ``kernel.py`` — the ``pl.pallas_call`` body with explicit BlockSpec tiling,
+- ``ops.py``    — the jit'd public wrapper (strategy selection, padding),
+- ``ref.py``    — a pure-jnp oracle the kernel is validated against.
+
+Kernels run ``interpret=True`` on CPU (tests) and compile natively on TPU.
+
+Inventory (paper hot spot -> kernel):
+
+- Search(u, v) probes           -> ``leaf_search``  (VPU compare-reduce)
+- set intersection / TC (§6.2)  -> ``intersect``
+- Scan-heavy analytics (PR/WCC) -> ``spmm`` (fused mask+normalize+reduce over
+  leaf blocks)
+- recsys EmbeddingBag substrate -> ``embedding_bag`` (scalar-prefetch row DMA)
+- LM serving attention          -> ``flash_decode`` (online-softmax GQA decode)
+"""

@@ -1,0 +1,3 @@
+from .ops import embedding_bag
+
+__all__ = ["embedding_bag"]

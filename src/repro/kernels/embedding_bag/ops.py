@@ -1,0 +1,29 @@
+"""Public EmbeddingBag wrapper (sum/mean, -1 padding)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..runtime import use_interpret
+from .kernel import embedding_bag_kernel
+from .ref import embedding_bag_ref
+
+
+def embedding_bag(table, ids, weights=None, mode: str = "sum") -> jnp.ndarray:
+    """EmbeddingBag(table, ids): weighted bag reduction of table rows.
+
+    table: [V, d] f32; ids: [N, K] int32 with -1 padding; weights: [N, K].
+    """
+    table = jnp.asarray(table, jnp.float32)
+    ids = jnp.asarray(ids, jnp.int32)
+    mask = ids >= 0
+    w = jnp.where(mask, 1.0 if weights is None else jnp.asarray(weights, jnp.float32), 0.0)
+    safe = jnp.where(mask, ids, 0)
+    out = embedding_bag_kernel(table, safe, w, interpret=use_interpret())
+    if mode == "mean":
+        cnt = jnp.maximum(jnp.sum(w, axis=1), 1e-9)
+        out = out / cnt[:, None]
+    return out
+
+
+__all__ = ["embedding_bag", "embedding_bag_ref"]

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for EmbeddingBag (gather + weighted segment reduce).
+
+JAX has no native ``nn.EmbeddingBag``; this reference IS the substrate
+implementation (jnp.take + masked weighted sum) the kernel accelerates.
+"""
+
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(
+    table: jnp.ndarray,  # [V, d]
+    ids: jnp.ndarray,  # [N, K] int32, padded with -1
+    weights: jnp.ndarray | None = None,  # [N, K] f32
+    mode: str = "sum",
+) -> jnp.ndarray:
+    mask = ids >= 0
+    safe = jnp.where(mask, ids, 0)
+    rows = table[safe]  # [N, K, d]
+    w = jnp.where(mask, 1.0 if weights is None else weights, 0.0)
+    out = jnp.sum(rows * w[:, :, None], axis=1)
+    if mode == "mean":
+        cnt = jnp.maximum(jnp.sum(w, axis=1), 1e-9)
+        out = out / cnt[:, None]
+    return out

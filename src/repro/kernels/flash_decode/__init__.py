@@ -1,0 +1,3 @@
+from .ops import flash_decode
+
+__all__ = ["flash_decode"]

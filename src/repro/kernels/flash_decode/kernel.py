@@ -1,0 +1,116 @@
+"""Flash-decode kernel: online-softmax GQA attention for one new token.
+
+The serving hot loop for every LM arch's ``decode_32k`` / ``long_500k``
+shapes.  Standard flash decoding adapted to TPU tiling:
+
+- grid = (batch, kv_head, S / BS): the KV sequence is streamed through VMEM
+  in BS-sized tiles while the [G, dh] query block stays resident;
+- online softmax: running max ``m``, normalizer ``l`` and the unnormalized
+  accumulator live in *revisited output blocks* (TPU grids execute the last
+  axis sequentially), so no scratch is needed and the final division happens
+  in the wrapper;
+- the two contractions (q·K_blk^T and p·V_blk) are MXU dot_generals with
+  f32 accumulation; G and dh pad to the (8, 128) register tile.
+
+VMEM per step (BS=512, dh=128, G=8): K/V tiles 2*512*128*4 = 512 KiB,
+q 4 KiB, accumulators ~4 KiB.
+
+Sequence-parallel use: under shard_map the KV axis is sharded; each device
+runs this kernel over its local S/n shard and the partials (acc, m, l)
+merge with the standard log-sum-exp combine (see serve/decode.py) — the
+collective payload is O(B*H*dh), independent of sequence length.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, len_ref, acc_ref, m_ref, l_ref, *, bs: int, softcap):
+    s_idx = pl.program_id(2)
+    q = q_ref[0, 0]  # [G, dh]
+    k = k_ref[0, :, 0]  # [BS, dh]
+    v = v_ref[0, :, 0]  # [BS, dh]
+    kv_len = len_ref[0, 0]
+
+    dh = q.shape[-1]
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    s = jax.lax.dot_general(
+        q.astype(jnp.float32),
+        k.astype(jnp.float32),
+        (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )  # [G, BS]
+    s = s * scale
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    pos = s_idx * bs + jax.lax.broadcasted_iota(jnp.int32, (1, bs), 1)
+    s = jnp.where(pos < kv_len, s, NEG_INF)
+
+    m_blk = jnp.max(s, axis=1, keepdims=True)  # [G, 1]
+
+    @pl.when(s_idx == 0)
+    def _init():
+        p = jnp.exp(s - m_blk)
+        acc_ref[0, 0] = jax.lax.dot_general(
+            p, v.astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        m_ref[0, 0] = m_blk[:, 0]
+        l_ref[0, 0] = jnp.sum(p, axis=1)
+
+    @pl.when(s_idx > 0)
+    def _step():
+        m_prev = m_ref[0, 0][:, None]  # [G, 1]
+        m_new = jnp.maximum(m_prev, m_blk)
+        alpha = jnp.exp(m_prev - m_new)  # rescale of previous state
+        p = jnp.exp(s - m_new)
+        acc_ref[0, 0] = acc_ref[0, 0] * alpha + jax.lax.dot_general(
+            p, v.astype(jnp.float32), (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        )
+        l_ref[0, 0] = l_ref[0, 0] * alpha[:, 0] + jnp.sum(p, axis=1)
+        m_ref[0, 0] = m_new[:, 0]
+
+
+@functools.partial(jax.jit, static_argnames=("block_s", "softcap", "interpret"))
+def flash_decode_kernel(
+    q: jnp.ndarray,  # [B, KV, G, dh]
+    k: jnp.ndarray,  # [B, S, KV, dh]
+    v: jnp.ndarray,  # [B, S, KV, dh]
+    kv_len: jnp.ndarray,  # [B] int32
+    block_s: int = 512,
+    softcap: float | None = None,
+    interpret: bool = False,
+):
+    b, kv, g, dh = q.shape
+    s = k.shape[1]
+    grid = (b, kv, s // block_s)
+    acc, m, l = pl.pallas_call(
+        functools.partial(_kernel, bs=block_s, softcap=softcap),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, g, dh), lambda i, h, j: (i, h, 0, 0)),
+            pl.BlockSpec((1, block_s, 1, dh), lambda i, h, j: (i, j, h, 0)),
+            pl.BlockSpec((1, block_s, 1, dh), lambda i, h, j: (i, j, h, 0)),
+            pl.BlockSpec((1, 1), lambda i, h, j: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, g, dh), lambda i, h, j: (i, h, 0, 0)),
+            pl.BlockSpec((1, 1, g), lambda i, h, j: (i, h, 0)),
+            pl.BlockSpec((1, 1, g), lambda i, h, j: (i, h, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, kv, g, dh), jnp.float32),
+            jax.ShapeDtypeStruct((b, kv, g), jnp.float32),
+            jax.ShapeDtypeStruct((b, kv, g), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v, kv_len[:, None].astype(jnp.int32))
+    return acc, m, l

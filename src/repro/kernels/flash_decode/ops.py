@@ -1,0 +1,49 @@
+"""Public flash-decode wrapper: padding + final normalization.
+
+Also exposes the (acc, m, l) partial form for sequence-parallel decode,
+where per-shard partials merge with the log-sum-exp combine rule before the
+final division (serve/decode.py).
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..runtime import use_interpret
+from .kernel import flash_decode_kernel
+from .ref import flash_decode_ref
+
+
+def flash_decode_partial(q, k, v, kv_len, block_s: int = 512, softcap=None):
+    """Returns (acc [B,KV,G,dh], m [B,KV,G], l [B,KV,G]) — unnormalized."""
+    q = jnp.asarray(q)
+    k = jnp.asarray(k)
+    v = jnp.asarray(v)
+    s = k.shape[1]
+    bs = min(block_s, s)
+    pad = (-s) % bs
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    return flash_decode_kernel(
+        q, k, v, jnp.asarray(kv_len, jnp.int32),
+        block_s=bs, softcap=softcap, interpret=use_interpret(),
+    )
+
+
+def flash_decode(q, k, v, kv_len, block_s: int = 512, softcap=None) -> jnp.ndarray:
+    """GQA decode attention for one token. q: [B, KV, G, dh] -> [B, KV, G, dh]."""
+    acc, m, l = flash_decode_partial(q, k, v, kv_len, block_s=block_s, softcap=softcap)
+    return acc / l[..., None]
+
+
+def merge_partials(accs, ms, ls):
+    """Log-sum-exp merge of sequence-parallel partials (lists or stacked axis 0)."""
+    m_all = jnp.max(jnp.stack(ms), axis=0)
+    scale = [jnp.exp(mi - m_all) for mi in ms]
+    l = sum(si * li for si, li in zip(scale, ls))
+    acc = sum(si[..., None] * ai for si, ai in zip(scale, accs))
+    return acc / l[..., None]
+
+
+__all__ = ["flash_decode", "flash_decode_partial", "merge_partials", "flash_decode_ref"]

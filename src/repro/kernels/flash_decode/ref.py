@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for GQA decode attention (single new token)."""
+
+import jax.numpy as jnp
+
+
+def flash_decode_ref(
+    q: jnp.ndarray,  # [B, KV, G, dh] — query heads grouped under KV heads
+    k: jnp.ndarray,  # [B, S, KV, dh]
+    v: jnp.ndarray,  # [B, S, KV, dh]
+    kv_len: jnp.ndarray,  # [B] int32 — live cache length per sequence
+    softcap: float | None = None,
+) -> jnp.ndarray:
+    b, s, kv, dh = k.shape
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    scores = jnp.einsum("bhgd,bshd->bhgs", q.astype(jnp.float32), k.astype(jnp.float32))
+    scores = scores * scale
+    if softcap is not None:
+        scores = softcap * jnp.tanh(scores / softcap)
+    pos = jnp.arange(s)[None, None, None, :]
+    mask = pos < kv_len[:, None, None, None]
+    scores = jnp.where(mask, scores, -jnp.inf)
+    p = jnp.exp(scores - jnp.max(scores, axis=-1, keepdims=True))
+    p = p / jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v.astype(jnp.float32))
+    return out

@@ -1,0 +1,3 @@
+from .ops import intersect_count, intersect_count_hybrid
+
+__all__ = ["intersect_count", "intersect_count_hybrid"]

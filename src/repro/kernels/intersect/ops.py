@@ -1,0 +1,53 @@
+"""Public intersection ops, including the paper's hybrid strategy rule."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..runtime import use_interpret
+from .kernel import intersect_count_kernel, SENTINEL
+from .ref import intersect_count_ref
+
+
+def _pad(x: jnp.ndarray, q_mult: int, b_mult: int) -> jnp.ndarray:
+    q, b = x.shape
+    return jnp.pad(
+        x, ((0, (-q) % q_mult), (0, (-b) % b_mult)), constant_values=SENTINEL
+    )
+
+
+def intersect_count(a, b, q_block: int = 64, chunk: int = 128) -> jnp.ndarray:
+    """|a_i ∩ b_i| for sorted SENTINEL-padded [Q, B] batches."""
+    a = jnp.asarray(a, jnp.int32)
+    b = jnp.asarray(b, jnp.int32)
+    q = a.shape[0]
+    qb = min(q_block, max(8, q))
+    a = _pad(a, qb, chunk)
+    b = _pad(b, qb, chunk)
+    out = intersect_count_kernel(
+        a, b, q_block=qb, chunk=chunk, interpret=use_interpret()
+    )
+    return out[:q]
+
+
+def intersect_count_hybrid(a, b) -> jnp.ndarray:
+    """Paper §6.5 hybrid: merge path when |b|/|a| < 10, probe path otherwise.
+
+    On TPU both flavors land in the same all-pairs kernel (see kernel.py);
+    the strategy choice instead selects the *operand orientation* — probing
+    with the smaller set as `a` minimizes the resident tile, which matters
+    once B exceeds one VMEM tile.
+    """
+    a = jnp.asarray(a, jnp.int32)
+    b = jnp.asarray(b, jnp.int32)
+    na = jnp.sum(a != SENTINEL, axis=1)
+    nb = jnp.sum(b != SENTINEL, axis=1)
+    swap = na > nb
+    a2 = jnp.where(swap[:, None], b, a)
+    b2 = jnp.where(swap[:, None], a, b)
+    return intersect_count(a2, b2)
+
+
+__all__ = ["intersect_count", "intersect_count_hybrid", "intersect_count_ref"]

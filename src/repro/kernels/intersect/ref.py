@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for sorted-set intersection counting."""
+
+import jax.numpy as jnp
+import numpy as np
+
+SENTINEL = np.int32(np.iinfo(np.int32).max)
+
+
+def intersect_count_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """|a_i ∩ b_i| per row for sorted SENTINEL-padded [Q, B] int32 arrays."""
+    hit = (a[:, :, None] == b[:, None, :]) & (a[:, :, None] != SENTINEL)
+    return jnp.sum(hit, axis=(1, 2)).astype(jnp.int32)

@@ -1,0 +1,3 @@
+from .ops import leaf_search
+
+__all__ = ["leaf_search"]

@@ -1,0 +1,35 @@
+"""Public wrapper for batched leaf search: pads to tile multiples, picks the
+kernel on TPU and interpret mode elsewhere."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..runtime import use_interpret
+from .kernel import leaf_search_kernel
+from .ref import leaf_search_ref
+
+SENTINEL = np.int32(np.iinfo(np.int32).max)
+
+
+def leaf_search(rows, targets, q_block: int = 256):
+    """Batched Search(u, v): locate targets[i] in sorted padded rows[i].
+
+    rows: [Q, B] int32 (B padded to 128-multiple by the caller's layout),
+    targets: [Q] int32. Returns (found [Q] bool, pos [Q] int32).
+    """
+    rows = jnp.asarray(rows, jnp.int32)
+    targets = jnp.asarray(targets, jnp.int32)
+    q, b = rows.shape
+    qb = min(q_block, max(8, q))
+    pad_q = (-q) % qb
+    if pad_q:
+        rows = jnp.pad(rows, ((0, pad_q), (0, 0)), constant_values=SENTINEL)
+        targets = jnp.pad(targets, (0, pad_q))
+    found, pos = leaf_search_kernel(rows, targets, q_block=qb, interpret=use_interpret())
+    return found[:q], pos[:q]
+
+
+__all__ = ["leaf_search", "leaf_search_ref"]

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for batched leaf search."""
+
+import jax.numpy as jnp
+
+
+def leaf_search_ref(rows: jnp.ndarray, targets: jnp.ndarray):
+    """For each query i, find targets[i] in the sorted padded row rows[i].
+
+    rows: [Q, B] int32 sorted ascending, padded with SENTINEL (int32 max).
+    targets: [Q] int32.
+    Returns (found [Q] bool, pos [Q] int32) where pos is the insertion index
+    (== index of the match when found).
+    """
+    t = targets[:, None]
+    pos = jnp.sum(rows < t, axis=1).astype(jnp.int32)
+    found = jnp.any(rows == t, axis=1)
+    return found, pos

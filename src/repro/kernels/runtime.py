@@ -1,0 +1,22 @@
+"""Kernel runtime switches.
+
+Pallas kernels compile natively on TPU; everywhere else (this container is
+CPU-only) they execute in interpret mode, which runs the kernel body with the
+same tiling semantics — our correctness gate.
+"""
+
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def use_interpret() -> bool:
+    if os.environ.get("REPRO_FORCE_INTERPRET"):
+        return True
+    return not on_tpu()

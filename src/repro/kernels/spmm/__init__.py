@@ -1,0 +1,3 @@
+from .ops import leaf_scan_reduce, leaf_spmm
+
+__all__ = ["leaf_scan_reduce", "leaf_spmm"]

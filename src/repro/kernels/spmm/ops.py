@@ -1,0 +1,54 @@
+"""Public SpMM/scan-reduce wrappers over the leaf-block snapshot view."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..runtime import use_interpret
+from .kernel import leaf_scan_reduce_kernel, leaf_spmm_kernel, SENTINEL
+from .ref import leaf_scan_reduce_ref, leaf_spmm_ref
+
+
+def leaf_scan_reduce(rows, x, n_block: int = 256) -> jnp.ndarray:
+    """y[i] = sum over live j of x[rows[i, j]] — the PR scan primitive.
+
+    The gather runs in XLA (hardware gather); the kernel fuses mask+reduce.
+    """
+    rows = jnp.asarray(rows, jnp.int32)
+    x = jnp.asarray(x, jnp.float32)
+    n, b = rows.shape
+    nb = min(n_block, max(8, n))
+    pad_n = (-n) % nb
+    if pad_n:
+        rows = jnp.pad(rows, ((0, pad_n), (0, 0)), constant_values=SENTINEL)
+    safe = jnp.where(rows != SENTINEL, rows, 0)
+    vals = x[safe]
+    out = leaf_scan_reduce_kernel(rows, vals, n_block=nb, interpret=use_interpret())
+    return out[:n]
+
+
+def leaf_spmm(rows, h, n_block: int = 64, v_tile: int = 512) -> jnp.ndarray:
+    """Y[i] = sum over live j of H[rows[i, j]] — the GNN message primitive.
+
+    One-hot MXU contraction per (block, vertex-tile); H's vertex axis is
+    padded to the tile size, features to the 128 lane width.
+    """
+    rows = jnp.asarray(rows, jnp.int32)
+    h = jnp.asarray(h, jnp.float32)
+    n, b = rows.shape
+    nv, d = h.shape
+    nb = min(n_block, max(8, n))
+    vt = min(v_tile, max(128, nv))
+    pad_n = (-n) % nb
+    pad_v = (-nv) % vt
+    pad_d = (-d) % 128
+    if pad_n:
+        rows = jnp.pad(rows, ((0, pad_n), (0, 0)), constant_values=SENTINEL)
+    if pad_v or pad_d:
+        h = jnp.pad(h, ((0, pad_v), (0, pad_d)))
+    out = leaf_spmm_kernel(rows, h, n_block=nb, v_tile=vt, interpret=use_interpret())
+    return out[:n, :d]
+
+
+__all__ = ["leaf_scan_reduce", "leaf_spmm", "leaf_scan_reduce_ref", "leaf_spmm_ref"]

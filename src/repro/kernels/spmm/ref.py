@@ -1,0 +1,29 @@
+"""Pure-jnp oracles for leaf-block scan reduction and SpMM."""
+
+import jax.numpy as jnp
+import numpy as np
+
+SENTINEL = np.int32(np.iinfo(np.int32).max)
+
+
+def leaf_scan_reduce_ref(rows: jnp.ndarray, x: jnp.ndarray) -> jnp.ndarray:
+    """Per-block masked gather-sum: y[i] = sum_j x[rows[i, j]], SENTINEL-masked.
+
+    rows: [N, B] int32 neighbor ids; x: [n] float32. Returns [N] float32.
+    (The PageRank/WCC scan primitive over the leaf-block snapshot view.)
+    """
+    mask = rows != SENTINEL
+    safe = jnp.where(mask, rows, 0)
+    return jnp.sum(jnp.where(mask, x[safe], 0.0), axis=1)
+
+
+def leaf_spmm_ref(rows: jnp.ndarray, h: jnp.ndarray) -> jnp.ndarray:
+    """Per-block masked gather-sum of feature rows: Y[i] = sum_j H[rows[i,j]].
+
+    rows: [N, B] int32; h: [n, d] float32. Returns [N, d] float32.
+    (The GNN message-passing primitive over the leaf-block view.)
+    """
+    mask = rows != SENTINEL
+    safe = jnp.where(mask, rows, 0)
+    gathered = h[safe]  # [N, B, d]
+    return jnp.sum(jnp.where(mask[:, :, None], gathered, 0.0), axis=1)

@@ -1,0 +1,262 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell: ``jax.jit(step, in_shardings=...).lower(*ShapeDtypeStructs)``
+then ``.compile()``; record ``memory_analysis()`` (proves it fits),
+``cost_analysis()`` (FLOPs/bytes for the roofline) and the parsed collective
+schedule.  Results stream to ``results/dryrun.json`` (resumable).
+
+Usage:
+    python -m repro.launch.dryrun                     # all cells, both meshes
+    python -m repro.launch.dryrun --arch grok-1-314b --shape train_4k
+    python -m repro.launch.dryrun --mesh single       # 16x16 only
+"""
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from repro.configs import registry
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_cell
+from repro.roofline.hlo import collective_stats
+from repro.roofline import model as RM
+from repro.dist.sharding import named
+
+RESULTS = Path(__file__).resolve().parents[3] / "results"
+
+
+def model_flops_for(arch: str, cell, mesh) -> float:
+    fam = registry.FAMILY[arch]
+    cfg = registry.get_config(arch)
+    p = cell.params
+    if fam == "lm":
+        if cell.kind == "train":
+            return RM.lm_model_flops(cfg, p["global_batch"], p["seq_len"], train=True)
+        if cell.kind == "prefill":
+            return RM.lm_model_flops(cfg, p["global_batch"], p["seq_len"], train=False)
+        return RM.lm_decode_model_flops(cfg, p["global_batch"], p["seq_len"])
+    if fam == "gnn":
+        if cell.kind == "gnn_batched":
+            return RM.gnn_model_flops(
+                cfg, p["n_nodes"] * p["batch"], p["n_edges"] * p["batch"],
+                p.get("d_feat", 16))
+        if cell.kind == "gnn_minibatch":
+            seeds, fan = p["batch_nodes"], p["fanout"]
+            n = seeds * (1 + fan[0] + fan[0] * fan[1])
+            e = seeds * fan[0] + seeds * fan[0] * fan[1]
+            return RM.gnn_model_flops(cfg, n, e, p["d_feat"])
+        return RM.gnn_model_flops(cfg, p["n_nodes"], p["n_edges"], p["d_feat"])
+    if cell.kind == "recsys_retrieval":
+        return 2.0 * p["n_candidates"] * cfg.embed_dim
+    return RM.bst_model_flops(cfg, p["batch"], train=cell.kind == "recsys_train")
+
+
+def _moe_flops_correction(arch: str, cell, n_dev: int) -> float:
+    """CPU lowers ragged_dot to an all-experts masked GEMM (verified: E x the
+    grouped-GEMM flops); on the TPU target it is a true grouped GEMM with
+    exact top-k flops.  Subtract the (E-1)x inflation from the cost lowering
+    so the compute term reflects the target hardware."""
+    cfg = registry.get_config(arch)
+    if registry.FAMILY[arch] != "lm" or cfg.moe is None:
+        return 0.0
+    if cfg.moe.impl != "ragged":
+        return 0.0  # capacity dispatch computes its true (cf x top-k) flops
+    p = cell.params
+    if cell.kind == "train":
+        tokens, mult = p["global_batch"] * p["seq_len"], 3.0
+    elif cell.kind == "prefill":
+        tokens, mult = p["global_batch"] * p["seq_len"], 1.0
+    else:  # decode: one token per sequence
+        tokens, mult = p["global_batch"], 1.0
+    e, k, f, d = cfg.moe.n_experts, cfg.moe.top_k, cfg.moe.d_ff, cfg.d_model
+    true_expert_flops = mult * cfg.n_layers * 3 * 2.0 * tokens * k * d * f
+    return (e - 1) * true_expert_flops / n_dev
+
+
+def _lower_compile(built, mesh):
+    t0 = time.time()
+    with mesh:
+        in_sh = named(mesh, built.in_specs)
+        out_sh = named(mesh, built.out_specs) if built.out_specs is not None else None
+        lowered = jax.jit(
+            built.fn, in_shardings=in_sh, out_shardings=out_sh,
+            donate_argnums=built.donate or None,
+        ).lower(*built.inputs)
+        t_lower = time.time() - t0
+        t0c = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0c
+    return compiled, t_lower, t_compile
+
+
+def run_cell(arch: str, cell, mesh, mesh_name: str, save_hlo: bool = False) -> dict:
+    rec = {"arch": arch, "shape": cell.name, "mesh": mesh_name, "status": "error"}
+    try:
+        n_dev = mesh.size
+        fam = registry.FAMILY[arch]
+        # -- fit lowering: the production program (proves memory fit) -------
+        built = build_cell(arch, cell, mesh, mode="fit")
+        compiled, t_lower, t_compile = _lower_compile(built, mesh)
+        ma = compiled.memory_analysis()
+        fit_text = compiled.as_text()
+
+        # -- cost lowerings: delta-unroll extrapolation ----------------------
+        # scan/while bodies are cost-counted ONCE regardless of trip count,
+        # so compile unroll=1 and unroll=4 variants (unchunked attention) and
+        # extrapolate: total = f1 + (L-1) * (f4 - f1) / 3.  Exact when XLA
+        # lowers each inlined layer identically (verified vs a full unroll).
+        if fam == "lm":
+            cfg_l = registry.get_config(arch)
+            # extrapolation works in scan-iteration units: with remat blocks
+            # of `remat_block` layers, the layer scan has L/block iterations
+            blk = max(1, getattr(cfg_l, "remat_block", 1))
+            L = cfg_l.n_layers // blk if cfg_l.n_layers % blk == 0 else cfg_l.n_layers
+            b1 = build_cell(arch, cell, mesh, mode="cost1")
+            c1, _, t_c1 = _lower_compile(b1, mesh)
+            ca1, text1 = c1.cost_analysis(), c1.as_text()
+            if L > 1:
+                b4 = build_cell(arch, cell, mesh, mode="cost4")
+                c4, _, t_c4 = _lower_compile(b4, mesh)
+                ca4, text4 = c4.cost_analysis(), c4.as_text()
+                u = min(4, L)
+                scale = (L - 1) / (u - 1)
+            else:
+                ca4, text4, u, scale, t_c4 = ca1, text1, 1, 0.0, 0.0
+
+            def _extrap(v1: float, v4: float) -> float:
+                return v1 + scale * (v4 - v1)
+
+            flops_raw = _extrap(float(ca1.get("flops", 0.0)), float(ca4.get("flops", 0.0)))
+            bytes_accessed = _extrap(
+                float(ca1.get("bytes accessed", 0.0)), float(ca4.get("bytes accessed", 0.0))
+            )
+            coll1 = collective_stats(text1, n_dev)
+            coll4 = collective_stats(text4, n_dev)
+            coll = {
+                "per_device_bytes": _extrap(
+                    coll1["per_device_bytes"], coll4["per_device_bytes"]
+                ),
+                "counts": {
+                    op: int(round(_extrap(coll1["counts"].get(op, 0), n4)))
+                    for op, n4 in coll4["counts"].items()
+                },
+                "bytes_by_op": {
+                    op: _extrap(coll1["bytes_by_op"].get(op, 0.0), b4)
+                    for op, b4 in coll4["bytes_by_op"].items()
+                },
+            }
+            cost_text = text4
+            t_compile_c = t_c1 + t_c4
+        else:
+            ca = compiled.cost_analysis()
+            cost_text = fit_text
+            t_compile_c = 0.0
+            coll = collective_stats(cost_text, n_dev)
+            flops_raw = float(ca.get("flops", 0.0))
+            bytes_accessed = float(ca.get("bytes accessed", 0.0))
+        moe_corr = _moe_flops_correction(arch, cell, n_dev)
+        flops = max(flops_raw - moe_corr, 0.0)
+        report = RM.RooflineReport(
+            arch=arch, shape=cell.name, mesh=mesh_name, n_devices=n_dev,
+            hlo_flops_per_dev=flops,
+            hlo_bytes_per_dev=bytes_accessed,
+            coll_bytes_per_dev=coll["per_device_bytes"],
+            model_flops_total=model_flops_for(arch, cell, mesh),
+        )
+        rec.update(report.to_dict())
+        rec.update(
+            status="ok",
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            compile_cost_s=round(t_compile_c, 2),
+            hlo_flops_raw_per_dev=flops_raw,
+            moe_flops_correction_per_dev=moe_corr,
+            collective_counts=coll["counts"],
+            collective_bytes_by_op=coll["bytes_by_op"],
+            memory={
+                "argument_bytes": ma.argument_size_in_bytes,
+                "output_bytes": ma.output_size_in_bytes,
+                "temp_bytes": ma.temp_size_in_bytes,
+                "peak_per_device_gb": round(
+                    (ma.argument_size_in_bytes + ma.temp_size_in_bytes) / 2**30, 3
+                ),
+            },
+        )
+        if save_hlo:
+            hlo_dir = RESULTS / "hlo"
+            hlo_dir.mkdir(parents=True, exist_ok=True)
+            (hlo_dir / f"{arch}__{cell.name}__{mesh_name}.txt").write_text(cost_text)
+    except Exception as e:  # noqa: BLE001 — record and continue
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both", choices=["single", "multi", "both"])
+    ap.add_argument("--out", default=str(RESULTS / "dryrun.json"))
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--fresh", action="store_true", help="ignore existing results")
+    args = ap.parse_args()
+
+    out_path = Path(args.out)
+    out_path.parent.mkdir(parents=True, exist_ok=True)
+    results = {}
+    if out_path.exists() and not args.fresh:
+        results = {tuple(k.split("|")): v for k, v in json.loads(out_path.read_text()).items()}
+
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("16x16", make_production_mesh(multi_pod=False)))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("2x16x16", make_production_mesh(multi_pod=True)))
+
+    cells = registry.all_cells()
+    if args.arch:
+        cells = [(a, c) for a, c in cells if a == args.arch]
+    if args.shape:
+        cells = [(a, c) for a, c in cells if c.name == args.shape]
+
+    n_ok = n_err = n_skip = 0
+    for mesh_name, mesh in meshes:
+        for arch, cell in cells:
+            key = (arch, cell.name, mesh_name)
+            if key in results and results[key].get("status") == "ok":
+                n_skip += 1
+                continue
+            print(f"[dryrun] {arch} x {cell.name} x {mesh_name} ...", flush=True)
+            rec = run_cell(arch, cell, mesh, mesh_name, save_hlo=args.save_hlo)
+            results[key] = rec
+            if rec["status"] == "ok":
+                n_ok += 1
+                print(
+                    f"  ok: compile {rec['compile_s']}s  "
+                    f"compute {rec['compute_s']*1e3:.2f}ms  "
+                    f"memory {rec['memory_s']*1e3:.2f}ms  "
+                    f"collective {rec['collective_s']*1e3:.2f}ms  "
+                    f"bound={rec['bound']}  mem/dev {rec['memory']['peak_per_device_gb']}GB",
+                    flush=True,
+                )
+            else:
+                n_err += 1
+                print(f"  ERROR: {rec['error']}", flush=True)
+            out_path.write_text(
+                json.dumps({"|".join(k): v for k, v in results.items()}, indent=1)
+            )
+    print(f"[dryrun] done: ok={n_ok} err={n_err} skipped={n_skip}")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

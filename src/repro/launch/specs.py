@@ -1,0 +1,326 @@
+"""Dry-run cell builders: (step_fn, in_shardings, input ShapeDtypeStructs)
+for every (architecture x input shape x mesh) combination.
+
+All inputs are ``jax.ShapeDtypeStruct`` stand-ins — weak-type-correct,
+shardable, zero allocation.  Parameter/optimizer shapes come from
+``jax.eval_shape`` over the real initializers, so the lowered program is
+byte-identical to a real training/serving step.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs import registry
+from ..configs.base import GNNConfig, LMConfig, RecsysConfig, ShapeCell
+from ..dist import sharding as SH
+from ..models import bst as BST
+from ..models import gnn as G
+from ..models import transformer as T
+from ..optim import adamw
+from ..serve.decode import make_decode_step, make_prefill_step, make_sp_attn_fn
+from ..train.step import make_bst_train_step, make_gnn_train_step, make_lm_train_step
+from .mesh import data_axes
+
+
+class DryRunCell(NamedTuple):
+    arch: str
+    shape: str
+    fn: Any  # the step function to jit
+    in_specs: Any  # PartitionSpec pytree (positional args tuple)
+    inputs: Tuple  # ShapeDtypeStruct pytree tuple
+    static_kind: str
+    donate: Tuple[int, ...] = ()  # donated argnums (in-place update buffers)
+    out_specs: Any = None  # output PartitionSpecs (pins grad/state shardings)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _pad_to(x: int, mult: int) -> int:
+    return -(-x // mult) * mult
+
+
+# ---------------------------------------------------------------------------
+# LM cells
+# ---------------------------------------------------------------------------
+def _lm_cell(arch: str, cfg: LMConfig, cell: ShapeCell, mesh,
+             mode: str = "fit") -> DryRunCell:
+    """``mode='fit'``: the production program (layer scan + chunked attention)
+    — proves memory fit.  ``mode='cost'``: semantically identical lowering
+    with the layer scan unrolled and attention unchunked, so cost_analysis
+    counts every layer and every collective (scan bodies are otherwise
+    costed once; see EXPERIMENTS.md §Dry-run methodology)."""
+    dp = data_axes(mesh)
+    dp_spec = dp if len(dp) > 1 else dp[0]
+    tp = "model"
+    cfg = SH.pad_vocab(cfg, mesh.shape[tp])
+    if mode == "fit":
+        unroll, attn_chunk = 1, None
+    elif mode == "cost1":
+        unroll, attn_chunk = 1, -1
+    elif mode == "cost4":
+        unroll, attn_chunk = min(4, cfg.n_layers), -1
+    else:  # full-unroll cost (slow; kept for validation)
+        unroll, attn_chunk = cfg.n_layers, -1
+    pspecs = SH.lm_param_specs(cfg, dp_spec, tp)
+    act = SH.lm_activation_specs(dp_spec, tp)
+    moe_fn = None
+    if cfg.moe is not None:
+        from ..models.moe import make_sharded_moe_ffn
+
+        moe_fn = make_sharded_moe_ffn(cfg, mesh, dp_spec, tp)
+    params_shapes = jax.eval_shape(
+        functools.partial(T.init_params, cfg, dtype=jnp.float32),
+        jax.random.PRNGKey(0),
+    )
+
+    # q/k/v activation constraints only when the head axes divide the TP
+    # width — otherwise XLA's propagation from the TP'd weights picks a
+    # valid (head x dh) factorization itself (e.g. granite's 24 heads -> 8x2).
+    tp_n = mesh.shape[tp]
+    qkv_spec = act["activation"] if (
+        cfg.n_heads % tp_n == 0 and cfg.n_kv_heads % tp_n == 0
+    ) else None
+
+    if cell.kind == "train":
+        b, s = cell.params["global_batch"], cell.params["seq_len"]
+        opt_shapes = jax.eval_shape(adamw.init, params_shapes)
+        ospecs = SH.adamw_state_specs(pspecs)
+        step = make_lm_train_step(
+            cfg,
+            activation_spec=qkv_spec,
+            carry_spec=act["carry"],
+            logits_spec=act["logits"],
+            unroll=unroll,
+            attn_chunk=attn_chunk,
+            moe_fn=moe_fn,
+        )
+        tokens = _sds((b, s), jnp.int32)
+        in_specs = (pspecs, ospecs, P(dp_spec, None), P(dp_spec, None))
+        metrics_specs = {"loss": P(), "grad_norm": P(), "lr": P()}
+        return DryRunCell(arch, cell.name, step, in_specs,
+                          (params_shapes, opt_shapes, tokens, tokens), "train",
+                          donate=(0, 1), out_specs=(pspecs, ospecs, metrics_specs))
+
+    if cell.kind == "prefill":
+        b, s = cell.params["global_batch"], cell.params["seq_len"]
+        step = make_prefill_step(
+            cfg, activation_spec=qkv_spec, carry_spec=act["carry"],
+            unroll=unroll, attn_chunk=attn_chunk, moe_fn=moe_fn,
+        )
+        tokens = _sds((b, s), jnp.int32)
+        return DryRunCell(arch, cell.name, step, (pspecs, P(dp_spec, None)),
+                          (params_shapes, tokens), "prefill")
+
+    # decode: one token against a seq_len KV cache
+    b, s = cell.params["global_batch"], cell.params["seq_len"]
+    if b >= len(dp) and b % _mesh_size(mesh, dp) == 0 and b > 1:
+        batch_shards, seq_axes = dp_spec, ("model",)
+    else:  # long-context single sequence: shard S over every axis
+        batch_shards, seq_axes = None, tuple(mesh.axis_names)
+    cache_spec = {
+        "k": SH.lm_cache_spec(batch_shards, seq_axes if len(seq_axes) > 1 else seq_axes[0]),
+        "v": SH.lm_cache_spec(batch_shards, seq_axes if len(seq_axes) > 1 else seq_axes[0]),
+    }
+    attn_fn = make_sp_attn_fn(mesh, seq_axes, batch_axes=batch_shards)
+    if cfg.moe is not None:
+        # decode: weight-stationary MoE — a one-token batch cannot amortize
+        # per-layer FSDP weight gathers (hillclimb log, EXPERIMENTS.md §Perf)
+        from ..models.moe import make_weight_stationary_moe_ffn
+
+        moe_fn = make_weight_stationary_moe_ffn(cfg, mesh, dp_spec, tp)
+    step = make_decode_step(cfg, attn_fn=attn_fn, unroll=unroll, moe_fn=moe_fn)
+    cache = {
+        "k": _sds((cfg.n_layers, b, s, cfg.n_kv_heads, cfg.d_head), jnp.bfloat16),
+        "v": _sds((cfg.n_layers, b, s, cfg.n_kv_heads, cfg.d_head), jnp.bfloat16),
+    }
+    tokens = _sds((b, 1), jnp.int32)
+    pos = _sds((), jnp.int32)  # right-aligned batch: uniform position
+    tok_spec = P(batch_shards, None) if batch_shards else P(None, None)
+    pos_spec = P()
+    in_specs = (pspecs, cache_spec, tok_spec, pos_spec)
+    logits_out = P(batch_shards, "model") if batch_shards else P(None, "model")
+    tok_out = P(batch_shards) if batch_shards else P()
+    out_specs = (logits_out, tok_out, cache_spec)
+    return DryRunCell(arch, cell.name, step, in_specs,
+                      (params_shapes, cache, tokens, pos), "decode",
+                      donate=(1,), out_specs=out_specs)  # cache updated in place
+
+
+def _mesh_size(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+# ---------------------------------------------------------------------------
+# GNN cells
+# ---------------------------------------------------------------------------
+def _gnn_cell(arch: str, cfg: GNNConfig, cell: ShapeCell, mesh) -> DryRunCell:
+    dp = data_axes(mesh)
+    dp_spec = dp if len(dp) > 1 else dp[0]
+    all_axes = tuple(mesh.axis_names)
+    n_dev = _mesh_size(mesh, all_axes)
+    p = dict(cell.params)
+    graph_level = cell.kind == "gnn_batched"
+
+    if cell.kind == "gnn_batched":
+        n_graphs = p["batch"]
+        n_nodes = p["n_nodes"] * n_graphs
+        n_edges = _pad_to(p["n_edges"] * n_graphs, n_dev)
+        d_feat = p.get("d_feat", 16)
+        shard_feat = False
+    elif cell.kind == "gnn_minibatch":
+        fan = p["fanout"]
+        seeds = p["batch_nodes"]
+        n_nodes = seeds * (1 + fan[0] + fan[0] * fan[1])  # padded sample bound
+        n_nodes = _pad_to(n_nodes, n_dev)
+        n_edges = _pad_to(seeds * fan[0] + seeds * fan[0] * fan[1], n_dev)
+        d_feat = p["d_feat"]
+        n_graphs = 0
+        shard_feat = n_nodes >= n_dev * 64
+    else:  # gnn_full
+        n_nodes = p["n_nodes"]
+        n_edges = _pad_to(p["n_edges"], n_dev)
+        d_feat = p["d_feat"]
+        n_graphs = 0
+        shard_feat = n_nodes > 1_000_000  # ogb_products
+    if shard_feat:
+        n_nodes = _pad_to(n_nodes, n_dev)
+
+    params_shapes = jax.eval_shape(
+        functools.partial(G.init_gnn, cfg, d_feat=d_feat),
+        jax.random.PRNGKey(0),
+    )
+    opt_shapes = jax.eval_shape(adamw.init, params_shapes)
+    pspecs = jax.tree.map(lambda _: P(), params_shapes)
+    ospecs = SH.adamw_state_specs(pspecs)
+    # large graphs: bf16 over the wire for edge gathers, saved activations
+    # node-sharded between layers (EXPERIMENTS.md §Perf, gatedgcn hillclimb)
+    gather_fn = scatter_fn = None
+    if shard_feat:
+        from ..models.gnn import make_shardmap_gather, make_shardmap_scatter
+
+        gather_fn = make_shardmap_gather(mesh, dp_spec, all_axes)
+        scatter_fn = make_shardmap_scatter(mesh, dp_spec, all_axes, n_nodes)
+    step = make_gnn_train_step(
+        cfg, n_nodes=n_nodes, graph_level=graph_level, n_graphs=n_graphs,
+        node_spec=P(dp_spec, None) if shard_feat else None,
+        gather_fn=gather_fn, scatter_fn=scatter_fn,
+    )
+
+    feat_spec = P(dp_spec, None) if shard_feat else P()
+    node_spec = P(dp_spec) if shard_feat else P()
+    edge_spec = P(all_axes)
+    n_label = n_graphs if graph_level else n_nodes
+    label_spec = P() if graph_level else node_spec
+
+    inputs = (
+        params_shapes,
+        opt_shapes,
+        _sds((n_nodes, d_feat), jnp.float32),
+        _sds((n_edges,), jnp.int32),
+        _sds((n_edges,), jnp.int32),
+        _sds((n_edges,), jnp.bool_),
+        _sds((n_label,), jnp.int32),
+        _sds((n_label,), jnp.float32),
+    )
+    in_specs = (pspecs, ospecs, feat_spec, edge_spec, edge_spec, edge_spec,
+                label_spec, label_spec)
+    if graph_level:
+        inputs = inputs + (_sds((n_nodes,), jnp.int32),)
+        in_specs = in_specs + (P(),)
+    return DryRunCell(arch, cell.name, step, in_specs, inputs, cell.kind)
+
+
+# ---------------------------------------------------------------------------
+# recsys cells
+# ---------------------------------------------------------------------------
+def _bst_cell(arch: str, cfg: RecsysConfig, cell: ShapeCell, mesh) -> DryRunCell:
+    dp = data_axes(mesh)
+    dp_spec = dp if len(dp) > 1 else dp[0]
+    tp = "model"
+    pspecs = SH.bst_param_specs(cfg, dp_spec, tp)
+    params_shapes = jax.eval_shape(
+        functools.partial(BST.init_params, cfg), jax.random.PRNGKey(0)
+    )
+    lookup = BST.make_sharded_lookup(mesh, tp, batch_axes=dp_spec)
+
+    if cell.kind == "recsys_train":
+        b = cell.params["batch"]
+        opt_shapes = jax.eval_shape(adamw.init, params_shapes)
+        ospecs = SH.adamw_state_specs(pspecs)
+        step = make_bst_train_step(cfg, lookup_fn=lookup)
+        inputs = (
+            params_shapes, opt_shapes,
+            _sds((b, cfg.seq_len), jnp.int32),
+            _sds((b,), jnp.int32),
+            _sds((b, cfg.n_other_feats), jnp.float32),
+            _sds((b,), jnp.float32),
+        )
+        in_specs = (pspecs, ospecs, P(dp_spec, None), P(dp_spec),
+                    P(dp_spec, None), P(dp_spec))
+        return DryRunCell(arch, cell.name, step, in_specs, inputs, cell.kind)
+
+    if cell.kind == "recsys_serve":
+        b = cell.params["batch"]
+
+        def serve(params, hist, target, other):
+            return BST.forward(cfg, params, hist, target, other, lookup_fn=lookup)
+
+        inputs = (
+            params_shapes,
+            _sds((b, cfg.seq_len), jnp.int32),
+            _sds((b,), jnp.int32),
+            _sds((b, cfg.n_other_feats), jnp.float32),
+        )
+        in_specs = (pspecs, P(dp_spec, None), P(dp_spec), P(dp_spec, None))
+        return DryRunCell(arch, cell.name, serve, in_specs, inputs, cell.kind)
+
+    # retrieval: one user vs n_candidates items — batched dot, candidate-sharded
+    n_cand = cell.params["n_candidates"]
+    n_cand = _pad_to(n_cand, _mesh_size(mesh, dp))
+    lookup_single = BST.make_sharded_lookup(mesh, tp, batch_axes=None)  # 1 user
+    cand_lookup = BST.make_sharded_lookup(mesh, tp, batch_axes=dp_spec)
+
+    def retrieval(params, hist, other, cand_ids):
+        uv = BST.user_tower(cfg, params, hist, other, lookup_fn=lookup_single)
+        return BST.retrieval_scores(cfg, params, uv[0], cand_ids, lookup_fn=cand_lookup)
+
+    inputs = (
+        params_shapes,
+        _sds((1, cfg.seq_len), jnp.int32),
+        _sds((1, cfg.n_other_feats), jnp.float32),
+        _sds((n_cand,), jnp.int32),
+    )
+    in_specs = (pspecs, P(None, None), P(None, None), P(dp_spec))
+    return DryRunCell(arch, cell.name, retrieval, in_specs, inputs, cell.kind)
+
+
+# ---------------------------------------------------------------------------
+# public entry
+# ---------------------------------------------------------------------------
+def build_cell(arch: str, cell: ShapeCell, mesh, mode: str = "fit") -> DryRunCell:
+    fam = registry.FAMILY[arch]
+    cfg = registry.get_config(arch)
+    if fam == "lm":
+        return _lm_cell(arch, cfg, cell, mesh, mode=mode)
+    if fam == "gnn":
+        return _gnn_cell(arch, cfg, cell, mesh)  # no layer scan: one lowering
+    return _bst_cell(arch, cfg, cell, mesh)
+
+
+def input_specs(arch: str, shape_name: str, mesh):
+    """ShapeDtypeStruct stand-ins for every model input of one cell."""
+    for cell in registry.shapes_for(arch):
+        if cell.name == shape_name:
+            return build_cell(arch, cell, mesh).inputs
+    raise KeyError(f"unknown shape {shape_name} for {arch}")

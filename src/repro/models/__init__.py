@@ -1,0 +1,1 @@
+"""Model zoo: unified transformer LM, GNNs, recsys BST."""

@@ -1,0 +1,177 @@
+"""BST — Behavior Sequence Transformer (Chen et al., arXiv:1905.06874).
+
+User behaviour sequence (item ids) + target item -> transformer block over
+the sequence -> concat with profile features -> MLP tower -> CTR logit.
+
+The embedding LOOKUP is the hot path (huge item table).  The table is
+row-sharded over the ``model`` mesh axis; ``sharded_embedding_lookup``
+implements the lookup as local masked take + psum under shard_map (JAX has
+no EmbeddingBag — this substrate op IS part of the system; the Pallas
+``embedding_bag`` kernel is the single-device TPU fast path).
+
+RapidStore connection: the user->item interaction store is a dynamic graph;
+behaviour sequences are ``Scan(u)`` over a snapshot view, and the table's
+row partitioning mirrors the store's subgraph blocks (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import RecsysConfig
+from .common import dense_init, embed_init, rms_norm
+
+
+def init_params(cfg: RecsysConfig, key, dtype=jnp.float32) -> Dict:
+    ks = jax.random.split(key, 12)
+    d = cfg.embed_dim
+    # sequence = history (seq_len) + target item appended
+    s = cfg.seq_len + 1
+    blocks = {}
+    for i in range(cfg.n_blocks):
+        kb = jax.random.split(ks[3 + i], 8)
+        blocks[f"block{i}"] = {
+            "wq": dense_init(kb[0], (d, d), dtype=dtype),
+            "wk": dense_init(kb[1], (d, d), dtype=dtype),
+            "wv": dense_init(kb[2], (d, d), dtype=dtype),
+            "wo": dense_init(kb[3], (d, d), dtype=dtype),
+            "norm1": jnp.ones((d,), dtype),
+            "norm2": jnp.ones((d,), dtype),
+            "ffn_w1": dense_init(kb[4], (d, 4 * d), dtype=dtype),
+            "ffn_b1": jnp.zeros((4 * d,), dtype),
+            "ffn_w2": dense_init(kb[5], (4 * d, d), dtype=dtype),
+            "ffn_b2": jnp.zeros((d,), dtype),
+        }
+    mlp_in = s * d + cfg.n_other_feats
+    dims = (mlp_in,) + cfg.mlp_dims + (1,)
+    mlp = {}
+    for i in range(len(dims) - 1):
+        mlp[f"w{i}"] = dense_init(ks[8], (dims[i], dims[i + 1]), dtype=dtype)
+        mlp[f"b{i}"] = jnp.zeros((dims[i + 1],), dtype)
+        ks = jax.random.split(ks[8], 12)
+    return {
+        "item_emb": embed_init(ks[0], (cfg.n_items, d), dtype),
+        "pos_emb": embed_init(ks[1], (s, d), dtype),
+        "blocks": blocks,
+        "mlp": mlp,
+    }
+
+
+# ---------------------------------------------------------------------------
+# embedding lookup substrate
+# ---------------------------------------------------------------------------
+def embedding_lookup(table: jnp.ndarray, ids: jnp.ndarray) -> jnp.ndarray:
+    """Plain local lookup (single device / replicated table)."""
+    return table[ids]
+
+
+def make_sharded_lookup(mesh, axis: str = "model", batch_axes=None):
+    """Row-sharded lookup: local masked take + psum over the table axis.
+
+    table rows [V, d] shard over ``axis``; the ids' leading (batch) dim may
+    shard over ``batch_axes``.  Collective payload: one psum of the
+    [*ids.shape, d] output — XLA never materializes the full table anywhere.
+    """
+
+    def lookup(table, ids):
+        ids_rank = ids.ndim
+        batch = batch_axes if batch_axes else None
+        ids_spec = P(batch, *([None] * (ids_rank - 1)))
+        out_spec = P(batch, *([None] * ids_rank))
+
+        @partial(
+            jax.shard_map,
+            mesh=mesh,
+            in_specs=(P(axis, None), ids_spec),
+            out_specs=out_spec,
+            check_vma=False,
+        )
+        def _local(tab, ids_l):
+            shard = jax.lax.axis_index(axis)
+            rows = tab.shape[0]  # local rows
+            base = shard * rows
+            local = ids_l - base
+            ok = (local >= 0) & (local < rows)
+            safe = jnp.where(ok, local, 0)
+            out = tab[safe]
+            out = jnp.where(ok[..., None], out, 0.0)
+            return jax.lax.psum(out, axis)
+
+        return _local(table, ids)
+
+    return lookup
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+def forward(
+    cfg: RecsysConfig,
+    params: Dict,
+    hist_ids: jnp.ndarray,  # [B, seq_len] int32
+    target_id: jnp.ndarray,  # [B] int32
+    other_feats: jnp.ndarray,  # [B, n_other_feats] f32
+    lookup_fn=None,
+    compute_dtype=jnp.bfloat16,
+) -> jnp.ndarray:
+    """Returns CTR logits [B]."""
+    lookup = lookup_fn or embedding_lookup
+    b = hist_ids.shape[0]
+    seq_ids = jnp.concatenate([hist_ids, target_id[:, None]], axis=1)  # [B, S]
+    x = lookup(params["item_emb"], seq_ids).astype(compute_dtype)
+    x = x + params["pos_emb"][None, :, :].astype(compute_dtype)
+    d = cfg.embed_dim
+    hd = d // cfg.n_heads
+    for i in range(cfg.n_blocks):
+        p = params["blocks"][f"block{i}"]
+        h = rms_norm(x, p["norm1"].astype(compute_dtype))
+        q = (h @ p["wq"].astype(compute_dtype)).reshape(b, -1, cfg.n_heads, hd)
+        k = (h @ p["wk"].astype(compute_dtype)).reshape(b, -1, cfg.n_heads, hd)
+        v = (h @ p["wv"].astype(compute_dtype)).reshape(b, -1, cfg.n_heads, hd)
+        sc = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32)
+        sc = sc / jnp.sqrt(jnp.float32(hd))
+        attn = jax.nn.softmax(sc, axis=-1).astype(compute_dtype)
+        o = jnp.einsum("bhqk,bkhd->bqhd", attn, v).reshape(b, -1, d)
+        x = x + o @ p["wo"].astype(compute_dtype)
+        h = rms_norm(x, p["norm2"].astype(compute_dtype))
+        h = jax.nn.leaky_relu(h @ p["ffn_w1"].astype(compute_dtype) + p["ffn_b1"].astype(compute_dtype))
+        x = x + h @ p["ffn_w2"].astype(compute_dtype) + p["ffn_b2"].astype(compute_dtype)
+    flat = jnp.concatenate(
+        [x.reshape(b, -1), other_feats.astype(compute_dtype)], axis=-1
+    )
+    n_mlp = len(cfg.mlp_dims) + 1
+    h = flat
+    for i in range(n_mlp):
+        h = h @ params["mlp"][f"w{i}"].astype(compute_dtype) + params["mlp"][f"b{i}"].astype(compute_dtype)
+        if i < n_mlp - 1:
+            h = jax.nn.leaky_relu(h)
+    return h[:, 0].astype(jnp.float32)
+
+
+def bst_loss(logits: jnp.ndarray, labels: jnp.ndarray) -> jnp.ndarray:
+    """Binary cross entropy on CTR logits."""
+    return jnp.mean(
+        jnp.maximum(logits, 0) - logits * labels + jnp.log1p(jnp.exp(-jnp.abs(logits)))
+    )
+
+
+def user_tower(cfg: RecsysConfig, params: Dict, hist_ids, other_feats,
+               lookup_fn=None, compute_dtype=jnp.bfloat16) -> jnp.ndarray:
+    """User representation for retrieval: mean-pooled history embedding."""
+    lookup = lookup_fn or embedding_lookup
+    x = lookup(params["item_emb"], hist_ids).astype(compute_dtype)
+    return jnp.mean(x, axis=1)  # [B, d]
+
+
+def retrieval_scores(cfg: RecsysConfig, params: Dict, user_vec: jnp.ndarray,
+                     cand_ids: jnp.ndarray, lookup_fn=None,
+                     compute_dtype=jnp.bfloat16) -> jnp.ndarray:
+    """Score 1 user against n_candidates items: one batched dot, no loop."""
+    lookup = lookup_fn or embedding_lookup
+    cand = lookup(params["item_emb"], cand_ids).astype(compute_dtype)  # [C, d]
+    return (cand @ user_vec.reshape(-1, 1))[:, 0].astype(jnp.float32)

@@ -1,0 +1,72 @@
+"""Shared model building blocks (pure-functional, dict pytrees, no flax)."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, shape, scale: Optional[float] = None, dtype=jnp.float32):
+    """Truncated-normal fan-in init (maxtext-style)."""
+    fan_in = shape[-2] if len(shape) >= 2 else shape[-1]
+    std = (scale if scale is not None else 1.0) / jnp.sqrt(jnp.float32(fan_in))
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32):
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def rms_norm(x: jnp.ndarray, weight: jnp.ndarray, eps: float = 1e-6,
+             zero_centered: bool = False) -> jnp.ndarray:
+    """RMSNorm in f32 with bf16-safe cast-back.
+
+    ``zero_centered`` follows Gemma's (1 + w) parameterization.
+    """
+    dtype = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    x = x * jax.lax.rsqrt(var + eps)
+    w = (1.0 + weight) if zero_centered else weight
+    return (x * w).astype(dtype)
+
+
+def make_rope(positions: jnp.ndarray, d_head: int, theta: float = 10000.0):
+    """(sin, cos) tables for rotary embedding; positions [..., S]."""
+    half = d_head // 2
+    freqs = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    angles = positions.astype(jnp.float32)[..., None] * freqs  # [..., S, half]
+    return jnp.sin(angles), jnp.cos(angles)
+
+
+def apply_rope(x: jnp.ndarray, sin: jnp.ndarray, cos: jnp.ndarray) -> jnp.ndarray:
+    """Rotate pairs (x1, x2) -> (x1 cos - x2 sin, x2 cos + x1 sin).
+
+    x: [..., S, n_heads, d_head]; sin/cos: [..., S, half] broadcast over heads.
+    """
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    sin_ = sin[..., None, :].astype(x.dtype)  # add head axis
+    cos_ = cos[..., None, :].astype(x.dtype)
+    return jnp.concatenate([x1 * cos_ - x2 * sin_, x2 * cos_ + x1 * sin_], axis=-1)
+
+
+def activation(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": jax.nn.gelu,
+        "gelu_tanh": lambda x: jax.nn.gelu(x, approximate=True),
+        "relu": jax.nn.relu,
+    }[name]
+
+
+def softcap(x: jnp.ndarray, cap: Optional[float]) -> jnp.ndarray:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+def count_params(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))

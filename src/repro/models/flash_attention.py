@@ -1,0 +1,182 @@
+"""Flash attention (fwd + custom-VJP bwd) in pure JAX.
+
+Why this exists: a straightforward chunked-softmax attention keeps every
+(q-chunk x kv-chunk) probability tile alive for the backward — per layer
+that is O(S^2) f32 (24 GB/device for grok train_4k; found via the dry-run
+buffer dump).  The flash pattern (Dao et al.) saves only (out, m, l) per
+query position and *recomputes* probability tiles inside the backward, so
+activation memory is O(S * d) while the backward does ~2x forward flops —
+the standard trade.
+
+Supports GQA grouping, causal masking, sliding windows (dynamic scalar) and
+Gemma-2 tanh softcaps (with the correct d/ds tanh-cap factor in the bwd).
+Tiles map to (8,128)-aligned MXU dot_generals; chunk sizes are the VMEM
+knobs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -2.0e38
+
+
+def _mask(q_pos, k_pos, window, causal: bool):
+    distance = q_pos[:, None] - k_pos[None, :]
+    valid = (distance >= 0) if causal else jnp.ones_like(distance, bool)
+    return valid & (distance < window)
+
+
+def _fwd_impl(q, k, v, window, cap, qc: int, kc: int, causal: bool):
+    b, s, kv_heads, g, dh = q.shape
+    nq, nk = s // qc, s // kc
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    qr = jnp.moveaxis(q.reshape(b, nq, qc, kv_heads, g, dh), 1, 0)
+    kr = jnp.moveaxis(k.reshape(b, nk, kc, kv_heads, dh), 1, 0)
+    vr = jnp.moveaxis(v.reshape(b, nk, kc, kv_heads, dh), 1, 0)
+
+    def q_block(args):
+        qi, q_blk = args
+
+        q_pos = qi * qc + jnp.arange(qc)
+
+        def kv_step(carry, args2):
+            m, l, acc = carry
+            ki, k_blk, v_blk = args2
+            k_pos = ki * kc + jnp.arange(kc)
+            # MXU-native: bf16 operands, f32 accumulation (halves the score
+            # and probability tile traffic vs f32-upcast operands)
+            sc = jnp.einsum(
+                "bqhgd,bkhd->bhgqk", q_blk, k_blk,
+                preferred_element_type=jnp.float32,
+            ) * scale
+            if cap is not None:
+                sc = cap * jnp.tanh(sc / cap)
+            valid = _mask(q_pos, k_pos, window, causal)
+            sc = jnp.where(valid[None, None, None], sc, NEG_INF)
+            m_blk = jnp.max(sc, axis=-1)
+            m_new = jnp.maximum(m, m_blk)
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(sc - m_new[..., None])
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p.astype(q_blk.dtype), v_blk,
+                            preferred_element_type=jnp.float32)
+            return (m_new, l_new, acc * alpha[..., None] + pv), None
+
+        m0 = jnp.full((b, kv_heads, g, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kv_heads, g, qc), jnp.float32)
+        acc0 = jnp.zeros((b, kv_heads, g, qc, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, acc0), (jnp.arange(nk), kr, vr))
+        l_safe = jnp.maximum(l, 1e-30)
+        out = acc / l_safe[..., None]
+        return out, m, l_safe  # out [B,KV,G,qc,dh]
+
+    outs, ms, ls = jax.lax.map(q_block, (jnp.arange(nq), qr))
+    # outs [nq,B,KV,G,qc,dh] -> [B,S,KV,G,dh]; m/l [nq,B,KV,G,qc] -> [B,KV,G,S]
+    out = jnp.transpose(outs, (1, 0, 4, 2, 3, 5)).reshape(b, s, kv_heads, g, dh)
+    m = jnp.moveaxis(ms, 0, 3).reshape(b, kv_heads, g, s)
+    l = jnp.moveaxis(ls, 0, 3).reshape(b, kv_heads, g, s)
+    return out, m, l
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5, 6, 7))
+def flash_attention(q, k, v, window, cap=None, qc: int = 1024, kc: int = 1024,
+                    causal: bool = True):
+    """q [B,S,KV,G,dh], k/v [B,S,KV,dh] -> out [B,S,KV,G,dh] (f32).
+
+    ``window`` is a dynamic int32 scalar (sliding window; >= S disables).
+    """
+    s = q.shape[1]
+    out, _, _ = _fwd_impl(q, k, v, window, cap, min(qc, s), min(kc, s), causal)
+    return out
+
+
+def _fwd(q, k, v, window, cap, qc, kc, causal):
+    s = q.shape[1]
+    out, m, l = _fwd_impl(q, k, v, window, cap, min(qc, s), min(kc, s), causal)
+    return out, (q, k, v, window, out, m, l)
+
+
+def _bwd(cap, qc, kc, causal, res, dout):
+    q, k, v, window, out, m, l = res
+    b, s, kv_heads, g, dh = q.shape
+    qc = min(qc, s)
+    kc = min(kc, s)
+    nq, nk = s // qc, s // kc
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+
+    # delta_i = rowsum(dout * out) — the softmax-jacobian diagonal term
+    delta = jnp.sum(dout.astype(jnp.float32) * out.astype(jnp.float32), axis=-1)
+    # [B,S,KV,G] -> [B,KV,G,S]
+    delta = jnp.moveaxis(delta.reshape(b, s, kv_heads, g), 1, 3)
+
+    qr = jnp.moveaxis(q.reshape(b, nq, qc, kv_heads, g, dh), 1, 0)
+    dor = jnp.moveaxis(dout.reshape(b, nq, qc, kv_heads, g, dh), 1, 0)
+    kr = jnp.moveaxis(k.reshape(b, nk, kc, kv_heads, dh), 1, 0)
+    vr = jnp.moveaxis(v.reshape(b, nk, kc, kv_heads, dh), 1, 0)
+    mr = m.reshape(b, kv_heads, g, nq, qc)
+    lr = l.reshape(b, kv_heads, g, nq, qc)
+    dr = delta.reshape(b, kv_heads, g, nq, qc)
+
+    def q_step(carry, args):
+        dk_acc, dv_acc = carry  # [nk, B, kc, KV, dh] f32
+        qi, q_blk, do_blk = args
+        m_i = mr[:, :, :, qi]  # [B,KV,G,qc]
+        l_i = lr[:, :, :, qi]
+        d_i = dr[:, :, :, qi]
+        q_pos = qi * qc + jnp.arange(qc)
+
+        def kv_step(carry2, args2):
+            dq_blk, dk_acc, dv_acc = carry2
+            ki, k_blk, v_blk = args2
+            k_pos = ki * kc + jnp.arange(kc)
+            cdt = q_blk.dtype  # compute dtype for MXU tiles (f32 accum)
+            s_pre = jnp.einsum("bqhgd,bkhd->bhgqk", q_blk, k_blk,
+                               preferred_element_type=jnp.float32) * scale
+            if cap is not None:
+                s_c = cap * jnp.tanh(s_pre / cap)
+            else:
+                s_c = s_pre
+            valid = _mask(q_pos, k_pos, window, causal)
+            s_m = jnp.where(valid[None, None, None], s_c, NEG_INF)
+            p = jnp.exp(s_m - m_i[..., None]) / l_i[..., None]  # [B,KV,G,qc,kc]
+            dp = jnp.einsum("bqhgd,bkhd->bhgqk", do_blk, v_blk,
+                            preferred_element_type=jnp.float32)
+            ds = p * (dp - d_i[..., None])
+            if cap is not None:  # d tanh-cap / ds_pre
+                ds = ds * (1.0 - (s_c / cap) ** 2)
+            ds = jnp.where(valid[None, None, None], ds, 0.0)
+            ds16 = ds.astype(cdt)
+            p16 = p.astype(cdt)
+            dq_blk = dq_blk + jnp.einsum("bhgqk,bkhd->bqhgd", ds16, k_blk,
+                                         preferred_element_type=jnp.float32) * scale
+            dk_j = jnp.einsum("bhgqk,bqhgd->bkhd", ds16, q_blk,
+                              preferred_element_type=jnp.float32) * scale
+            dv_j = jnp.einsum("bhgqk,bqhgd->bkhd", p16, do_blk,
+                              preferred_element_type=jnp.float32)
+            dk_acc = dk_acc.at[ki].add(dk_j)
+            dv_acc = dv_acc.at[ki].add(dv_j)
+            return (dq_blk, dk_acc, dv_acc), None
+
+        dq0 = jnp.zeros((b, qc, kv_heads, g, dh), jnp.float32)
+        (dq_blk, dk_acc, dv_acc), _ = jax.lax.scan(
+            kv_step, (dq0, dk_acc, dv_acc), (jnp.arange(nk), kr, vr)
+        )
+        return (dk_acc, dv_acc), dq_blk
+
+    dk0 = jnp.zeros((nk, b, kc, kv_heads, dh), jnp.float32)
+    dv0 = jnp.zeros((nk, b, kc, kv_heads, dh), jnp.float32)
+    (dk_acc, dv_acc), dq_chunks = jax.lax.scan(
+        q_step, (dk0, dv0), (jnp.arange(nq), qr, dor)
+    )
+    dq = jnp.moveaxis(dq_chunks, 0, 1).reshape(b, s, kv_heads, g, dh).astype(q.dtype)
+    dk = jnp.moveaxis(dk_acc, 0, 1).reshape(b, s, kv_heads, dh).astype(k.dtype)
+    dv = jnp.moveaxis(dv_acc, 0, 1).reshape(b, s, kv_heads, dh).astype(v.dtype)
+    return dq, dk, dv, None  # window is non-differentiable
+
+
+flash_attention.defvjp(_fwd, _bwd)

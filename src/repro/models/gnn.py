@@ -1,0 +1,402 @@
+"""The four assigned GNN architectures over segment-op message passing.
+
+All models share the signature:
+    init(cfg, key, d_feat) -> params
+    apply(cfg, params, node_feat [N, d_feat], src [E], dst [E],
+          edge_mask [E] | None, n_nodes static) -> node embeddings [N, d_hidden]
+
+Message passing = gather(h[src]) -> transform -> segment-reduce onto dst.
+This IS the JAX sparse substrate (no CSR SpMM exists; see kernel_taxonomy
+§GNN) — with the Pallas ``leaf_spmm`` kernel as the TPU fast path for
+snapshot leaf-block views.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import GNNConfig
+from ..graph.segment_ops import (
+    segment_max,
+    segment_mean,
+    segment_min,
+    segment_std,
+    segment_sum,
+)
+from .common import dense_init
+
+
+def _mask(x: jnp.ndarray, edge_mask: Optional[jnp.ndarray]) -> jnp.ndarray:
+    if edge_mask is None:
+        return x
+    return x * edge_mask.astype(x.dtype).reshape((-1,) + (1,) * (x.ndim - 1))
+
+
+def _gather(h: jnp.ndarray, idx: jnp.ndarray, comm_dtype=None) -> jnp.ndarray:
+    """Edge gather with an optional communication dtype.
+
+    NOTE (hillclimb log): a bare ``h.astype(bf16)[idx]`` does NOT shrink the
+    wire payload — the SPMD partitioner still all-gathers the f32 operand
+    and converts afterwards (measured: 64x f32[2.4M,70] gathers on
+    ogb_products).  Use :func:`make_shardmap_gather` to pin the collective.
+    """
+    if comm_dtype is None:
+        return h[idx]
+    return h.astype(comm_dtype)[idx].astype(h.dtype)
+
+
+def make_shardmap_gather(mesh, node_axes, edge_axes):
+    """Explicit edge gather with bf16 collectives pinned by bitcast.
+
+    Hillclimb log (EXPERIMENTS.md §Perf): (1) ``h.astype(bf16)[idx]`` — the
+    SPMD partitioner gathers the f32 operand anyway; (2) an explicit
+    shard_map ``all_gather(h.astype(bf16))`` — XLA's simplifier HOISTS the
+    convert past the all-gather, restoring the f32 payload.  The fix that
+    sticks: bitcast bf16 -> uint16 before the collective (no pass reorders
+    an integer bitcast), gather locally, bitcast back.  A custom VJP sends
+    the cotangent through the same uint16 wire format, so the backward is a
+    bf16 reduce-scatter instead of an f32 one.
+    """
+    import functools as _ft
+
+    from jax.sharding import PartitionSpec as P
+
+    axes = node_axes if isinstance(node_axes, tuple) else (node_axes,)
+
+    @_ft.partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(P(node_axes, None), P(edge_axes)),
+        out_specs=P(edge_axes, None),
+        check_vma=False,
+    )
+    def _fwd_local(h_l, idx_l):
+        hb = jax.lax.bitcast_convert_type(h_l.astype(jnp.bfloat16), jnp.uint16)
+        hg = jax.lax.all_gather(hb, axes, axis=0, tiled=True)  # uint16 wire
+        hg = jax.lax.bitcast_convert_type(hg, jnp.bfloat16)
+        return hg[idx_l].astype(h_l.dtype)
+
+    e_axes = edge_axes if isinstance(edge_axes, tuple) else (edge_axes,)
+    rest = tuple(a for a in e_axes if a not in axes)
+
+    @_ft.partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(P(edge_axes, None), P(edge_axes), P(node_axes, None)),
+        out_specs=P(node_axes, None),
+        check_vma=False,
+    )
+    def _bwd_local(g_l, idx_l, h_like):
+        n_total = h_like.shape[0] * _mesh_prod(mesh, axes)
+        acc = jax.ops.segment_sum(
+            g_l.astype(jnp.float32), idx_l, num_segments=n_total
+        )
+        # bf16 on the wire for both collectives (sum semantics preserved)
+        out = jax.lax.psum_scatter(
+            acc.astype(jnp.bfloat16), axes, scatter_dimension=0, tiled=True
+        )
+        if rest:  # edge shards on non-node axes contribute partials too
+            out = jax.lax.psum(out, rest)
+        return out.astype(h_like.dtype)
+
+    @jax.custom_vjp
+    def gather_fn(h, idx):
+        return _fwd_local(h, idx)
+
+    def fwd(h, idx):
+        return _fwd_local(h, idx), (idx, h)
+
+    def bwd(res, g):
+        idx, h = res
+        return _bwd_local(g, idx, h), None
+
+    gather_fn.defvjp(fwd, bwd)
+    return gather_fn
+
+
+def _mesh_prod(mesh, axes) -> int:
+    n = 1
+    for a in axes:
+        n *= mesh.shape[a]
+    return n
+
+
+def make_shardmap_scatter(mesh, node_axes, edge_axes, n_nodes: int):
+    """Edge->node aggregation (segment-sum) with bf16 collectives.
+
+    The transpose of :func:`make_shardmap_gather`: each edge shard reduces
+    its messages into a full-width accumulator locally, the accumulators
+    merge with a bf16 reduce-scatter over the node axes (+ psum over the
+    remaining edge axes), and the custom VJP routes the cotangent back
+    through the bitcast-pinned bf16 all-gather.  Replaces XLA's default
+    f32 full-[N, d] scatter + all-reduce per layer.
+    """
+    import functools as _ft
+
+    from jax.sharding import PartitionSpec as P
+
+    axes = node_axes if isinstance(node_axes, tuple) else (node_axes,)
+    e_axes = edge_axes if isinstance(edge_axes, tuple) else (edge_axes,)
+    rest = tuple(a for a in e_axes if a not in axes)
+
+    @_ft.partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(P(edge_axes, None), P(edge_axes)),
+        out_specs=P(node_axes, None),
+        check_vma=False,
+    )
+    def _fwd_local(m_l, dst_l):
+        acc = jax.ops.segment_sum(
+            m_l.astype(jnp.float32), dst_l, num_segments=n_nodes
+        )
+        out = jax.lax.psum_scatter(
+            acc.astype(jnp.bfloat16), axes, scatter_dimension=0, tiled=True
+        )
+        if rest:
+            out = jax.lax.psum(out, rest)
+        return out.astype(m_l.dtype)
+
+    @_ft.partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(P(node_axes, None), P(edge_axes)),
+        out_specs=P(edge_axes, None),
+        check_vma=False,
+    )
+    def _bwd_local(g_l, dst_l):
+        gb = jax.lax.bitcast_convert_type(g_l.astype(jnp.bfloat16), jnp.uint16)
+        gg = jax.lax.all_gather(gb, axes, axis=0, tiled=True)
+        gg = jax.lax.bitcast_convert_type(gg, jnp.bfloat16)
+        return gg[dst_l].astype(g_l.dtype)
+
+    @jax.custom_vjp
+    def scatter_fn(msgs, dst):
+        return _fwd_local(msgs, dst)
+
+    def fwd(msgs, dst):
+        return _fwd_local(msgs, dst), dst
+
+    def bwd(dst, g):
+        return _bwd_local(g, dst), None
+
+    scatter_fn.defvjp(fwd, bwd)
+    return scatter_fn
+
+
+def _mlp_init(key, dims, dtype=jnp.float32):
+    ks = jax.random.split(key, len(dims) - 1)
+    return {
+        f"w{i}": dense_init(ks[i], (dims[i], dims[i + 1]), dtype=dtype)
+        for i in range(len(dims) - 1)
+    } | {f"b{i}": jnp.zeros((dims[i + 1],), dtype) for i in range(len(dims) - 1)}
+
+
+def _mlp_apply(p, x, n: int, act=jax.nn.relu, final_act: bool = False):
+    for i in range(n):
+        x = x @ p[f"w{i}"] + p[f"b{i}"]
+        if i < n - 1 or final_act:
+            x = act(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# GCN (Kipf & Welling) — symmetric-normalized SpMM
+# ---------------------------------------------------------------------------
+def gcn_init(cfg: GNNConfig, key, d_feat: int, dtype=jnp.float32) -> Dict:
+    dims = [d_feat] + [cfg.d_hidden] * cfg.n_layers
+    ks = jax.random.split(key, cfg.n_layers)
+    return {
+        f"layer{i}": {"w": dense_init(ks[i], (dims[i], dims[i + 1]), dtype=dtype),
+                      "b": jnp.zeros((dims[i + 1],), dtype)}
+        for i in range(cfg.n_layers)
+    }
+
+
+def gcn_apply(cfg, params, h, src, dst, edge_mask, n_nodes: int,
+              comm_dtype=None, constrain=None, gather_fn=None, scatter_fn=None):
+    gather_fn = gather_fn or (lambda t, i: _gather(t, i, comm_dtype))
+    scatter = scatter_fn or (lambda m, d: segment_sum(m, d, n_nodes))
+    ones = jnp.ones(src.shape, jnp.float32)
+    deg = segment_sum(_mask(ones, edge_mask), dst, n_nodes) + 1.0  # +self loop
+    inv_sqrt = jax.lax.rsqrt(deg)
+    coef = inv_sqrt[src] * inv_sqrt[dst]
+    for i in range(cfg.n_layers):
+        p = params[f"layer{i}"]
+        hw = h @ p["w"]
+        msg = _mask(gather_fn(hw, src) * coef[:, None], edge_mask)
+        agg = scatter(msg, dst) + hw * (inv_sqrt**2)[:, None]  # self loop
+        h = agg + p["b"]
+        if i < cfg.n_layers - 1:
+            h = jax.nn.relu(h)
+        if constrain is not None:
+            h = constrain(h)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# GIN (Xu et al.) — sum aggregation + MLP, learnable eps
+# ---------------------------------------------------------------------------
+def gin_init(cfg: GNNConfig, key, d_feat: int, dtype=jnp.float32) -> Dict:
+    dims_in = [d_feat] + [cfg.d_hidden] * (cfg.n_layers - 1)
+    ks = jax.random.split(key, cfg.n_layers)
+    return {
+        f"layer{i}": {
+            "mlp": _mlp_init(ks[i], [dims_in[i], cfg.d_hidden, cfg.d_hidden], dtype),
+            "eps": jnp.zeros((), dtype),
+        }
+        for i in range(cfg.n_layers)
+    }
+
+
+def gin_apply(cfg, params, h, src, dst, edge_mask, n_nodes: int,
+              comm_dtype=None, constrain=None, gather_fn=None, scatter_fn=None):
+    gather_fn = gather_fn or (lambda t, i: _gather(t, i, comm_dtype))
+    scatter = scatter_fn or (lambda m, d: segment_sum(m, d, n_nodes))
+    for i in range(cfg.n_layers):
+        p = params[f"layer{i}"]
+        agg = scatter(_mask(gather_fn(h, src), edge_mask), dst)
+        h = (1.0 + p["eps"]) * h + agg
+        h = _mlp_apply(p["mlp"], h, 2, final_act=True)
+        if constrain is not None:
+            h = constrain(h)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# GatedGCN (Bresson & Laurent) — edge-gated aggregation
+# ---------------------------------------------------------------------------
+def gatedgcn_init(cfg: GNNConfig, key, d_feat: int, dtype=jnp.float32) -> Dict:
+    d = cfg.d_hidden
+    ks = jax.random.split(key, cfg.n_layers + 1)
+    params = {"embed": {"w": dense_init(ks[-1], (d_feat, d), dtype=dtype),
+                        "b": jnp.zeros((d,), dtype)}}
+    for i in range(cfg.n_layers):
+        k = jax.random.split(ks[i], 5)
+        params[f"layer{i}"] = {
+            "A": dense_init(k[0], (d, d), dtype=dtype),
+            "B": dense_init(k[1], (d, d), dtype=dtype),
+            "U": dense_init(k[2], (d, d), dtype=dtype),
+            "V": dense_init(k[3], (d, d), dtype=dtype),
+            "norm_h": jnp.ones((d,), dtype),
+            "norm_scale": jnp.ones((d,), dtype),
+        }
+    return params
+
+
+def gatedgcn_apply(cfg, params, h, src, dst, edge_mask, n_nodes: int,
+                   comm_dtype=None, constrain=None, gather_fn=None, scatter_fn=None):
+    gather_fn = gather_fn or (lambda t, i: _gather(t, i, comm_dtype))
+    scatter = scatter_fn or (lambda m, d: segment_sum(m, d, n_nodes))
+    h = h @ params["embed"]["w"] + params["embed"]["b"]
+    for i in range(cfg.n_layers):
+        p = params[f"layer{i}"]
+        h_src = gather_fn(h, src)
+        h_dst = gather_fn(h, dst)
+        e = h_dst @ p["A"] + h_src @ p["B"]  # edge gates
+        eta = jax.nn.sigmoid(e)
+        eta = _mask(eta, edge_mask)
+        num = scatter(eta * (h_src @ p["V"]), dst)
+        den = scatter(eta, dst) + 1e-6
+        h_new = h @ p["U"] + num / den
+        # lightweight layernorm substitute (RMS) + residual + relu
+        rms = jax.lax.rsqrt(jnp.mean(h_new * h_new, axis=-1, keepdims=True) + 1e-6)
+        h = h + jax.nn.relu(h_new * rms * p["norm_h"])
+        if constrain is not None:
+            h = constrain(h)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# PNA (Corso et al.) — multi-aggregator x degree scalers
+# ---------------------------------------------------------------------------
+def pna_init(cfg: GNNConfig, key, d_feat: int, dtype=jnp.float32) -> Dict:
+    d = cfg.d_hidden
+    n_agg = 4  # mean/max/min/std
+    n_scale = 3  # identity/amplification/attenuation
+    ks = jax.random.split(key, cfg.n_layers + 1)
+    params = {"embed": {"w": dense_init(ks[-1], (d_feat, d), dtype=dtype),
+                        "b": jnp.zeros((d,), dtype)}}
+    for i in range(cfg.n_layers):
+        params[f"layer{i}"] = {
+            "post": _mlp_init(ks[i], [d * n_agg * n_scale + d, d], dtype),
+        }
+    return params
+
+
+def pna_apply(cfg, params, h, src, dst, edge_mask, n_nodes: int, mean_log_deg: float = 1.0,
+              comm_dtype=None, constrain=None, gather_fn=None, scatter_fn=None):
+    gather_fn = gather_fn or (lambda t, i: _gather(t, i, comm_dtype))
+    scatter = scatter_fn or (lambda m, d: segment_sum(m, d, n_nodes))
+    h = h @ params["embed"]["w"] + params["embed"]["b"]
+    ones = jnp.ones(src.shape, jnp.float32)
+    deg = segment_sum(_mask(ones, edge_mask), dst, n_nodes)
+    log_deg = jnp.log1p(deg)[:, None]
+    amp = log_deg / mean_log_deg
+    att = mean_log_deg / jnp.maximum(log_deg, 1e-6)
+    for i in range(cfg.n_layers):
+        p = params[f"layer{i}"]
+        msg = _mask(gather_fn(h, src), edge_mask)
+        aggs = [
+            segment_mean(msg, dst, n_nodes),
+            segment_max(jnp.where(edge_mask[:, None], msg, -jnp.inf) if edge_mask is not None else msg, dst, n_nodes),
+            segment_min(jnp.where(edge_mask[:, None], msg, jnp.inf) if edge_mask is not None else msg, dst, n_nodes),
+            segment_std(msg, dst, n_nodes),
+        ]
+        aggs[1] = jnp.where(jnp.isfinite(aggs[1]), aggs[1], 0.0)
+        aggs[2] = jnp.where(jnp.isfinite(aggs[2]), aggs[2], 0.0)
+        stacked = jnp.concatenate(aggs, axis=-1)  # [N, 4d]
+        scaled = jnp.concatenate([stacked, stacked * amp, stacked * att], axis=-1)
+        h = _mlp_apply(p["post"], jnp.concatenate([h, scaled], axis=-1), 1)
+        h = jax.nn.relu(h)
+        if constrain is not None:
+            h = constrain(h)
+    return h
+
+
+# ---------------------------------------------------------------------------
+# registry + task heads
+# ---------------------------------------------------------------------------
+GNN_FNS = {
+    "gcn": (gcn_init, gcn_apply),
+    "gin": (gin_init, gin_apply),
+    "gatedgcn": (gatedgcn_init, gatedgcn_apply),
+    "pna": (pna_init, pna_apply),
+}
+
+
+def init_gnn(cfg: GNNConfig, key, d_feat: int, dtype=jnp.float32) -> Dict:
+    init, _ = GNN_FNS[cfg.kind]
+    params = {"gnn": init(cfg, key, d_feat, dtype)}
+    k2 = jax.random.fold_in(key, 1)
+    params["head"] = {
+        "w": dense_init(k2, (cfg.d_hidden, cfg.n_classes), dtype=dtype),
+        "b": jnp.zeros((cfg.n_classes,), dtype),
+    }
+    return params
+
+
+def gnn_logits(cfg: GNNConfig, params, node_feat, src, dst, edge_mask, n_nodes: int,
+               graph_ids: Optional[jnp.ndarray] = None, n_graphs: int = 0,
+               comm_dtype=None, constrain=None, gather_fn=None, scatter_fn=None):
+    _, apply = GNN_FNS[cfg.kind]
+    kw = {}
+    if cfg.kind != "pna" and scatter_fn is not None:
+        kw["scatter_fn"] = scatter_fn  # pna's max/min aggregators keep default
+    h = apply(cfg, params["gnn"], node_feat, src, dst, edge_mask, n_nodes,
+              comm_dtype=comm_dtype, constrain=constrain, gather_fn=gather_fn, **kw)
+    if graph_ids is not None:  # graph-level task: mean pool then classify
+        pooled = segment_mean(h, graph_ids, n_graphs)
+        h = pooled
+    return h @ params["head"]["w"] + params["head"]["b"]
+
+
+def gnn_loss(logits, labels, mask=None):
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    ll = jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    if mask is not None:
+        return -jnp.sum(ll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+    return -jnp.mean(ll)

@@ -1,0 +1,271 @@
+"""Mixture-of-Experts FFN via sorted grouped GEMM (``jax.lax.ragged_dot``).
+
+TPU-native MoE dispatch without GShard's O(T*E*C) dispatch tensors:
+tokens' (token, expert) assignments are sorted by expert id, expert GEMMs run
+as one ragged_dot over the contiguous groups (exact top-k FLOPs — the
+MODEL_FLOPS/HLO_FLOPs roofline ratio stays ~1), and results scatter back with
+a segment-sum.  A dense masked path remains for tiny tests and ablation.
+
+Expert-TP sharding: expert weights shard on the hidden (F) axis over the
+``model`` mesh axis; dispatch stays local; the down-projection emits partials
+reduced by XLA's all-reduce — the same collective pattern as a dense TP FFN.
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import LMConfig
+from .common import activation, dense_init
+
+
+def init_moe_layer(cfg: LMConfig, key, dtype=jnp.float32) -> Dict[str, jnp.ndarray]:
+    assert cfg.moe is not None
+    L, D = cfg.n_layers, cfg.d_model
+    E, F = cfg.moe.n_experts, cfg.moe.d_ff
+    keys = jax.random.split(key, 4)
+    return {
+        "router": dense_init(keys[0], (L, D, E), dtype=dtype),
+        "we_gate": dense_init(keys[1], (L, E, D, F), dtype=dtype),
+        "we_up": dense_init(keys[2], (L, E, D, F), dtype=dtype),
+        "we_down": dense_init(keys[3], (L, E, F, D), dtype=dtype),
+    }
+
+
+def moe_ffn(cfg: LMConfig, lw: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    """x: [T, D] -> [T, D]. lw holds this layer's (unstacked) weights."""
+    assert cfg.moe is not None
+    if cfg.moe.impl == "dense":
+        return _moe_dense(cfg, lw, x)
+    if cfg.moe.impl == "capacity":
+        return _moe_capacity(cfg, lw, x)
+    return _moe_ragged(cfg, lw, x)
+
+
+def router_probs(cfg: LMConfig, lw: Dict, x: jnp.ndarray):
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), lw["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_i = jax.lax.top_k(probs, cfg.moe.top_k)
+    top_p = top_p / jnp.sum(top_p, axis=-1, keepdims=True)  # renormalize (Mixtral)
+    return top_p, top_i
+
+
+def _moe_ragged(cfg: LMConfig, lw: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    T, D = x.shape
+    E, K = cfg.moe.n_experts, cfg.moe.top_k
+    act = activation(cfg.act)
+    top_p, top_i = router_probs(cfg, lw, x)
+
+    flat_e = top_i.reshape(-1)  # [T*K]
+    order = jnp.argsort(flat_e)  # stable — groups tokens by expert
+    tok_of = order // K
+    xs = x[tok_of]  # [T*K, D] gathered in expert order
+    group_sizes = jnp.bincount(flat_e, length=E).astype(jnp.int32)
+
+    h = act(jax.lax.ragged_dot(xs, lw["we_gate"], group_sizes))
+    h = h * jax.lax.ragged_dot(xs, lw["we_up"], group_sizes)
+    y = jax.lax.ragged_dot(h, lw["we_down"], group_sizes)  # [T*K, D]
+
+    w = top_p.reshape(-1)[order].astype(y.dtype)
+    out = jax.ops.segment_sum(y * w[:, None], tok_of, num_segments=T)
+    return out.astype(x.dtype)
+
+
+def _moe_capacity(cfg: LMConfig, lw: Dict, x: jnp.ndarray,
+                  capacity_factor: float = 1.25) -> jnp.ndarray:
+    """Capacity-based dispatch (GShard lineage): sort (token, expert) pairs
+    by expert, pad each expert's group to a fixed capacity C, run batched
+    expert GEMMs ``[E, C, D] x [E, D, F]``, and scatter-add back.
+
+    This is the production path: bounded memory (E*C*F intermediate),
+    ~capacity_factor x top-k FLOPs, and identical shapes on CPU and TPU —
+    unlike ragged_dot, whose CPU fallback materializes all-experts compute.
+    Tokens overflowing an expert's capacity are dropped (standard).
+    """
+    T, D = x.shape
+    E, K = cfg.moe.n_experts, cfg.moe.top_k
+    act = activation(cfg.act)
+    top_p, top_i = router_probs(cfg, lw, x)
+
+    flat_e = top_i.reshape(-1)  # [T*K]
+    order = jnp.argsort(flat_e)  # stable: groups by expert
+    tok_of = order // K
+    w_of = top_p.reshape(-1)[order]
+    sorted_e = flat_e[order]
+    group_sizes = jnp.bincount(flat_e, length=E)
+    starts = jnp.cumsum(group_sizes) - group_sizes  # [E]
+
+    c = int(-(-(T * K) // E * capacity_factor))
+    c = -(-c // 128) * 128  # MXU-aligned capacity
+
+    slot = starts[:, None] + jnp.arange(c)[None, :]  # [E, C] indices into order
+    valid = jnp.arange(c)[None, :] < group_sizes[:, None]
+    slot = jnp.clip(slot, 0, T * K - 1)
+    rows = tok_of[slot]  # [E, C] token ids
+    xs = x[rows] * valid[..., None].astype(x.dtype)  # [E, C, D]
+
+    h = act(jnp.einsum("ecd,edf->ecf", xs, lw["we_gate"]))
+    h = h * jnp.einsum("ecd,edf->ecf", xs, lw["we_up"])
+    y = jnp.einsum("ecf,efd->ecd", h, lw["we_down"])  # [E, C, D]
+
+    wslot = (w_of[slot] * valid).astype(y.dtype)  # [E, C]
+    out = jax.ops.segment_sum(
+        (y * wslot[..., None]).reshape(E * c, D),
+        rows.reshape(E * c),
+        num_segments=T,
+    )
+    return out.astype(x.dtype)
+
+
+def _moe_dense(cfg: LMConfig, lw: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Masked all-experts path (O(T*E) compute) — tests / tiny configs only."""
+    T, D = x.shape
+    E, K = cfg.moe.n_experts, cfg.moe.top_k
+    act = activation(cfg.act)
+    top_p, top_i = router_probs(cfg, lw, x)
+    # combine weights [T, E]
+    comb = jnp.zeros((T, E), jnp.float32)
+    comb = comb.at[jnp.arange(T)[:, None], top_i].set(top_p)
+    h = act(jnp.einsum("td,edf->tef", x, lw["we_gate"]))
+    h = h * jnp.einsum("td,edf->tef", x, lw["we_up"])
+    y = jnp.einsum("tef,efd->ted", h, lw["we_down"])
+    return jnp.einsum("ted,te->td", y, comb.astype(y.dtype)).astype(x.dtype)
+
+
+def make_weight_stationary_moe_ffn(cfg: LMConfig, mesh, dp, tp: str = "model"):
+    """Decode-path MoE: weights stay put, activations move.
+
+    The train-path block FSDP-gathers each layer's expert weights
+    (~3.6 GB/layer for grok-1) — amortized over 65k tokens that's fine, but
+    a one-token decode batch moves 68.8 GB of weights to process ~100 KB of
+    activations.  Here the expert weights stay fully sharded
+    ([E, D/dp, F/tp]); the (tiny) token batch is all-gathered, every shard
+    contracts its (D, F) tile, and partial results merge with activation-
+    sized psums: per layer ~30 MB of collectives instead of ~1.1 GB.
+    """
+    import functools as _ft
+
+    from jax.sharding import PartitionSpec as P
+
+    dp_axes = dp if isinstance(dp, tuple) else (dp,)
+    n_dp = 1
+    for a in dp_axes:
+        n_dp *= mesh.shape[a]
+
+    @_ft.partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(
+            {
+                "router": P(),
+                "we_gate": P(None, dp, tp),
+                "we_up": P(None, dp, tp),
+                "we_down": P(None, tp, dp),
+            },
+            P(dp, None),
+        ),
+        out_specs=P(),
+        check_vma=False,
+    )
+    def _block(lw_l, x_l):
+        act = activation(cfg.act)
+        E, K = cfg.moe.n_experts, cfg.moe.top_k
+        # gather the (tiny) token batch; dispatch is computed redundantly
+        xg = jax.lax.all_gather(x_l, dp_axes, axis=0, tiled=True)  # [T_g, D]
+        T, D = xg.shape
+        d_loc = D // n_dp
+        top_p, top_i = router_probs(cfg, {"router": lw_l["router"]}, xg)
+        flat_e = top_i.reshape(-1)
+        order = jnp.argsort(flat_e)
+        tok_of = order // K
+        w_of = top_p.reshape(-1)[order]
+        group_sizes = jnp.bincount(flat_e, length=E)
+        starts = jnp.cumsum(group_sizes) - group_sizes
+        c = int(-(-(T * K) // E * 1.25))
+        c = -(-c // 128) * 128
+        slot = jnp.clip(starts[:, None] + jnp.arange(c)[None, :], 0, T * K - 1)
+        valid = jnp.arange(c)[None, :] < group_sizes[:, None]
+        rows = tok_of[slot]
+        xs = xg[rows] * valid[..., None].astype(xg.dtype)  # [E, C, D]
+        # this shard's D tile
+        idx = jnp.int32(0)
+        mul = 1
+        for a in reversed(dp_axes):
+            idx = idx + jax.lax.axis_index(a) * mul
+            mul = mul * mesh.shape[a]
+        xs_loc = jax.lax.dynamic_slice_in_dim(xs, idx * d_loc, d_loc, axis=2)
+        # partial contractions over the local (D, F) tile + activation psums
+        hg = jax.lax.psum(jnp.einsum("ecd,edf->ecf", xs_loc, lw_l["we_gate"]), dp_axes)
+        hu = jax.lax.psum(jnp.einsum("ecd,edf->ecf", xs_loc, lw_l["we_up"]), dp_axes)
+        h = act(hg) * hu  # [E, C, F/tp]
+        y = jnp.einsum("ecf,efd->ecd", h, lw_l["we_down"])  # [E, C, D/dp] partial-F
+        wslot = (w_of[slot] * valid).astype(y.dtype)
+        out_loc = jax.ops.segment_sum(
+            (y * wslot[..., None]).reshape(E * c, d_loc),
+            rows.reshape(E * c), num_segments=T,
+        )
+        out_loc = jax.lax.psum(out_loc, tp)  # merge F partials
+        # reassemble full D (activation-sized)
+        out = jax.lax.all_gather(out_loc, dp_axes, axis=1, tiled=True)  # [T, D]
+        return out.astype(x_l.dtype)
+
+    def moe_fn(lw: Dict, x2d: jnp.ndarray) -> jnp.ndarray:
+        sub = {k: lw[k] for k in ("router", "we_gate", "we_up", "we_down")}
+        return _block(sub, x2d)
+
+    return moe_fn
+
+
+def make_sharded_moe_ffn(cfg: LMConfig, mesh, dp, tp: str = "model"):
+    """Shard-mapped MoE block: local dispatch per data shard + expert TP.
+
+    Tokens stay on their data shard (dispatch/argsort is LOCAL — a global
+    sort would replicate [E, C_global, D] gathers on every device); expert
+    weights split their hidden axis over ``tp``; the down-projection's
+    partials merge with one psum over ``tp`` — the same collective pattern
+    as a dense TP FFN.  Entering the block all-gathers the sequence axis
+    (the Megatron SP <-> TP transition).
+    """
+    import functools as _ft
+
+    from jax.sharding import PartitionSpec as P
+
+    @_ft.partial(
+        jax.shard_map,
+        mesh=mesh,
+        in_specs=(
+            {
+                "router": P(),
+                "we_gate": P(None, None, tp),
+                "we_up": P(None, None, tp),
+                "we_down": P(None, tp, None),
+            },
+            P(dp, None),
+        ),
+        out_specs=P(dp, None),
+        check_vma=False,
+    )
+    def _block(lw_l, x_l):
+        y = _moe_capacity(cfg, lw_l, x_l)
+        return jax.lax.psum(y, tp)
+
+    def moe_fn(lw: Dict, x2d: jnp.ndarray) -> jnp.ndarray:
+        sub = {k: lw[k] for k in ("router", "we_gate", "we_up", "we_down")}
+        return _block(sub, x2d)
+
+    return moe_fn
+
+
+def load_balance_loss(cfg: LMConfig, lw: Dict, x: jnp.ndarray) -> jnp.ndarray:
+    """Switch-style auxiliary loss: E * sum_e f_e * p_e."""
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32), lw["router"].astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    _, top_i = jax.lax.top_k(probs, cfg.moe.top_k)
+    E = cfg.moe.n_experts
+    counts = jnp.bincount(top_i.reshape(-1), length=E).astype(jnp.float32)
+    f = counts / jnp.maximum(jnp.sum(counts), 1.0)
+    p = jnp.mean(probs, axis=0)
+    return E * jnp.sum(f * p)

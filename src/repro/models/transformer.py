@@ -1,0 +1,399 @@
+"""Unified decoder-only transformer LM covering all five assigned archs.
+
+Feature matrix (selected per config):
+- GQA (n_kv_heads < n_heads), RoPE, RMSNorm
+- qk-norm (qwen3), QKV bias (qwen2.5)
+- attention/final logit softcaps, pre+post norms, zero-centered norms,
+  local(sliding-window)/global alternating layers, embedding scale (gemma2)
+- MoE FFN via sorted grouped GEMM = ``jax.lax.ragged_dot`` (grok-1, granite)
+
+Pure functional: ``init_params`` builds a dict pytree with layer-stacked
+leading axes; ``forward``/``decode_step`` consume it under ``lax.scan``.
+Memory-efficient attention: lax.map over query chunks x lax.scan over KV
+chunks with online softmax — O(S) activation memory, exact results.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import LMConfig
+from .common import (
+    activation,
+    apply_rope,
+    dense_init,
+    embed_init,
+    make_rope,
+    rms_norm,
+    softcap,
+)
+from .flash_attention import flash_attention
+from .moe import init_moe_layer, moe_ffn
+
+NEG_INF = -2.0e38
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_params(cfg: LMConfig, key, dtype=jnp.float32) -> Dict:
+    keys = jax.random.split(key, 16)
+    L, D, H, KV, dh, F = (
+        cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.d_head, cfg.d_ff,
+    )
+    layers: Dict[str, jnp.ndarray] = {
+        "attn_norm": jnp.zeros((L, D), dtype) if cfg.zero_centered_norm else jnp.ones((L, D), dtype),
+        "ffn_norm": jnp.zeros((L, D), dtype) if cfg.zero_centered_norm else jnp.ones((L, D), dtype),
+        "wq": dense_init(keys[0], (L, D, H * dh), dtype=dtype),
+        "wk": dense_init(keys[1], (L, D, KV * dh), dtype=dtype),
+        "wv": dense_init(keys[2], (L, D, KV * dh), dtype=dtype),
+        "wo": dense_init(keys[3], (L, H * dh, D), dtype=dtype),
+    }
+    if cfg.qkv_bias:
+        layers["bq"] = jnp.zeros((L, H * dh), dtype)
+        layers["bk"] = jnp.zeros((L, KV * dh), dtype)
+        layers["bv"] = jnp.zeros((L, KV * dh), dtype)
+    if cfg.qk_norm:
+        layers["q_norm"] = jnp.ones((L, dh), dtype)
+        layers["k_norm"] = jnp.ones((L, dh), dtype)
+    if cfg.post_norms:
+        layers["post_attn_norm"] = jnp.zeros((L, D), dtype)
+        layers["post_ffn_norm"] = jnp.zeros((L, D), dtype)
+    if cfg.moe is not None:
+        layers.update(init_moe_layer(cfg, keys[4], dtype))
+    else:
+        layers["w_gate"] = dense_init(keys[5], (L, D, F), dtype=dtype)
+        layers["w_up"] = dense_init(keys[6], (L, D, F), dtype=dtype)
+        layers["w_down"] = dense_init(keys[7], (L, F, D), dtype=dtype)
+    params = {
+        "embed": embed_init(keys[8], (cfg.vocab, D), dtype),
+        "final_norm": jnp.zeros((D,), dtype) if cfg.zero_centered_norm else jnp.ones((D,), dtype),
+        "layers": layers,
+    }
+    if not cfg.tie_embeddings:
+        params["unembed"] = dense_init(keys[9], (D, cfg.vocab), dtype=dtype)
+    return params
+
+
+def layer_is_local(cfg: LMConfig) -> jnp.ndarray:
+    """Per-layer sliding-window flag ([L] bool). Gemma-2: even layers local."""
+    if cfg.layer_pattern == "local_global":
+        return jnp.arange(cfg.n_layers) % 2 == 0
+    return jnp.zeros(cfg.n_layers, bool)
+
+
+# ---------------------------------------------------------------------------
+# attention — chunked, online softmax, O(S) memory
+# ---------------------------------------------------------------------------
+def chunked_attention(
+    q: jnp.ndarray,  # [B, S, H, dh]
+    k: jnp.ndarray,  # [B, S, KV, dh]
+    v: jnp.ndarray,  # [B, S, KV, dh]
+    *,
+    window: jnp.ndarray,  # scalar int32 — live attention span (S for global)
+    cap: Optional[float],
+    q_chunk: int = 1024,
+    kv_chunk: int = 1024,
+    causal: bool = True,
+) -> jnp.ndarray:
+    b, s, h, dh = q.shape
+    kv_heads = k.shape[2]
+    g = h // kv_heads
+    qc = min(q_chunk, s)
+    kc = min(kv_chunk, s)
+    nq, nk = s // qc, s // kc
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+
+    q = q.reshape(b, nq, qc, kv_heads, g, dh)
+    k = k.reshape(b, nk, kc, kv_heads, dh)
+    v = v.reshape(b, nk, kc, kv_heads, dh)
+
+    def q_block(args):
+        qi, q_blk = args  # q_blk [B, qc, KV, G, dh]
+        q_pos = qi * qc + jnp.arange(qc)
+
+        def kv_step(carry, args2):
+            m, l, acc = carry
+            ki, k_blk, v_blk = args2  # [B, kc, KV, dh]
+            k_pos = ki * kc + jnp.arange(kc)
+            sc = jnp.einsum(
+                "bqhgd,bkhd->bhgqk",
+                q_blk.astype(jnp.float32),
+                k_blk.astype(jnp.float32),
+            ) * scale
+            sc = softcap(sc, cap)
+            distance = q_pos[:, None] - k_pos[None, :]  # [qc, kc]
+            valid = (distance >= 0) if causal else jnp.ones_like(distance, bool)
+            valid &= distance < window  # sliding window (window >= S: no-op)
+            sc = jnp.where(valid[None, None, None], sc, NEG_INF)
+            m_blk = jnp.max(sc, axis=-1)
+            m_new = jnp.maximum(m, m_blk)
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(sc - m_new[..., None])
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhgqk,bkhd->bhgqd", p, v_blk.astype(jnp.float32))
+            acc_new = acc * alpha[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((b, kv_heads, g, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kv_heads, g, qc), jnp.float32)
+        acc0 = jnp.zeros((b, kv_heads, g, qc, dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step,
+            (m0, l0, acc0),
+            (jnp.arange(nk), jnp.moveaxis(k, 1, 0), jnp.moveaxis(v, 1, 0)),
+        )
+        out = acc / jnp.maximum(l[..., None], 1e-30)  # [B, KV, G, qc, dh]
+        return jnp.moveaxis(out, 3, 1).reshape(b, qc, kv_heads * g, dh)
+
+    outs = jax.lax.map(q_block, (jnp.arange(nq), jnp.moveaxis(q, 1, 0)))
+    # outs: [nq, B, qc, H, dh] -> [B, S, H, dh]
+    return jnp.moveaxis(outs, 0, 1).reshape(b, s, h, dh)
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,  # [B, 1, H, dh]
+    k_cache: jnp.ndarray,  # [B, S, KV, dh]
+    v_cache: jnp.ndarray,
+    pos: jnp.ndarray,  # scalar int32 — decode position (right-aligned batch)
+    window: jnp.ndarray,
+    cap: Optional[float],
+) -> jnp.ndarray:
+    """Plain XLA decode attention (one token vs full cache)."""
+    b, s, kv, dh = k_cache.shape
+    h = q.shape[2]
+    g = h // kv
+    scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+    qg = q.reshape(b, kv, g, dh)
+    sc = jnp.einsum("bhgd,bshd->bhgs", qg.astype(jnp.float32), k_cache.astype(jnp.float32))
+    sc = softcap(sc * scale, cap)
+    s_pos = jnp.arange(s)
+    dist = pos - s_pos
+    valid = (dist >= 0) & (dist < window)
+    sc = jnp.where(valid[None, None, None, :], sc, NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, h, dh)
+
+
+# ---------------------------------------------------------------------------
+# layer + forward
+# ---------------------------------------------------------------------------
+def _project_qkv(cfg: LMConfig, lw: Dict, x: jnp.ndarray, positions: jnp.ndarray):
+    b, s, d = x.shape
+    H, KV, dh = cfg.n_heads, cfg.n_kv_heads, cfg.d_head
+    q = jnp.einsum("bsd,dh->bsh", x, lw["wq"])
+    k = jnp.einsum("bsd,dh->bsh", x, lw["wk"])
+    v = jnp.einsum("bsd,dh->bsh", x, lw["wv"])
+    if cfg.qkv_bias:
+        q, k, v = q + lw["bq"], k + lw["bk"], v + lw["bv"]
+    q = q.reshape(b, s, H, dh)
+    k = k.reshape(b, s, KV, dh)
+    v = v.reshape(b, s, KV, dh)
+    if cfg.qk_norm:
+        q = rms_norm(q, lw["q_norm"], cfg.norm_eps)
+        k = rms_norm(k, lw["k_norm"], cfg.norm_eps)
+    sin, cos = make_rope(positions, dh, cfg.rope_theta)
+    q = apply_rope(q, sin, cos)
+    k = apply_rope(k, sin, cos)
+    return q, k, v
+
+
+def _ffn(cfg: LMConfig, lw: Dict, x: jnp.ndarray, moe_fn=None) -> jnp.ndarray:
+    act = activation(cfg.act)
+    if cfg.moe is not None:
+        b, s, d = x.shape
+        if moe_fn is not None:  # sharded dispatch (moe.make_sharded_moe_ffn)
+            y = moe_fn(lw, x.reshape(b * s, d))
+        else:
+            y = moe_ffn(cfg, lw, x.reshape(b * s, d))
+        return y.reshape(b, s, d)
+    h = act(jnp.einsum("bsd,df->bsf", x, lw["w_gate"]))
+    h = h * jnp.einsum("bsd,df->bsf", x, lw["w_up"])
+    return jnp.einsum("bsf,fd->bsd", h, lw["w_down"])
+
+
+def _layer(cfg: LMConfig, lw: Dict, is_local, x, positions, constrain, seq_len: int,
+           chunk: int = 1024, moe_fn=None):
+    zc = cfg.zero_centered_norm
+    window = jnp.where(
+        is_local & (cfg.local_window is not None),
+        jnp.int32(cfg.local_window or 0),
+        jnp.int32(seq_len),
+    )
+    h = rms_norm(x, lw["attn_norm"], cfg.norm_eps, zc)
+    q, k, v = _project_qkv(cfg, lw, h, positions)
+    q, k, v = constrain(q), constrain(k), constrain(v)
+    b, s, _, dh = q.shape
+    qg = q.reshape(b, s, cfg.n_kv_heads, cfg.n_heads // cfg.n_kv_heads, dh)
+    attn = flash_attention(qg, k, v, window, cfg.attn_softcap, chunk, chunk)
+    attn = attn.reshape(x.shape[0], x.shape[1], -1).astype(x.dtype)
+    attn = jnp.einsum("bsh,hd->bsd", attn, lw["wo"])
+    if cfg.post_norms:
+        attn = rms_norm(attn, lw["post_attn_norm"], cfg.norm_eps, zc)
+    x = x + attn
+    h = rms_norm(x, lw["ffn_norm"], cfg.norm_eps, zc)
+    f = _ffn(cfg, lw, h, moe_fn)
+    if cfg.post_norms:
+        f = rms_norm(f, lw["post_ffn_norm"], cfg.norm_eps, zc)
+    return x + f
+
+
+def forward(
+    cfg: LMConfig,
+    params: Dict,
+    tokens: jnp.ndarray,  # [B, S] int32
+    compute_dtype=jnp.bfloat16,
+    remat: bool = True,
+    activation_spec=None,  # PartitionSpec for intra-layer q/k/v constraint
+    carry_spec=None,  # PartitionSpec for the residual stream between layers
+    unroll: int = 1,  # layer-scan unroll (dry-run cost lowering uses n_layers)
+    attn_chunk: Optional[int] = None,  # None -> 1024; <=0 -> unchunked (full S)
+    moe_fn=None,  # sharded MoE dispatch (moe.make_sharded_moe_ffn)
+) -> jnp.ndarray:
+    """Full forward -> logits [B, S, vocab] (f32)."""
+    b, s = tokens.shape
+    x = params["embed"][tokens].astype(compute_dtype)
+    if cfg.embed_scale:
+        x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(compute_dtype)
+    positions = jnp.arange(s)[None, :]
+    is_local = layer_is_local(cfg)
+    chunk = 1024 if attn_chunk is None else (s if attn_chunk <= 0 else attn_chunk)
+
+    def constrain(t):
+        if activation_spec is not None:
+            return jax.lax.with_sharding_constraint(t, activation_spec)
+        return t
+
+    def constrain_carry(t):
+        if carry_spec is not None:
+            return jax.lax.with_sharding_constraint(t, carry_spec)
+        return t
+
+    blk = max(1, cfg.remat_block)
+    n_blocks = cfg.n_layers // blk if cfg.n_layers % blk == 0 else 1
+    if n_blocks == 1:
+        blk = 1
+        n_blocks = cfg.n_layers
+
+    def body(x, scanned):
+        lw, loc = scanned  # leading axis: [blk]
+        lw = jax.tree.map(lambda p: p.astype(compute_dtype), lw)
+        for i in range(blk):  # static inner loop: blk layers per remat block
+            lw_i = jax.tree.map(lambda p: p[i], lw)
+            x = _layer(cfg, lw_i, loc[i], x, positions, constrain, s, chunk, moe_fn)
+        return constrain_carry(x), None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    blocked = jax.tree.map(
+        lambda p: p.reshape((n_blocks, blk) + p.shape[1:]), params["layers"]
+    )
+    is_local_b = is_local.reshape(n_blocks, blk)
+    x, _ = jax.lax.scan(body, x, (blocked, is_local_b), unroll=unroll)
+    x = rms_norm(x, params["final_norm"].astype(compute_dtype), cfg.norm_eps, cfg.zero_centered_norm)
+    unembed = params.get("unembed")
+    if unembed is None:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(compute_dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, unembed.astype(compute_dtype))
+    # softcap in f32, but logits stay in compute dtype: an f32 logits output
+    # would make every backward cotangent f32 (2x activation memory + HBM
+    # traffic); the loss upcasts locally instead.
+    logits = softcap(logits.astype(jnp.float32), cfg.final_softcap).astype(compute_dtype)
+    return logits
+
+
+def lm_loss(logits: jnp.ndarray, targets: jnp.ndarray) -> jnp.ndarray:
+    """Mean next-token cross entropy (targets already shifted).
+
+    Sharding-safe formulation: ``take_along_axis`` over a TP-sharded vocab
+    axis makes XLA all-gather the full [B, S, V] logits (51 GB/device for
+    grok-1); the one-hot contraction keeps every reduction partial-sum-able
+    so the vocab axis stays sharded end to end.
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)  # [B, S] — partial reduce + psum
+    onehot = jax.nn.one_hot(targets, logits.shape[-1], dtype=jnp.float32)
+    tgt = jnp.sum(logits * onehot, axis=-1)  # contraction over sharded V
+    return jnp.mean(lse - tgt)
+
+
+# ---------------------------------------------------------------------------
+# decode (one token, KV cache)
+# ---------------------------------------------------------------------------
+def init_cache(cfg: LMConfig, batch: int, max_seq: int, dtype=jnp.bfloat16) -> Dict:
+    shape = (cfg.n_layers, batch, max_seq, cfg.n_kv_heads, cfg.d_head)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+
+
+def decode_step(
+    cfg: LMConfig,
+    params: Dict,
+    tokens: jnp.ndarray,  # [B, 1] int32
+    cache: Dict,  # {"k": [L, B, S, KV, dh], "v": ...}
+    pos: jnp.ndarray,  # scalar int32 — write position (right-aligned batch)
+    compute_dtype=jnp.bfloat16,
+    attn_fn: Optional[Callable] = None,
+    unroll: int = 1,
+    moe_fn=None,
+) -> Tuple[jnp.ndarray, Dict]:
+    """One decoding step: returns (logits [B, vocab], updated cache).
+
+    ``attn_fn(q, k_cache, v_cache, pos, window, cap) -> [B, 1, H, dh]``
+    defaults to the XLA reference; serve/decode.py injects the
+    sequence-parallel flash-decode variant.
+    """
+    b = tokens.shape[0]
+    attn_fn = attn_fn or decode_attention_ref
+    x = params["embed"][tokens].astype(compute_dtype)  # [B, 1, D]
+    if cfg.embed_scale:
+        x = x * jnp.sqrt(jnp.float32(cfg.d_model)).astype(compute_dtype)
+    pos = jnp.asarray(pos, jnp.int32).reshape(())
+    positions = jnp.broadcast_to(pos, (b, 1))  # [B, 1] for RoPE
+    is_local = layer_is_local(cfg)
+    s_max = cache["k"].shape[2]
+
+    def body(x, scanned):
+        lw, loc, k_cache, v_cache = scanned
+        lw = jax.tree.map(lambda p: p.astype(compute_dtype), lw)
+        window = jnp.where(
+            loc & (cfg.local_window is not None),
+            jnp.int32(cfg.local_window or 0),
+            jnp.int32(s_max),
+        )
+        h = rms_norm(x, lw["attn_norm"], cfg.norm_eps, cfg.zero_centered_norm)
+        q, k, v = _project_qkv(cfg, lw, h, positions)
+        # right-aligned batch: one dynamic_update_slice (partition-friendly;
+        # a per-sequence scatter makes SPMD all-gather the whole cache)
+        k_cache = jax.lax.dynamic_update_slice(
+            k_cache, k.astype(k_cache.dtype), (0, pos, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(
+            v_cache, v.astype(v_cache.dtype), (0, pos, 0, 0))
+        attn = attn_fn(q, k_cache, v_cache, pos, window, cfg.attn_softcap)
+        attn = attn.reshape(b, 1, -1).astype(x.dtype)
+        attn = jnp.einsum("bsh,hd->bsd", attn, lw["wo"])
+        if cfg.post_norms:
+            attn = rms_norm(attn, lw["post_attn_norm"], cfg.norm_eps, cfg.zero_centered_norm)
+        x = x + attn
+        h = rms_norm(x, lw["ffn_norm"], cfg.norm_eps, cfg.zero_centered_norm)
+        f = _ffn(cfg, lw, h, moe_fn)
+        if cfg.post_norms:
+            f = rms_norm(f, lw["post_ffn_norm"], cfg.norm_eps, cfg.zero_centered_norm)
+        return x + f, (k_cache, v_cache)
+
+    x, (k_new, v_new) = jax.lax.scan(
+        body, x, (params["layers"], is_local, cache["k"], cache["v"]), unroll=unroll
+    )
+    x = rms_norm(x, params["final_norm"].astype(compute_dtype), cfg.norm_eps, cfg.zero_centered_norm)
+    unembed = params.get("unembed")
+    if unembed is None:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"].astype(compute_dtype))
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, unembed.astype(compute_dtype))
+    logits = softcap(logits[:, 0].astype(jnp.float32), cfg.final_softcap)
+    return logits, {"k": k_new, "v": v_new}

@@ -1,0 +1,61 @@
+"""AdamW with fp32 master weights and configurable moment dtype.
+
+Moments default to bf16 (stochastic-rounding-free but memory-halving) so a
+314B-param model's optimizer state fits a 256-chip pod under FSDP; set
+``moment_dtype=jnp.float32`` for exact parity with reference AdamW.
+State shardings inherit the parameter PartitionSpecs (dist/sharding.py).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray  # scalar int32
+    mu: dict  # first moment (moment_dtype)
+    nu: dict  # second moment (moment_dtype)
+
+
+def init(params, moment_dtype=jnp.bfloat16) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, moment_dtype)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def update(
+    grads,
+    state: AdamWState,
+    params,
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+):
+    """Returns (new_params, new_state). ``lr`` may be a scalar or schedule value."""
+    step = state.step + 1
+    c1 = 1.0 - b1**step.astype(jnp.float32)
+    c2 = 1.0 - b2**step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g32 = g.astype(jnp.float32)
+        m32 = b1 * m.astype(jnp.float32) + (1 - b1) * g32
+        v32 = b2 * v.astype(jnp.float32) + (1 - b2) * g32 * g32
+        mhat = m32 / c1
+        vhat = v32 / c2
+        p32 = p.astype(jnp.float32)
+        new_p = p32 - lr * (mhat / (jnp.sqrt(vhat) + eps) + weight_decay * p32)
+        return new_p.astype(p.dtype), m32.astype(m.dtype), v32.astype(v.dtype)
+
+    out = jax.tree.map(upd, grads, state.mu, state.nu, params)
+    new_params = jax.tree.map(lambda t: t[0], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out, is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out, is_leaf=lambda t: isinstance(t, tuple))
+    return new_params, AdamWState(step=step, mu=new_mu, nu=new_nu)

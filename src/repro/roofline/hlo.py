@@ -1,0 +1,106 @@
+"""Compiled-HLO collective parser.
+
+``cost_analysis()`` has no collective traffic, so we parse the optimized
+(post-SPMD) HLO text: every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instruction contributes its ring-model
+per-device bytes:
+
+    all-reduce      2 (s-1)/s * operand bytes
+    all-gather        (s-1)/s * result bytes
+    reduce-scatter    (s-1)/s * operand bytes
+    all-to-all        (s-1)/s * operand bytes
+    collective-permute          operand bytes
+
+with ``s`` the participant-group size parsed from replica_groups.
+"""
+
+from __future__ import annotations
+
+import re
+from collections import Counter, defaultdict
+from typing import Dict, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute",
+)
+# matches: %name = <shape-or-tuple> <op>(<args>), attrs...
+_INSTR_RE = re.compile(
+    r"=\s+((?:\([^)]*\))|(?:[\w\[\]{},\d]+))\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start)?\(",
+)
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_LIST_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _shape_bytes(text: str) -> int:
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(text):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_LIST_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def collective_stats(hlo_text: str, n_devices: int) -> Dict:
+    """Per-device collective bytes + op counts from optimized HLO text."""
+    moved = 0.0
+    raw_operand_bytes = 0
+    counts: Counter = Counter()
+    by_op_bytes: Dict[str, float] = defaultdict(float)
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.search(line)
+        if not m:
+            continue
+        result_shape, op = m.group(1), m.group(2)
+        if "-done(" in line:
+            continue  # async completion carries no new payload
+        s = _group_size(line, n_devices)
+        if s <= 1:
+            continue
+        result_bytes = _shape_bytes(result_shape)
+        # operand shapes: everything inside the call parens
+        args = line[m.end():]
+        operand_bytes = _shape_bytes(args.split('), ')[0]) if args else 0
+        counts[op] += 1
+        raw_operand_bytes += operand_bytes
+        frac = (s - 1) / s
+        if op == "all-reduce":
+            b = 2 * frac * operand_bytes
+        elif op == "all-gather":
+            b = frac * result_bytes
+        elif op in ("reduce-scatter", "all-to-all"):
+            b = frac * operand_bytes
+        else:  # collective-permute
+            b = float(operand_bytes)
+        moved += b
+        by_op_bytes[op] += b
+    return {
+        "per_device_bytes": moved,
+        "raw_operand_bytes": raw_operand_bytes,
+        "counts": dict(counts),
+        "bytes_by_op": dict(by_op_bytes),
+    }

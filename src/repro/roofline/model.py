@@ -1,0 +1,129 @@
+"""Three-term roofline model for TPU v5e (the TARGET hardware).
+
+    compute term    = HLO_FLOPs   / (chips x 197 TFLOP/s bf16)
+    memory term     = HLO_bytes   / (chips x 819 GB/s HBM)
+    collective term = coll_bytes  / (chips x 50 GB/s/link ICI)
+
+``cost_analysis()`` on an SPMD-partitioned executable reports PER-DEVICE
+flops/bytes (verified empirically in tests/test_roofline.py), so the terms
+divide by per-chip peaks directly.  MODEL_FLOPS = 6 N D (dense) or
+6 N_active D (MoE) measures how much of the compiled compute is useful.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, Optional
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+ICI_BW = 50e9  # bytes/s / link
+
+
+@dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    n_devices: int
+    hlo_flops_per_dev: float
+    hlo_bytes_per_dev: float
+    coll_bytes_per_dev: float
+    model_flops_total: Optional[float] = None  # 6ND-style useful flops (global)
+
+    @property
+    def compute_s(self) -> float:
+        return self.hlo_flops_per_dev / PEAK_FLOPS
+
+    @property
+    def memory_s(self) -> float:
+        return self.hlo_bytes_per_dev / HBM_BW
+
+    @property
+    def collective_s(self) -> float:
+        return self.coll_bytes_per_dev / ICI_BW
+
+    @property
+    def bound(self) -> str:
+        terms = {
+            "compute": self.compute_s,
+            "memory": self.memory_s,
+            "collective": self.collective_s,
+        }
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time_s(self) -> float:
+        """No-overlap upper bound; with perfect overlap it's the max term."""
+        return max(self.compute_s, self.memory_s, self.collective_s)
+
+    @property
+    def useful_flops_ratio(self) -> Optional[float]:
+        if not self.model_flops_total:
+            return None
+        per_dev_useful = self.model_flops_total / self.n_devices
+        if self.hlo_flops_per_dev <= 0:
+            return None
+        return per_dev_useful / self.hlo_flops_per_dev
+
+    @property
+    def mfu_bound(self) -> Optional[float]:
+        """Model-FLOPs utilization at the roofline step time."""
+        if not self.model_flops_total:
+            return None
+        t = self.step_time_s
+        if t <= 0:
+            return None
+        return self.model_flops_total / (self.n_devices * PEAK_FLOPS * t)
+
+    def to_dict(self) -> Dict:
+        return {
+            "arch": self.arch,
+            "shape": self.shape,
+            "mesh": self.mesh,
+            "n_devices": self.n_devices,
+            "hlo_flops_per_dev": self.hlo_flops_per_dev,
+            "hlo_bytes_per_dev": self.hlo_bytes_per_dev,
+            "coll_bytes_per_dev": self.coll_bytes_per_dev,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "bound": self.bound,
+            "model_flops_total": self.model_flops_total,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu_bound": self.mfu_bound,
+        }
+
+
+def lm_model_flops(cfg, batch: int, seq: int, train: bool = True) -> float:
+    """6ND (train) / 2ND (inference) with active params for MoE."""
+    n = cfg.n_active_params
+    tokens = batch * seq
+    return (6.0 if train else 2.0) * n * tokens
+
+
+def lm_decode_model_flops(cfg, batch: int, kv_len: int) -> float:
+    """One-token decode: 2 N_active + attention reads 2*2*kv*H*dh per layer."""
+    n = cfg.n_active_params
+    attn = 4.0 * kv_len * cfg.n_heads * cfg.d_head * cfg.n_layers
+    return batch * (2.0 * n + attn)
+
+
+def gnn_model_flops(cfg, n_nodes: int, n_edges: int, d_feat: int, train: bool = True) -> float:
+    """Per-layer: E*d message FLOPs + N*d^2 transform FLOPs (x3 for bwd)."""
+    d = cfg.d_hidden
+    per_layer = 2.0 * n_edges * d + 2.0 * n_nodes * d * d
+    first = 2.0 * n_nodes * d_feat * d
+    total = first + cfg.n_layers * per_layer
+    return (3.0 if train else 1.0) * total
+
+
+def bst_model_flops(cfg, batch: int, train: bool = True) -> float:
+    s = cfg.seq_len + 1
+    d = cfg.embed_dim
+    attn = 4.0 * s * s * d + 8.0 * s * d * d  # scores+pv + qkvo proj
+    ffn = 2.0 * s * (d * 4 * d) * 2
+    mlp_dims = (s * d + cfg.n_other_feats,) + cfg.mlp_dims + (1,)
+    mlp = sum(2.0 * a * b for a, b in zip(mlp_dims[:-1], mlp_dims[1:]))
+    per_ex = cfg.n_blocks * (attn + ffn) + mlp
+    return batch * per_ex * (3.0 if train else 1.0)

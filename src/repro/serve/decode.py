@@ -1,0 +1,131 @@
+"""Serving steps: decode (one token vs KV cache) and prefill.
+
+``make_decode_step`` builds the jit-able ``step(params, cache, tokens, pos)``
+used by the decode_32k / long_500k dry-run cells.  When a mesh + axis set is
+supplied, attention runs *sequence-parallel*: the KV cache shards along the
+sequence axis, every device computes flash-decode partials over its local
+slice, and the partials merge with one log-sum-exp psum whose payload is
+O(B*H*dh) — independent of sequence length (DESIGN.md §5).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from ..configs.base import LMConfig
+from ..models import transformer as T
+from ..models.common import softcap as _softcap
+
+
+def make_sp_attn_fn(mesh, seq_axes, batch_axes=None):
+    """Sequence-parallel decode attention over ``seq_axes``.
+
+    q:       [B, 1, H, dh]   B sharded over ``batch_axes`` (DP), replicated
+                             over seq_axes
+    k/v:     [B, S, KV, dh]  B over batch_axes, S over seq_axes
+    Returns  [B, 1, H, dh]   B over batch_axes.
+
+    Communication: one pmax + two psums over seq_axes with O(B_local*H*dh)
+    payload — independent of sequence length.  No collective touches the
+    batch axis (each DP shard owns its sequences end to end).
+    """
+    axes = (seq_axes,) if isinstance(seq_axes, str) else tuple(seq_axes)
+    bspec = batch_axes
+
+    def attn_fn(q, k_cache, v_cache, pos, window, cap):
+        s = k_cache.shape[1]
+        h = q.shape[2]
+        n_shards = 1
+        for a in axes:
+            n_shards *= mesh.shape[a]
+        local_s = s // n_shards
+
+        @partial(
+            jax.shard_map,
+            mesh=mesh,
+            in_specs=(
+                P(bspec, None, None, None),
+                P(bspec, axes, None, None),
+                P(bspec, axes, None, None),
+                P(),
+                P(),
+            ),
+            out_specs=P(bspec, None, None, None),
+            check_vma=False,
+        )
+        def _sp(q_, k_, v_, pos_, window_):  # pos_: scalar; shapes LOCAL
+            bl, _, kv, dh = k_.shape
+            g = h // kv
+            # global index of this shard along the sequence split
+            idx = jnp.int32(0)
+            mul = 1
+            for a in reversed(axes):
+                idx = idx + jax.lax.axis_index(a) * mul
+                mul = mul * mesh.shape[a]
+            base = idx * local_s
+            scale = 1.0 / jnp.sqrt(jnp.float32(dh))
+            qg = q_.reshape(bl, kv, g, dh).astype(jnp.float32)
+            sc = jnp.einsum("bhgd,bshd->bhgs", qg, k_.astype(jnp.float32)) * scale
+            sc = _softcap(sc, cap)
+            s_pos = base + jnp.arange(local_s)
+            dist = pos_ - s_pos
+            valid = (dist >= 0) & (dist < window_)
+            sc = jnp.where(valid[None, None, None, :], sc, -2.0e38)
+            m_loc = jnp.max(sc, axis=-1)  # [B_local, KV, G]
+            m_glob = m_loc
+            for a in axes:
+                m_glob = jax.lax.pmax(m_glob, a)
+            p = jnp.exp(sc - m_glob[..., None])
+            l_loc = jnp.sum(p, axis=-1)
+            acc_loc = jnp.einsum("bhgs,bshd->bhgd", p, v_.astype(jnp.float32))
+            l = l_loc
+            acc = acc_loc
+            for a in axes:
+                l = jax.lax.psum(l, a)
+                acc = jax.lax.psum(acc, a)
+            out = acc / jnp.maximum(l[..., None], 1e-30)
+            return out.reshape(bl, 1, h, dh)
+
+        return _sp(q, k_cache, v_cache, pos, jnp.asarray(window, jnp.int32))
+
+    return attn_fn
+
+
+def make_decode_step(cfg: LMConfig, compute_dtype=jnp.bfloat16, attn_fn=None,
+                     unroll: int = 1, moe_fn=None):
+    def step(params, cache, tokens, pos):
+        logits, cache = T.decode_step(
+            cfg, params, tokens, cache, pos,
+            compute_dtype=compute_dtype, attn_fn=attn_fn, unroll=unroll,
+            moe_fn=moe_fn,
+        )
+        next_tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return logits, next_tok, cache
+
+    return step
+
+
+def make_prefill_step(cfg: LMConfig, compute_dtype=jnp.bfloat16,
+                      activation_spec=None, carry_spec=None,
+                      unroll: int = 1, attn_chunk=None, moe_fn=None):
+    """Full-prompt forward producing last-token logits (prefill_32k cell).
+
+    Cache construction during prefill reuses the forward pass keys/values;
+    for the dry-run cell the compute-dominant object is the forward itself.
+    """
+
+    def step(params, tokens):
+        logits = T.forward(
+            cfg, params, tokens, compute_dtype=compute_dtype,
+            remat=False,
+            activation_spec=activation_spec, carry_spec=carry_spec,
+            unroll=unroll, attn_chunk=attn_chunk, moe_fn=moe_fn,
+        )
+        return logits[:, -1]
+
+    return step

@@ -1,0 +1,113 @@
+"""Train-step builders per model family.
+
+Each builder returns a pure ``step(params, opt_state, batch...) -> (params,
+opt_state, metrics)`` suitable for ``jax.jit`` with in/out shardings.  The
+LM step applies remat + Megatron-SP activation constraints when sharding
+specs are supplied (dist/sharding.py).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import GNNConfig, LMConfig, RecsysConfig
+from ..models import bst as BST
+from ..models import gnn as G
+from ..models import transformer as T
+from ..optim import adamw
+from ..optim.clip import clip_by_global_norm
+from ..optim.schedule import warmup_cosine
+
+
+def make_lm_train_step(
+    cfg: LMConfig,
+    peak_lr: float = 3e-4,
+    warmup: int = 2000,
+    total: int = 100_000,
+    max_grad_norm: float = 1.0,
+    compute_dtype=jnp.bfloat16,
+    activation_spec=None,
+    carry_spec=None,
+    logits_spec=None,
+    unroll: int = 1,
+    attn_chunk=None,
+    moe_fn=None,
+):
+    def loss_fn(params, tokens, targets):
+        logits = T.forward(
+            cfg, params, tokens,
+            compute_dtype=compute_dtype,
+            activation_spec=activation_spec,
+            carry_spec=carry_spec,
+            unroll=unroll,
+            attn_chunk=attn_chunk,
+            moe_fn=moe_fn,
+        )
+        if logits_spec is not None:
+            logits = jax.lax.with_sharding_constraint(logits, logits_spec)
+        return T.lm_loss(logits, targets)
+
+    def step(params, opt_state, tokens, targets):
+        loss, grads = jax.value_and_grad(loss_fn)(params, tokens, targets)
+        grads, gnorm = clip_by_global_norm(grads, max_grad_norm)
+        lr = warmup_cosine(opt_state.step, peak_lr, warmup, total)
+        params, opt_state = adamw.update(grads, opt_state, params, lr)
+        return params, opt_state, {"loss": loss, "grad_norm": gnorm, "lr": lr}
+
+    return step
+
+
+def make_gnn_train_step(
+    cfg: GNNConfig,
+    n_nodes: int,
+    lr: float = 1e-3,
+    graph_level: bool = False,
+    n_graphs: int = 0,
+    comm_dtype=None,
+    node_spec=None,
+    gather_fn=None,
+    scatter_fn=None,
+):
+    def loss_fn(params, node_feat, src, dst, edge_mask, labels, label_mask, graph_ids):
+        constrain = None
+        if node_spec is not None:
+            constrain = lambda h: jax.lax.with_sharding_constraint(h, node_spec)
+        logits = G.gnn_logits(
+            cfg, params, node_feat, src, dst, edge_mask, n_nodes,
+            graph_ids=graph_ids if graph_level else None,
+            n_graphs=n_graphs,
+            comm_dtype=comm_dtype, constrain=constrain, gather_fn=gather_fn,
+            scatter_fn=scatter_fn,
+        )
+        return G.gnn_loss(logits, labels, label_mask)
+
+    def step(params, opt_state, node_feat, src, dst, edge_mask, labels, label_mask,
+             graph_ids=None):
+        loss, grads = jax.value_and_grad(loss_fn)(
+            params, node_feat, src, dst, edge_mask, labels, label_mask, graph_ids
+        )
+        params, opt_state = adamw.update(
+            grads, opt_state, params, lr, weight_decay=0.0
+        )
+        return params, opt_state, {"loss": loss}
+
+    return step
+
+
+def make_bst_train_step(cfg: RecsysConfig, lr: float = 1e-3, lookup_fn=None,
+                        compute_dtype=jnp.bfloat16):
+    def loss_fn(params, hist, target, other, labels):
+        logits = BST.forward(cfg, params, hist, target, other,
+                             lookup_fn=lookup_fn, compute_dtype=compute_dtype)
+        return BST.bst_loss(logits, labels)
+
+    def step(params, opt_state, hist, target, other, labels):
+        loss, grads = jax.value_and_grad(loss_fn)(params, hist, target, other, labels)
+        params, opt_state = adamw.update(grads, opt_state, params, lr, weight_decay=0.0)
+        return params, opt_state, {"loss": loss}
+
+    return step

@@ -1,0 +1,12 @@
+import os
+import sys
+from pathlib import Path
+
+# src layout import without install
+SRC = Path(__file__).resolve().parents[1] / "src"
+if str(SRC) not in sys.path:
+    sys.path.insert(0, str(SRC))
+
+# NOTE: no xla_force_host_platform_device_count here — unit/smoke tests run
+# on the single real device; multi-device tests spawn subprocesses that set
+# the flag before importing jax (see tests/test_dist_small.py).

@@ -1,0 +1,125 @@
+"""C-ART unit tests: build/search/scan/insert/delete, splits, merges."""
+
+import numpy as np
+import pytest
+
+from repro.core import cart
+from repro.core.leaf_pool import LeafPool
+
+
+def make(vals, B=8, fill=1.0):
+    pool = LeafPool(B=B)
+    d = cart.build(pool, np.sort(np.unique(np.asarray(vals, np.int32))), fill=fill)
+    return pool, d
+
+
+def test_build_and_scan():
+    pool, d = make([5, 1, 9, 3, 7, 11, 2, 8, 4], B=4)
+    assert list(cart.scan(pool, d)) == [1, 2, 3, 4, 5, 7, 8, 9, 11]
+    assert d.n_leaves == 3  # 9 values, 4-wide leaves
+    cart.check_invariants(pool, d)
+
+
+def test_search():
+    pool, d = make(range(0, 100, 3), B=8)
+    for v in range(100):
+        assert cart.search(pool, d, v) == (v % 3 == 0)
+
+
+def test_search_many_matches_scalar():
+    rng = np.random.default_rng(0)
+    vals = rng.choice(1000, 200, replace=False)
+    pool, d = make(vals, B=16)
+    qs = rng.integers(0, 1000, 500).astype(np.int32)
+    got = cart.search_many(pool, d, qs)
+    want = np.array([cart.search(pool, d, int(q)) for q in qs])
+    assert np.array_equal(got, want)
+
+
+def test_insert_case1_no_split():
+    pool, d0 = make([1, 5, 9], B=8)
+    d1 = cart.insert(pool, d0, 3)
+    assert list(cart.scan(pool, d1)) == [1, 3, 5, 9]
+    # COW: old version unchanged
+    assert list(cart.scan(pool, d0)) == [1, 5, 9]
+    cart.check_invariants(pool, d1)
+
+
+def test_insert_case2_split_at_half():
+    pool, d0 = make(range(8), B=8)  # one full leaf
+    d1 = cart.insert(pool, d0, 100)
+    assert d1.n_leaves == 2
+    assert list(cart.scan(pool, d1)) == list(range(8)) + [100]
+    lens = pool.length[d1.leaf_ids]
+    assert lens[0] == 4  # split at B/2
+    cart.check_invariants(pool, d1)
+
+
+def test_insert_duplicate_is_noop():
+    pool, d0 = make([1, 2, 3], B=8)
+    assert cart.insert(pool, d0, 2) is d0
+
+
+def test_delete_and_merge():
+    pool, d0 = make(range(16), B=8)  # two full leaves
+    d = d0
+    for v in range(4, 16):
+        d_new = cart.delete(pool, d, v)
+        if d is not d0 and d_new is not d:
+            # drop the intermediate version's exclusive rows (kept by
+            # neither the base nor the successor)
+            keep = np.union1d(d0.leaf_ids, d_new.leaf_ids)
+            drop = np.setdiff1d(d.leaf_ids, keep)
+            if len(drop):
+                pool.decref_many(drop)
+        d = d_new
+    assert list(cart.scan(pool, d)) == [0, 1, 2, 3]
+    assert d.n_leaves == 1  # merged
+    assert list(cart.scan(pool, d0)) == list(range(16))  # COW preserved
+    cart.check_invariants(pool, d)
+
+
+def test_delete_absent_is_noop():
+    pool, d0 = make([1, 2, 3], B=8)
+    assert cart.delete(pool, d0, 99) is d0
+
+
+def test_insert_many_bulk_matches_sequential():
+    rng = np.random.default_rng(1)
+    base = np.sort(rng.choice(10_000, 300, replace=False)).astype(np.int32)
+    add = rng.choice(10_000, 150, replace=False).astype(np.int32)
+    pool, d0 = make(base, B=32)
+    d1 = cart.insert_many(pool, d0, add)
+    want = np.union1d(base, add)
+    assert np.array_equal(cart.scan(pool, d1), want)
+    assert np.array_equal(cart.scan(pool, d0), base)
+    cart.check_invariants(pool, d1)
+
+
+def test_delete_many_matches_setdiff():
+    rng = np.random.default_rng(2)
+    base = np.sort(rng.choice(5_000, 400, replace=False)).astype(np.int32)
+    rm = rng.choice(base, 180, replace=False).astype(np.int32)
+    pool, d0 = make(base, B=32)
+    d1 = cart.delete_many(pool, d0, rm)
+    want = np.setdiff1d(base, rm)
+    assert np.array_equal(cart.scan(pool, d1), want)
+    assert np.array_equal(cart.scan(pool, d0), base)
+    cart.check_invariants(pool, d1)
+
+
+def test_refcount_ownership_two_versions():
+    pool, d0 = make(range(32), B=8)
+    d1 = cart.insert(pool, d0, 100)
+    cart.incref_shared(pool, d1, d0)  # settle v1's references
+    # every row referenced by exactly the versions holding it
+    cart.free(pool, d0)  # reclaim v0
+    assert np.array_equal(cart.scan(pool, d1), np.array(list(range(32)) + [100]))
+    cart.free(pool, d1)
+    assert pool.n_live_rows() == 0
+
+
+def test_fill_parameter():
+    pool, d = make(range(100), B=16, fill=0.5)
+    lens = pool.length[d.leaf_ids]
+    assert lens.max() <= 8

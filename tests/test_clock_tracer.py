@@ -1,0 +1,88 @@
+"""Clock + reader tracer unit tests (paper §5.2)."""
+
+import threading
+
+import pytest
+
+from repro.core.clock import LogicalClock
+from repro.core.reader_tracer import FREE_TS, ReaderTracer
+
+
+def test_clock_monotone_commit():
+    c = LogicalClock()
+    assert c.read_timestamp() == 0
+    ts = [c.next_commit_timestamp() for _ in range(5)]
+    assert ts == [1, 2, 3, 4, 5]
+    for t in ts:
+        c.publish(t)
+    assert c.read_timestamp() == 5
+
+
+def test_clock_publish_enforces_commit_order():
+    c = LogicalClock()
+    t1 = c.next_commit_timestamp()
+    t2 = c.next_commit_timestamp()
+    done = []
+
+    def pub2():
+        c.publish(t2)
+        done.append(2)
+
+    th = threading.Thread(target=pub2)
+    th.start()
+    assert done == []  # t2 must wait for t1
+    c.publish(t1)
+    th.join(timeout=5)
+    assert done == [2]
+    assert c.read_timestamp() == 2
+
+
+def test_tracer_register_unregister():
+    tr = ReaderTracer(k=4)
+    s0 = tr.register(7)
+    s1 = tr.register(3)
+    assert sorted(tr.active_timestamps()) == [3, 7]
+    assert tr.min_active_timestamp() == 3
+    tr.unregister(s1)
+    assert tr.active_timestamps() == [7]
+    assert tr.slot_value(s1) == FREE_TS
+    tr.unregister(s0)
+    assert tr.min_active_timestamp() == FREE_TS
+    assert tr.n_active() == 0
+
+
+def test_tracer_full_raises():
+    tr = ReaderTracer(k=2)
+    tr.register(0)
+    tr.register(0)
+    with pytest.raises(RuntimeError):
+        tr.register(1)
+
+
+def test_tracer_update_monotone():
+    tr = ReaderTracer(k=2)
+    s = tr.register(5)
+    tr.update(s, 9)
+    assert tr.active_timestamps() == [9]
+    tr.update(s, 3)  # lower ts ignored
+    assert tr.active_timestamps() == [9]
+    with pytest.raises(RuntimeError):
+        tr.update(1, 5)  # unclaimed slot
+
+
+def test_tracer_concurrent_claims_unique():
+    tr = ReaderTracer(k=32)
+    slots = []
+    lock = threading.Lock()
+
+    def claim():
+        s = tr.register(1)
+        with lock:
+            slots.append(s)
+
+    threads = [threading.Thread(target=claim) for _ in range(32)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert len(set(slots)) == 32

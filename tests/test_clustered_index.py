@@ -1,0 +1,54 @@
+"""Clustered index unit tests (paper §6.3)."""
+
+import numpy as np
+
+from repro.core import clustered_index as ci
+
+
+def test_build_and_neighbors():
+    idx = ci.build(4, np.array([0, 0, 2, 2, 2]), np.array([5, 1, 9, 3, 7]))
+    assert list(ci.neighbors(idx, 0)) == [1, 5]
+    assert list(ci.neighbors(idx, 1)) == []
+    assert list(ci.neighbors(idx, 2)) == [3, 7, 9]
+    assert ci.degree(idx, 2) == 3
+    ci.check_invariants(idx)
+
+
+def test_search():
+    idx = ci.build(2, np.array([0, 0, 1]), np.array([2, 8, 4]))
+    assert ci.search(idx, 0, 8)
+    assert not ci.search(idx, 0, 4)
+    assert ci.search(idx, 1, 4)
+
+
+def test_apply_edits_insert_delete():
+    idx0 = ci.build(3, np.array([0, 1]), np.array([1, 2]))
+    idx1 = ci.apply_edits(
+        idx0,
+        ins_u=np.array([0, 2, 1]), ins_v=np.array([9, 5, 2]),  # (1,2) dup
+        del_u=np.array([0]), del_v=np.array([1]),
+    )
+    assert list(ci.neighbors(idx1, 0)) == [9]
+    assert list(ci.neighbors(idx1, 1)) == [2]
+    assert list(ci.neighbors(idx1, 2)) == [5]
+    # COW: old intact
+    assert list(ci.neighbors(idx0, 0)) == [1]
+    ci.check_invariants(idx1)
+
+
+def test_delete_absent_noop():
+    idx0 = ci.build(2, np.array([0]), np.array([4]))
+    idx1 = ci.apply_edits(idx0, np.empty(0), np.empty(0), np.array([1]), np.array([4]))
+    assert idx1.n_edges == 1
+
+
+def test_extract_inject_roundtrip():
+    idx = ci.build(3, np.array([0, 1, 1, 2]), np.array([7, 3, 5, 1]))
+    seg = ci.neighbors(idx, 1).copy()
+    idx2 = ci.extract(idx, 1)
+    assert ci.degree(idx2, 1) == 0
+    assert idx2.n_edges == 2
+    idx3 = ci.inject(idx2, 1, seg)
+    assert list(ci.neighbors(idx3, 1)) == [3, 5]
+    assert idx3.n_edges == 4
+    ci.check_invariants(idx3)

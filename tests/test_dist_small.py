@@ -1,0 +1,160 @@
+"""Multi-device integration tests — run in subprocesses so the forced host
+device count never leaks into the (single-device) main test session."""
+
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+import pytest
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def run_sub(code: str, devices: int = 8, timeout: int = 600) -> str:
+    prog = (
+        "import os\n"
+        f"os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count={devices}'\n"
+        + textwrap.dedent(code)
+    )
+    res = subprocess.run(
+        [sys.executable, "-c", prog],
+        capture_output=True, text=True, timeout=timeout,
+        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin:/usr/local/bin", "HOME": "/root"},
+    )
+    assert res.returncode == 0, f"STDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr[-3000:]}"
+    return res.stdout
+
+
+def test_distributed_pagerank_matches_single():
+    run_sub("""
+    import jax, numpy as np
+    from repro.core.distributed import make_pagerank, make_bfs, shard_edges
+    from repro.core.analytics import pagerank_coo, bfs_coo
+    mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    n = 64
+    rng = np.random.default_rng(0)
+    e = rng.integers(0, n, size=(700, 2), dtype=np.int64)
+    e = e[e[:, 0] != e[:, 1]]
+    src, dst = e[:, 0], e[:, 1].astype(np.int32)
+    s_sh, d_sh, valid = shard_edges(src, dst, 8)
+    pr_d = np.asarray(make_pagerank(mesh, "data", n)(s_sh, d_sh, valid))
+    pr_s = np.asarray(pagerank_coo(src, dst, n))
+    np.testing.assert_allclose(pr_d, pr_s, rtol=1e-5, atol=1e-7)
+    lv_d = np.asarray(make_bfs(mesh, "data", n)(s_sh, d_sh, valid, np.int32(0)))
+    lv_s = np.asarray(bfs_coo(src, dst, n, 0))
+    assert np.array_equal(lv_d, lv_s)
+    print("distributed analytics OK")
+    """)
+
+
+def test_sharded_embedding_lookup_matches_take():
+    run_sub("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.models.bst import make_sharded_lookup
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    table = np.random.default_rng(0).normal(size=(64, 8)).astype(np.float32)
+    ids = np.random.default_rng(1).integers(0, 64, size=(6, 5)).astype(np.int32)
+    lookup = make_sharded_lookup(mesh, "model", batch_axes=None)
+    with mesh:
+        out = np.asarray(jax.jit(lookup)(table, ids))
+    np.testing.assert_allclose(out, table[ids], rtol=1e-6)
+    print("sharded lookup OK")
+    """)
+
+
+def test_sp_decode_attention_matches_ref():
+    run_sub("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.serve.decode import make_sp_attn_fn
+    from repro.models.transformer import decode_attention_ref
+    mesh = jax.make_mesh((2, 4), ("data", "model"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    B, S, KV, H, dh = 4, 64, 2, 4, 8
+    rng = np.random.default_rng(0)
+    q = rng.normal(size=(B, 1, H, dh)).astype(np.float32)
+    kc = rng.normal(size=(B, S, KV, dh)).astype(np.float32)
+    vc = rng.normal(size=(B, S, KV, dh)).astype(np.float32)
+    pos = jnp.int32(37)
+    win = jnp.int32(S)
+    fn = make_sp_attn_fn(mesh, ("model",), batch_axes="data")
+    with mesh:
+        out = np.asarray(jax.jit(lambda *a: fn(*a, None))(q, kc, vc, pos, win))
+    ref = np.asarray(decode_attention_ref(q, kc, vc, pos, win, None))
+    np.testing.assert_allclose(out, ref, rtol=2e-4, atol=2e-5)
+    # sliding window variant
+    fnw = make_sp_attn_fn(mesh, ("data", "model"), batch_axes=None)
+    with mesh:
+        outw = np.asarray(jax.jit(lambda *a: fnw(*a, 30.0))(q, kc, vc, pos, jnp.int32(9)))
+    refw = np.asarray(decode_attention_ref(q, kc, vc, pos, jnp.int32(9), 30.0))
+    np.testing.assert_allclose(outw, refw, rtol=2e-4, atol=2e-5)
+    print("sp decode attention OK")
+    """)
+
+
+def test_sharded_moe_matches_local():
+    run_sub("""
+    import jax, jax.numpy as jnp, numpy as np
+    from repro.configs.base import LMConfig, MoEConfig
+    from repro.models.moe import init_moe_layer, make_sharded_moe_ffn, _moe_capacity
+    cfg = LMConfig(name='m', n_layers=1, d_model=16, n_heads=2, n_kv_heads=2,
+                   d_head=8, d_ff=32, vocab=32,
+                   moe=MoEConfig(n_experts=4, top_k=2, d_ff=32, impl='capacity'))
+    mesh = jax.make_mesh((2, 4), ('data', 'model'),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    key = jax.random.PRNGKey(0)
+    lw = {k: v[0] for k, v in init_moe_layer(cfg, key).items()}
+    x = jax.random.normal(jax.random.PRNGKey(1), (64, 16))
+    moe_fn = make_sharded_moe_ffn(cfg, mesh, 'data', 'model')
+    with mesh:
+        y_sharded = np.asarray(jax.jit(moe_fn)(lw, x))
+    # local reference: per-data-shard dispatch == full dispatch here because
+    # dispatch is independent per token group; compare against two half-batches
+    y0 = np.asarray(_moe_capacity(cfg, lw, x[:32]))
+    y1 = np.asarray(_moe_capacity(cfg, lw, x[32:]))
+    np.testing.assert_allclose(y_sharded, np.concatenate([y0, y1]), rtol=3e-4, atol=3e-5)
+    print("sharded moe OK")
+    """)
+
+
+def test_elastic_reshard_roundtrip():
+    run_sub("""
+    import jax, numpy as np
+    from jax.sharding import PartitionSpec as P
+    from repro.checkpoint.elastic import reshard
+    tree = {"w": np.arange(32, dtype=np.float32).reshape(8, 4)}
+    specs = {"w": P("data", None)}
+    mesh8 = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    placed = reshard(tree, specs, mesh8)
+    np.testing.assert_array_equal(np.asarray(placed["w"]), tree["w"])
+    mesh2 = jax.make_mesh((2,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    placed2 = reshard({"w": np.asarray(placed["w"])}, specs, mesh2)
+    np.testing.assert_array_equal(np.asarray(placed2["w"]), tree["w"])
+    print("elastic reshard OK")
+    """)
+
+
+def test_compressed_psum_grad_reduce():
+    run_sub("""
+    import jax, jax.numpy as jnp, numpy as np
+    from functools import partial
+    from jax.sharding import PartitionSpec as P
+    from repro.optim.compression import quantize_int8, psum_compressed
+    mesh = jax.make_mesh((4,), ("pod",), axis_types=(jax.sharding.AxisType.Auto,))
+    g = np.random.default_rng(0).normal(size=(4, 64)).astype(np.float32)
+
+    @partial(jax.shard_map, mesh=mesh, in_specs=P("pod", None), out_specs=P("pod", None),
+             check_vma=False)
+    def reduce_fn(g_local):
+        q, s = quantize_int8(g_local[0])
+        mean = psum_compressed({"g": q}, {"g": s}, "pod")["g"]
+        return mean[None]
+
+    with mesh:
+        out = np.asarray(jax.jit(reduce_fn)(g))
+    want = g.mean(0)
+    scale = np.abs(g).max() / 127
+    assert np.max(np.abs(out[0] - want)) < 2 * scale
+    print("compressed psum OK")
+    """)

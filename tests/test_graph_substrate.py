@@ -1,0 +1,139 @@
+"""Graph substrate: segment ops, samplers, generators, batching, data pipeline."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import RapidStore
+from repro.core.baselines import CSRGraph
+from repro.data.pipeline import GraphUpdateStream, Prefetcher, RecsysBatches, SyntheticTokens
+from repro.graph.batching import batch_graphs
+from repro.graph.generators import rmat_edges, uniform_edges, update_stream, zipf_edges
+from repro.graph.sampler import NeighborSampler, pad_subgraph
+from repro.graph.segment_ops import (
+    segment_mean,
+    segment_softmax,
+    segment_std,
+    segment_sum,
+)
+
+
+# -- segment ops -----------------------------------------------------------------
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 7), st.floats(-10, 10)), min_size=1, max_size=60))
+def test_segment_sum_mean_property(pairs):
+    ids = np.array([p[0] for p in pairs], np.int32)
+    vals = np.array([p[1] for p in pairs], np.float32)
+    s = np.asarray(segment_sum(jnp.asarray(vals), jnp.asarray(ids), 8))
+    m = np.asarray(segment_mean(jnp.asarray(vals), jnp.asarray(ids), 8))
+    for k in range(8):
+        sel = vals[ids == k]
+        np.testing.assert_allclose(s[k], sel.sum() if len(sel) else 0.0,
+                                   rtol=1e-4, atol=1e-4)
+        if len(sel):
+            np.testing.assert_allclose(m[k], sel.mean(), rtol=1e-4, atol=1e-4)
+
+
+def test_segment_softmax_normalizes():
+    ids = np.array([0, 0, 0, 2, 2], np.int32)
+    scores = np.array([1.0, 2.0, 3.0, -1.0, 1.0], np.float32)
+    p = np.asarray(segment_softmax(jnp.asarray(scores), jnp.asarray(ids), 3))
+    np.testing.assert_allclose(p[:3].sum(), 1.0, rtol=1e-5)
+    np.testing.assert_allclose(p[3:].sum(), 1.0, rtol=1e-5)
+
+
+def test_segment_std_matches_numpy():
+    ids = np.array([0, 0, 1, 1, 1], np.int32)
+    vals = np.array([[1.0], [3.0], [2.0], [4.0], [6.0]], np.float32)
+    s = np.asarray(segment_std(jnp.asarray(vals), jnp.asarray(ids), 2))
+    np.testing.assert_allclose(s[0, 0], np.std([1, 3]), rtol=1e-3)
+    np.testing.assert_allclose(s[1, 0], np.std([2, 4, 6]), rtol=1e-3)
+
+
+# -- generators -----------------------------------------------------------------
+def test_generators_shapes_and_skew():
+    e1 = uniform_edges(100, 500)
+    assert e1.shape[1] == 2 and (e1[:, 0] != e1[:, 1]).all()
+    e2 = rmat_edges(8, 2000)
+    assert e2.max() < 256
+    deg = np.bincount(e2[:, 0], minlength=256)
+    assert deg.max() > 3 * max(deg.mean(), 1)  # power-law skew
+    e3 = zipf_edges(100, 1000)
+    assert e3.max() < 100
+    ops = update_stream(e1, rounds=2, frac=0.1)
+    assert len(ops) == 4 and ops[0][0] == "-" and ops[1][0] == "+"
+
+
+# -- sampler -----------------------------------------------------------------
+def test_neighbor_sampler_fanout_and_validity():
+    n = 200
+    edges = uniform_edges(n, 3000, seed=1)
+    g = CSRGraph.from_edges(n, edges)
+    sampler = NeighborSampler(g.neighbors, fanouts=[5, 3], seed=0)
+    seeds = np.arange(10, dtype=np.int64)
+    sub = sampler.sample(seeds)
+    assert sub.n_seeds == 10
+    assert np.array_equal(sub.nodes[:10], seeds)
+    assert len(sub.blocks) == 2
+    edge_set = {(int(u), int(v)) for u, v in zip(edges[:, 0], edges[:, 1])}
+    for blk in sub.blocks:
+        assert blk.n_edges > 0
+        for s, d in zip(blk.src, blk.dst):
+            gu, gv = int(sub.nodes[d]), int(sub.nodes[s])
+            assert (gu, gv) in edge_set  # message v->u flows along real edge
+    # fanout bound: each hop-1 node contributes <= 5 edges
+    hop1_per_dst = np.bincount(sub.blocks[0].dst, minlength=sub.n_nodes)
+    assert hop1_per_dst[:10].max() <= 5
+
+
+def test_sampler_over_store_snapshot():
+    n = 100
+    edges = uniform_edges(n, 1500, seed=2)
+    store = RapidStore.from_edges(n, edges, partition_size=16, B=16)
+    with store.read_view() as view:
+        sampler = NeighborSampler(view.scan, fanouts=[4], seed=1)
+        sub = sampler.sample(np.arange(5, dtype=np.int64))
+        assert sub.blocks[0].n_edges <= 20
+    nodes, src, dst, nm, em = pad_subgraph(sub, 64, 32)
+    assert nodes.shape == (64,) and em.sum() == sub.blocks[0].n_edges
+
+
+def test_pad_subgraph_overflow_raises():
+    sub = NeighborSampler(lambda u: np.arange(5, dtype=np.int32), [5], 0).sample(
+        np.arange(3, dtype=np.int64))
+    with pytest.raises(ValueError):
+        pad_subgraph(sub, 2, 100)
+
+
+# -- batching + pipelines -----------------------------------------------------------
+def test_batch_graphs_disjoint():
+    b = batch_graphs(4, nodes_per=5, edges_per=6, d_feat=3)
+    assert b["node_feat"].shape == (20, 3)
+    for g in range(4):
+        sl = slice(g * 6, (g + 1) * 6)
+        assert (b["src"][sl] >= g * 5).all() and (b["src"][sl] < (g + 1) * 5).all()
+    assert list(np.bincount(b["graph_ids"])) == [5] * 4
+
+
+def test_pipelines_deterministic():
+    a = SyntheticTokens(100, 4, 8)[3]
+    b = SyntheticTokens(100, 4, 8)[3]
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert a["tokens"].max() < 100
+    sh = SyntheticTokens(100, 4, 8).shard(3, host=1, n_hosts=2)
+    np.testing.assert_array_equal(sh["tokens"], a["tokens"][2:4])
+    u = GraphUpdateStream(50, batch=32)[5]
+    assert u["insert"].shape[1] == 2
+    r = RecsysBatches(1000, 8)[2]
+    assert r["hist"].shape == (8, 20) and r["hist"].max() < 1000
+
+
+def test_prefetcher_orders_batches():
+    src = SyntheticTokens(100, 2, 4)
+    pf = Prefetcher(src, start=5, depth=2)
+    first = next(pf)
+    np.testing.assert_array_equal(first["tokens"], src[5]["tokens"])
+    second = next(pf)
+    np.testing.assert_array_equal(second["tokens"], src[6]["tokens"])
+    pf.close()

@@ -1,0 +1,155 @@
+"""Per-kernel validation: shape/dtype sweeps, interpret=True vs ref.py oracle."""
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels.leaf_search import leaf_search
+from repro.kernels.leaf_search.ref import leaf_search_ref
+from repro.kernels.intersect import intersect_count, intersect_count_hybrid
+from repro.kernels.intersect.ref import intersect_count_ref
+from repro.kernels.spmm import leaf_scan_reduce, leaf_spmm
+from repro.kernels.spmm.ref import leaf_scan_reduce_ref, leaf_spmm_ref
+from repro.kernels.embedding_bag import embedding_bag
+from repro.kernels.embedding_bag.ref import embedding_bag_ref
+from repro.kernels.flash_decode import flash_decode
+from repro.kernels.flash_decode.ops import flash_decode_partial, merge_partials
+from repro.kernels.flash_decode.ref import flash_decode_ref
+
+SENT = np.iinfo(np.int32).max
+rng = np.random.default_rng(0)
+
+
+def sorted_rows(Q, B, universe=5000):
+    x = np.full((Q, B), SENT, np.int32)
+    for i in range(Q):
+        n = rng.integers(0, B + 1)
+        if n:
+            x[i, :n] = np.sort(rng.choice(universe, size=n, replace=False))
+    return x
+
+
+# -- leaf_search -------------------------------------------------------------
+@pytest.mark.parametrize("Q,B", [(1, 128), (7, 128), (300, 512), (64, 256)])
+def test_leaf_search_sweep(Q, B):
+    rows = sorted_rows(Q, B)
+    targets = rng.integers(0, 5000, Q).astype(np.int32)
+    for i in range(0, Q, 2):  # force hits
+        n = int((rows[i] != SENT).sum())
+        if n:
+            targets[i] = rows[i, rng.integers(0, n)]
+    f, p = leaf_search(rows, targets)
+    fr, pr = leaf_search_ref(jnp.asarray(rows), jnp.asarray(targets))
+    assert np.array_equal(np.asarray(f), np.asarray(fr))
+    assert np.array_equal(np.asarray(p), np.asarray(pr))
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.lists(st.integers(0, 999), min_size=1, max_size=60),
+       st.integers(0, 999))
+def test_leaf_search_property(vals, target):
+    vals_a = np.unique(np.asarray(vals, np.int32))
+    row = np.full((1, 128), SENT, np.int32)
+    row[0, : len(vals_a)] = vals_a
+    f, p = leaf_search(row, np.array([target], np.int32))
+    assert bool(np.asarray(f)[0]) == (target in set(vals))
+
+
+# -- intersect ----------------------------------------------------------------
+@pytest.mark.parametrize("Q,B", [(5, 128), (70, 256), (64, 512)])
+def test_intersect_sweep(Q, B):
+    a, b = sorted_rows(Q, B, 2000), sorted_rows(Q, B, 2000)
+    got = np.asarray(intersect_count(a, b))
+    ref = np.asarray(intersect_count_ref(jnp.asarray(a), jnp.asarray(b)))
+    assert np.array_equal(got, ref)
+    goth = np.asarray(intersect_count_hybrid(a, b))
+    assert np.array_equal(goth, ref)
+
+
+# -- spmm ---------------------------------------------------------------------
+@pytest.mark.parametrize("N,B,nv,d", [(10, 128, 300, 16), (100, 512, 1000, 70),
+                                      (64, 256, 512, 128)])
+def test_spmm_sweep(N, B, nv, d):
+    rows = np.full((N, B), SENT, np.int32)
+    for i in range(N):
+        n = rng.integers(0, B)
+        rows[i, :n] = rng.integers(0, nv, n)
+    x = rng.normal(size=nv).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(leaf_scan_reduce(rows, x)),
+        np.asarray(leaf_scan_reduce_ref(jnp.asarray(rows), jnp.asarray(x))),
+        rtol=1e-5, atol=1e-5,
+    )
+    H = rng.normal(size=(nv, d)).astype(np.float32)
+    np.testing.assert_allclose(
+        np.asarray(leaf_spmm(rows, H)),
+        np.asarray(leaf_spmm_ref(jnp.asarray(rows), jnp.asarray(H))),
+        rtol=1e-4, atol=1e-4,
+    )
+
+
+# -- embedding_bag -------------------------------------------------------------
+@pytest.mark.parametrize("V,d,N,K,mode", [
+    (100, 16, 12, 5, "sum"), (1000, 32, 33, 20, "mean"), (64, 8, 4, 3, "sum")])
+def test_embedding_bag_sweep(V, d, N, K, mode):
+    table = rng.normal(size=(V, d)).astype(np.float32)
+    ids = rng.integers(0, V, size=(N, K)).astype(np.int32)
+    ids[rng.random(size=(N, K)) < 0.3] = -1
+    w = rng.normal(size=(N, K)).astype(np.float32)
+    got = np.asarray(embedding_bag(table, ids, w, mode=mode))
+    ref = np.asarray(embedding_bag_ref(
+        jnp.asarray(table), jnp.asarray(ids), jnp.asarray(w), mode=mode))
+    np.testing.assert_allclose(got, ref, rtol=1e-5, atol=1e-5)
+
+
+def test_embedding_bag_unweighted():
+    table = rng.normal(size=(50, 8)).astype(np.float32)
+    ids = rng.integers(0, 50, size=(6, 4)).astype(np.int32)
+    got = np.asarray(embedding_bag(table, ids))
+    ref = np.asarray(embedding_bag_ref(jnp.asarray(table), jnp.asarray(ids)))
+    np.testing.assert_allclose(got, ref, rtol=1e-5)
+
+
+# -- flash_decode ---------------------------------------------------------------
+@pytest.mark.parametrize("B,S,KV,G,dh,cap", [
+    (2, 256, 2, 4, 64, None), (3, 1000, 4, 2, 128, 50.0), (1, 64, 1, 8, 32, None)])
+def test_flash_decode_sweep(B, S, KV, G, dh, cap):
+    q = rng.normal(size=(B, KV, G, dh)).astype(np.float32)
+    k = rng.normal(size=(B, S, KV, dh)).astype(np.float32)
+    v = rng.normal(size=(B, S, KV, dh)).astype(np.float32)
+    kv_len = rng.integers(1, S + 1, B).astype(np.int32)
+    got = np.asarray(flash_decode(q, k, v, kv_len, block_s=128, softcap=cap))
+    ref = np.asarray(flash_decode_ref(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.asarray(kv_len), softcap=cap))
+    np.testing.assert_allclose(got, ref, rtol=2e-4, atol=2e-5)
+
+
+def test_flash_decode_sequence_parallel_merge():
+    B, S, KV, G, dh = 2, 512, 2, 4, 64
+    q = rng.normal(size=(B, KV, G, dh)).astype(np.float32)
+    k = rng.normal(size=(B, S, KV, dh)).astype(np.float32)
+    v = rng.normal(size=(B, S, KV, dh)).astype(np.float32)
+    kv_len = np.array([500, 128], np.int32)  # second seq entirely in shard 0
+    half = S // 2
+    p1 = flash_decode_partial(q, k[:, :half], v[:, :half],
+                              np.minimum(kv_len, half), block_s=128)
+    p2 = flash_decode_partial(q, k[:, half:], v[:, half:],
+                              np.maximum(kv_len - half, 0), block_s=128)
+    got = np.asarray(merge_partials([p1[0], p2[0]], [p1[1], p2[1]], [p1[2], p2[2]]))
+    ref = np.asarray(flash_decode_ref(
+        jnp.asarray(q), jnp.asarray(k), jnp.asarray(v), jnp.asarray(kv_len)))
+    np.testing.assert_allclose(got, ref, rtol=2e-4, atol=2e-5)
+
+
+def test_flash_decode_bf16():
+    B, S, KV, G, dh = 2, 256, 2, 2, 64
+    q = rng.normal(size=(B, KV, G, dh)).astype(np.float32)
+    k = rng.normal(size=(B, S, KV, dh)).astype(np.float32)
+    v = rng.normal(size=(B, S, KV, dh)).astype(np.float32)
+    kv_len = np.full(B, S, np.int32)
+    got = np.asarray(flash_decode(jnp.asarray(q, jnp.bfloat16), jnp.asarray(k, jnp.bfloat16),
+                                  jnp.asarray(v, jnp.bfloat16), kv_len, block_s=128))
+    ref = np.asarray(flash_decode_ref(jnp.asarray(q), jnp.asarray(k), jnp.asarray(v),
+                                      jnp.asarray(kv_len)))
+    np.testing.assert_allclose(got, ref, rtol=2e-2, atol=2e-2)

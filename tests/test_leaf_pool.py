@@ -1,0 +1,66 @@
+"""Leaf pool: allocation, refcounting, growth, invariants."""
+
+import numpy as np
+import pytest
+
+from repro.core.leaf_pool import LeafPool, SENTINEL
+
+
+def test_alloc_and_read():
+    p = LeafPool(B=8, initial_capacity=4)
+    r = p.alloc(np.array([3, 5, 9], np.int32))
+    assert p.length[r] == 3
+    assert list(p.row_values(r)) == [3, 5, 9]
+    assert p.data[r, 3] == SENTINEL
+    p.check_invariants()
+
+
+def test_refcount_lifecycle():
+    p = LeafPool(B=8)
+    r = p.alloc(np.array([1], np.int32))
+    p.incref(r)
+    p.decref(r)
+    assert p.refcount[r] == 1
+    p.decref(r)
+    assert p.refcount[r] == 0
+    # freed row is reusable
+    r2 = p.alloc(np.array([2, 3], np.int32))
+    p.check_invariants()
+
+
+def test_negative_refcount_raises():
+    p = LeafPool(B=8)
+    r = p.alloc(np.array([1], np.int32))
+    p.decref(r)
+    with pytest.raises(RuntimeError):
+        p.decref(r)
+
+
+def test_growth_preserves_contents():
+    p = LeafPool(B=4, initial_capacity=4)
+    rows = [p.alloc(np.array([i], np.int32)) for i in range(20)]
+    for i, r in enumerate(rows):
+        assert list(p.row_values(r)) == [i]
+    assert p.capacity >= 20
+    p.check_invariants()
+
+
+def test_decref_many_and_stats():
+    p = LeafPool(B=8)
+    rows = np.array([p.alloc(np.array([i], np.int32)) for i in range(6)])
+    p.incref_many(rows[:3])
+    p.decref_many(rows)
+    assert p.n_live_rows() == 3
+    p.decref_many(rows[:3])
+    assert p.n_live_rows() == 0
+    assert p.n_frees == 6
+    p.check_invariants()
+
+
+def test_fill_ratio_and_overflow():
+    p = LeafPool(B=4)
+    p.alloc(np.array([1, 2], np.int32))
+    p.alloc(np.array([3, 4, 5, 6], np.int32))
+    assert 0.7 < p.fill_ratio() <= 0.75  # 6 of 8 slots
+    with pytest.raises(ValueError):
+        p.alloc(np.arange(5, dtype=np.int32))

@@ -1,0 +1,133 @@
+"""LM model tests: feature coverage, flash==naive, decode==forward, MoE."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import LMConfig, MoEConfig
+from repro.models import transformer as T
+from repro.models.flash_attention import flash_attention
+
+
+def naive_attn(q, k, v, window, cap):
+    b, s, kv, g, dh = q.shape
+    kr = jnp.repeat(k, g, axis=2).reshape(b, s, kv, g, dh)
+    vr = jnp.repeat(v, g, axis=2).reshape(b, s, kv, g, dh)
+    sc = jnp.einsum("bqhgd,bkhgd->bhgqk", q, kr) / jnp.sqrt(jnp.float32(dh))
+    if cap is not None:
+        sc = cap * jnp.tanh(sc / cap)
+    pos = jnp.arange(s)
+    dist = pos[:, None] - pos[None, :]
+    valid = (dist >= 0) & (dist < window)
+    sc = jnp.where(valid[None, None, None], sc, -2e38)
+    p = jax.nn.softmax(sc, axis=-1)
+    return jnp.einsum("bhgqk,bkhgd->bqhgd", p, vr)
+
+
+FULL_FEATURE_CFG = LMConfig(
+    name="t", n_layers=2, d_model=32, n_heads=4, n_kv_heads=2, d_head=8,
+    d_ff=64, vocab=128, qk_norm=True, qkv_bias=True, attn_softcap=50.0,
+    final_softcap=30.0, local_window=6, layer_pattern="local_global",
+    post_norms=True, zero_centered_norm=True, embed_scale=True, act="gelu_tanh",
+)
+
+
+@pytest.mark.parametrize("case", [
+    (2, 32, 2, 3, 8, None, 32, 8),
+    (1, 64, 4, 2, 16, 50.0, 64, 16),
+    (2, 48, 1, 4, 8, None, 10, 16),
+])
+def test_flash_attention_matches_naive(case):
+    B, S, KV, G, dh, cap, win, qc = case
+    ks = jax.random.split(jax.random.PRNGKey(S), 3)
+    q = jax.random.normal(ks[0], (B, S, KV, G, dh))
+    k = jax.random.normal(ks[1], (B, S, KV, dh))
+    v = jax.random.normal(ks[2], (B, S, KV, dh))
+    w = jnp.int32(win)
+    np.testing.assert_allclose(
+        np.asarray(flash_attention(q, k, v, w, cap, qc, qc)),
+        np.asarray(naive_attn(q, k, v, w, cap)), rtol=2e-4, atol=2e-5)
+    g1 = jax.grad(lambda *a: jnp.sum(jnp.sin(flash_attention(*a, w, cap, qc, qc))),
+                  argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(lambda *a: jnp.sum(jnp.sin(naive_attn(*a, w, cap))),
+                  argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=5e-4, atol=5e-5)
+
+
+def test_forward_shapes_and_grad():
+    cfg = FULL_FEATURE_CFG
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0, cfg.vocab)
+    logits = T.forward(cfg, params, toks, compute_dtype=jnp.float32)
+    assert logits.shape == (2, 16, cfg.vocab)
+    assert np.isfinite(np.asarray(logits)).all()
+    g = jax.grad(lambda p: T.lm_loss(
+        T.forward(cfg, p, toks, compute_dtype=jnp.float32)[:, :-1], toks[:, 1:]))(params)
+    total = sum(float(jnp.sum(jnp.abs(x))) for x in jax.tree.leaves(g))
+    assert np.isfinite(total) and total > 0
+
+
+def test_decode_matches_forward():
+    cfg = FULL_FEATURE_CFG
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    S = 12
+    toks = jax.random.randint(jax.random.PRNGKey(2), (2, S), 0, cfg.vocab)
+    full = T.forward(cfg, params, toks, compute_dtype=jnp.float32, attn_chunk=4)
+    cache = T.init_cache(cfg, 2, S, dtype=jnp.float32)
+    outs = []
+    for t in range(S):
+        logits, cache = T.decode_step(cfg, params, toks[:, t:t + 1], cache,
+                                      jnp.int32(t), compute_dtype=jnp.float32)
+        outs.append(logits)
+    np.testing.assert_allclose(np.asarray(jnp.stack(outs, 1)), np.asarray(full),
+                               rtol=3e-4, atol=3e-4)
+
+
+def test_unroll_and_chunk_invariance():
+    cfg = FULL_FEATURE_CFG
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(3), (2, 16), 0, cfg.vocab)
+    a = T.forward(cfg, params, toks, compute_dtype=jnp.float32)
+    b = T.forward(cfg, params, toks, compute_dtype=jnp.float32,
+                  unroll=cfg.n_layers, attn_chunk=-1)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=2e-4)
+
+
+MOE_BASE = dict(n_layers=2, d_model=32, n_heads=4, n_kv_heads=4, d_head=8,
+                d_ff=64, vocab=64)
+
+
+def test_moe_impls_agree():
+    key = jax.random.PRNGKey(0)
+    toks = jax.random.randint(key, (2, 16), 0, 64)
+    cfgs = {
+        impl: LMConfig(name=impl, moe=MoEConfig(4, 2, 48, impl=impl), **MOE_BASE)
+        for impl in ("ragged", "dense", "capacity")
+    }
+    params = T.init_params(cfgs["ragged"], key)
+    outs = {impl: T.forward(c, params, toks, compute_dtype=jnp.float32)
+            for impl, c in cfgs.items()}
+    np.testing.assert_allclose(np.asarray(outs["ragged"]), np.asarray(outs["dense"]),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(outs["capacity"]), np.asarray(outs["dense"]),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_moe_grad_finite():
+    cfg = LMConfig(name="m", moe=MoEConfig(4, 2, 48, impl="capacity"), **MOE_BASE)
+    params = T.init_params(cfg, jax.random.PRNGKey(0))
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 8), 0, 64)
+    loss, g = jax.value_and_grad(lambda p: T.lm_loss(
+        T.forward(cfg, p, toks, compute_dtype=jnp.float32)[:, :-1], toks[:, 1:]))(params)
+    assert np.isfinite(float(loss))
+    assert all(np.isfinite(np.asarray(x)).all() for x in jax.tree.leaves(g))
+
+
+def test_param_count_analytic_matches_actual():
+    for cfg in (FULL_FEATURE_CFG,
+                LMConfig(name="m", moe=MoEConfig(4, 2, 48), **MOE_BASE)):
+        params = T.init_params(cfg, jax.random.PRNGKey(0))
+        actual = sum(int(x.size) for x in jax.tree.leaves(params))
+        assert actual == cfg.n_params, (cfg.name, actual, cfg.n_params)

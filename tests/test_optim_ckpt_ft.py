@@ -1,0 +1,201 @@
+"""Optimizer, checkpointing (incl. async + elastic), fault-tolerance units."""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import manager as ckpt
+from repro.checkpoint.elastic import validate_specs
+from repro.ft.failures import Supervisor, WorkerFailure, HeartbeatMonitor
+from repro.ft.stragglers import StragglerConfig, StragglerDetector
+from repro.optim import adamw
+from repro.optim.clip import clip_by_global_norm, global_norm
+from repro.optim.compression import (
+    compress_grads,
+    decompress_grads,
+    init_error_feedback,
+)
+from repro.optim.schedule import warmup_cosine
+
+
+# -- adamw ---------------------------------------------------------------------
+def test_adamw_matches_reference_math():
+    params = {"w": jnp.array([1.0, -2.0, 3.0])}
+    grads = {"w": jnp.array([0.1, 0.2, -0.3])}
+    state = adamw.init(params, moment_dtype=jnp.float32)
+    lr, b1, b2, eps, wd = 0.01, 0.9, 0.95, 1e-8, 0.1
+    new_p, new_s = adamw.update(grads, state, params, lr, b1, b2, eps, wd)
+    g = np.array([0.1, 0.2, -0.3])
+    p = np.array([1.0, -2.0, 3.0])
+    m = (1 - b1) * g
+    v = (1 - b2) * g * g
+    mhat = m / (1 - b1)
+    vhat = v / (1 - b2)
+    want = p - lr * (mhat / (np.sqrt(vhat) + eps) + wd * p)
+    np.testing.assert_allclose(np.asarray(new_p["w"]), want, rtol=1e-6)
+    assert int(new_s.step) == 1
+
+
+def test_adamw_bf16_moments_close_to_f32():
+    params = {"w": jnp.ones((64,))}
+    grads = {"w": jnp.linspace(-1, 1, 64)}
+    s16 = adamw.init(params, moment_dtype=jnp.bfloat16)
+    s32 = adamw.init(params, moment_dtype=jnp.float32)
+    p16, _ = adamw.update(grads, s16, params, 0.01)
+    p32, _ = adamw.update(grads, s32, params, 0.01)
+    np.testing.assert_allclose(np.asarray(p16["w"]), np.asarray(p32["w"]),
+                               rtol=1e-2, atol=1e-4)
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 3.0), "b": jnp.full((4,), 4.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == pytest.approx(10.0)
+    assert float(global_norm(clipped)) == pytest.approx(1.0, rel=1e-5)
+
+
+def test_warmup_cosine_shape():
+    lrs = [float(warmup_cosine(jnp.int32(s), 1.0, 10, 100)) for s in range(0, 100, 10)]
+    assert lrs[0] == 0.0
+    assert max(lrs) <= 1.0
+    assert lrs[-1] < lrs[2]
+
+
+# -- gradient compression ----------------------------------------------------------
+def test_int8_compression_error_feedback_converges():
+    grads = {"w": jnp.array(np.random.default_rng(0).normal(size=256), jnp.float32)}
+    ef = init_error_feedback(grads)
+    # accumulated dequantized stream ~= accumulated true stream (error feedback)
+    acc_true = np.zeros(256)
+    acc_q = np.zeros(256)
+    for i in range(50):
+        (qs, ss), ef = compress_grads(grads, ef)
+        deq = decompress_grads(qs, ss)
+        acc_true += np.asarray(grads["w"])
+        acc_q += np.asarray(deq["w"])
+    # relative drift stays bounded by one quantization step
+    scale = float(np.abs(np.asarray(grads["w"])).max() / 127)
+    assert np.max(np.abs(acc_true - acc_q)) <= 2 * scale
+
+
+# -- checkpointing -----------------------------------------------------------------
+def test_save_restore_roundtrip(tmp_path):
+    tree = {"a": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "nested": {"b": np.ones(4, np.int32)}}
+    ckpt.save(tmp_path, 7, tree, extra={"note": "x"})
+    restored, meta = ckpt.restore(tmp_path, tree)
+    assert meta["step"] == 7
+    np.testing.assert_array_equal(restored["a"], tree["a"])
+    np.testing.assert_array_equal(restored["nested"]["b"], tree["nested"]["b"])
+
+
+def test_latest_step_skips_uncommitted(tmp_path):
+    tree = {"a": np.zeros(2)}
+    ckpt.save(tmp_path, 1, tree)
+    ckpt.save(tmp_path, 5, tree)
+    # fake a crashed save
+    bad = tmp_path / "step_000000009"
+    (bad / "arrays").mkdir(parents=True)
+    assert ckpt.latest_step(tmp_path) == 5
+
+
+def test_prune_keeps_newest(tmp_path):
+    tree = {"a": np.zeros(2)}
+    for s in range(6):
+        ckpt.save(tmp_path, s, tree)
+    ckpt.prune(tmp_path, keep=2)
+    assert ckpt.latest_step(tmp_path) == 5
+    assert ckpt.restore(tmp_path, tree, step=4)[1]["step"] == 4
+    with pytest.raises(FileNotFoundError):
+        ckpt.restore(tmp_path / "nope", tree)
+
+
+def test_async_checkpointer(tmp_path):
+    saver = ckpt.AsyncCheckpointer(tmp_path, keep=2)
+    tree = {"a": np.random.default_rng(0).normal(size=32).astype(np.float32)}
+    saver.save(3, tree)
+    saver.wait()
+    restored, meta = ckpt.restore(tmp_path, tree)
+    np.testing.assert_array_equal(restored["a"], tree["a"])
+
+
+def test_elastic_validate_specs():
+    from jax.sharding import PartitionSpec as P
+
+    mesh = jax.make_mesh((1,), ("data",),
+                         axis_types=(jax.sharding.AxisType.Auto,))
+    tree = {"w": np.zeros((8, 4))}
+    validate_specs(tree, {"w": P("data", None)}, mesh)  # 8 % 1 == 0
+    bad = {"w": np.zeros((7, 4))}
+
+    class FakeMesh:
+        shape = {"data": 2}
+
+    with pytest.raises(ValueError):
+        validate_specs(bad, {"w": P("data", None)}, FakeMesh())
+
+
+# -- fault tolerance ------------------------------------------------------------
+def test_straggler_detector_flags_slow_host():
+    rebalanced, evicted = [], []
+    det = StragglerDetector(
+        4, StragglerConfig(window=8, persist_steps=2),
+        on_rebalance=rebalanced.append, on_evict=evicted.append,
+    )
+    for step in range(10):
+        for h in range(4):
+            det.record_step(h, 1.0 + (5.0 if h == 2 else 0.0))
+        det.check()
+    assert rebalanced == [2]
+    assert evicted == [2]
+
+
+def test_straggler_global_slowdown_not_flagged():
+    det = StragglerDetector(4, StragglerConfig(window=8))
+    for step in range(10):
+        for h in range(4):
+            det.record_step(h, 5.0)  # uniformly slow
+        assert det.check() == []
+
+
+def test_supervisor_restarts_until_success(tmp_path):
+    tree = {"w": np.zeros(4)}
+    attempts = []
+
+    def train_fn(attempt):
+        start = ckpt.latest_step(tmp_path)
+        start = -1 if start is None else start
+        attempts.append((attempt, start))
+        for step in range(start + 1, 10):
+            ckpt.save(tmp_path, step, tree)
+            if attempt < 2 and step == 3 * (attempt + 1):
+                raise WorkerFailure(host=attempt)
+        return "done"
+
+    sup = Supervisor(max_restarts=5)
+    assert sup.run(train_fn) == "done"
+    # restarts resumed from the last committed checkpoint
+    assert attempts[1][1] == 3
+    assert attempts[2][1] == 6
+    assert len(sup.history) == 3
+
+
+def test_supervisor_gives_up():
+    sup = Supervisor(max_restarts=1)
+
+    def always_fail(attempt):
+        raise WorkerFailure(host=0)
+
+    with pytest.raises(RuntimeError):
+        sup.run(always_fail)
+
+
+def test_heartbeat_monitor():
+    mon = HeartbeatMonitor(timeout_s=10)
+    mon.beat(0, now=100.0)
+    mon.beat(1, now=105.0)
+    assert mon.dead_hosts(now=112.0) == [0]  # 12s > timeout; host 1 at 7s
+    assert set(mon.dead_hosts(now=120.0)) == {0, 1}

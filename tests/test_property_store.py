@@ -1,0 +1,76 @@
+"""Hypothesis property tests: the store must track a dict-of-sets oracle
+under arbitrary interleaved insert/delete batches, across partition/leaf
+hyperparameters, with invariants intact after every transaction."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import RapidStore
+from repro.core import cart
+from repro.core.leaf_pool import LeafPool
+
+N_VERTICES = 48
+
+edge = st.tuples(
+    st.integers(0, N_VERTICES - 1), st.integers(0, N_VERTICES - 1)
+).filter(lambda e: e[0] != e[1])
+
+op = st.tuples(st.sampled_from(["+", "-"]), st.lists(edge, min_size=1, max_size=12))
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    ops=st.lists(op, min_size=1, max_size=15),
+    p=st.sampled_from([4, 16, 64]),
+    B=st.sampled_from([8, 32]),
+)
+def test_store_matches_oracle(ops, p, B):
+    store = RapidStore(N_VERTICES, partition_size=p, B=B, tracer_k=4)
+    oracle = set()
+    for kind, edges in ops:
+        arr = np.asarray(edges, np.int64)
+        if kind == "+":
+            store.insert_edges(arr)
+            oracle |= set(edges)
+        else:
+            store.delete_edges(arr)
+            oracle -= set(edges)
+        with store.read_view() as view:
+            assert view.edge_set() == oracle
+    store.check_invariants()
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    base=st.lists(st.integers(0, 500), min_size=0, max_size=80),
+    add=st.lists(st.integers(0, 500), min_size=0, max_size=40),
+    rm=st.lists(st.integers(0, 500), min_size=0, max_size=40),
+    B=st.sampled_from([4, 8, 32]),
+)
+def test_cart_set_semantics(base, add, rm, B):
+    """C-ART == python set under bulk insert/delete."""
+    pool = LeafPool(B=B)
+    base_a = np.unique(np.asarray(base, np.int32))
+    d0 = cart.build(pool, base_a)
+    d1 = cart.insert_many(pool, d0, np.asarray(add, np.int32))
+    d2 = cart.delete_many(pool, d1, np.asarray(rm, np.int32))
+    want = (set(base) | set(add)) - set(rm)
+    assert set(cart.scan(pool, d2).tolist()) == want
+    assert np.array_equal(cart.scan(pool, d0), base_a)  # COW intact
+    cart.check_invariants(pool, d2)
+    # leaves stay sorted + within width
+    lens = pool.length[d2.leaf_ids]
+    assert lens.max(initial=0) <= B
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    vals=st.lists(st.integers(0, 10_000), min_size=1, max_size=200),
+    queries=st.lists(st.integers(0, 10_000), min_size=1, max_size=50),
+)
+def test_cart_search_complete(vals, queries):
+    pool = LeafPool(B=16)
+    d = cart.build(pool, np.unique(np.asarray(vals, np.int32)))
+    s = set(vals)
+    for q in queries:
+        assert cart.search(pool, d, q) == (q in s)

@@ -1,0 +1,76 @@
+"""Roofline: HLO collective parser on synthetic text + model arithmetic."""
+
+import numpy as np
+
+from repro.roofline.hlo import collective_stats, _shape_bytes
+from repro.roofline.model import (
+    RooflineReport,
+    bst_model_flops,
+    gnn_model_flops,
+    lm_model_flops,
+)
+from repro.configs import registry
+
+HLO = """
+HloModule jit_step
+%x1 = f32[16,128]{1,0} all-reduce(f32[16,128]{1,0} %a), replica_groups=[16,16]<=[256], to_apply=%add
+%x2 = bf16[4,256]{1,0} all-gather(bf16[4,16]{1,0} %b), replica_groups={{0,1,2,3}}, dimensions={1}
+%x3 = f32[8,8]{1,0} reduce-scatter(f32[64,8]{1,0} %c), replica_groups=[32,8]<=[256], dimensions={0}
+%x4 = f32[2,2]{1,0} collective-permute(f32[2,2]{1,0} %d), source_target_pairs={{0,1}}
+%x5 = (f32[4,4]{0,1}, f32[4,4]{0,1}) all-to-all(f32[4,4]{0,1} %e, f32[4,4]{0,1} %f), replica_groups=[128,2]<=[256]
+%done = f32[4]{0} all-reduce-done(f32[4]{0} %x9)
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[16,128]{1,0}") == 16 * 128 * 4
+    assert _shape_bytes("bf16[4,16]") == 4 * 16 * 2
+    assert _shape_bytes("(f32[2,2]{1,0}, bf16[4]{0})") == 16 + 8
+    assert _shape_bytes("pred[8]") == 8
+
+
+def test_collective_stats_ring_model():
+    st = collective_stats(HLO, 256)
+    c = st["counts"]
+    assert c["all-reduce"] == 1
+    assert c["all-gather"] == 1
+    assert c["reduce-scatter"] == 1
+    assert c["collective-permute"] == 1
+    assert c["all-to-all"] == 1
+    # all-reduce: 2 * 15/16 * 8192B
+    ar = 2 * (15 / 16) * 16 * 128 * 4
+    assert abs(st["bytes_by_op"]["all-reduce"] - ar) < 1
+    # all-gather: (s-1)/s * result bytes, group size 4
+    ag = (3 / 4) * 4 * 256 * 2
+    assert abs(st["bytes_by_op"]["all-gather"] - ag) < 1
+    # collective-permute: operand bytes
+    assert st["bytes_by_op"]["collective-permute"] == 16
+    assert st["per_device_bytes"] > 0
+
+
+def test_roofline_report_terms():
+    r = RooflineReport(
+        arch="x", shape="y", mesh="16x16", n_devices=256,
+        hlo_flops_per_dev=197e12,  # exactly 1 second of compute
+        hlo_bytes_per_dev=819e9,  # exactly 1 second of HBM
+        coll_bytes_per_dev=25e9,  # 0.5 s of ICI
+        model_flops_total=197e12 * 256 * 0.5,
+    )
+    assert abs(r.compute_s - 1.0) < 1e-9
+    assert abs(r.memory_s - 1.0) < 1e-9
+    assert abs(r.collective_s - 0.5) < 1e-9
+    assert r.bound in ("compute", "memory")
+    assert abs(r.mfu_bound - 0.5) < 1e-9
+    d = r.to_dict()
+    assert d["bound"] == r.bound
+
+
+def test_model_flops_sane():
+    cfg = registry.get_config("qwen2.5-14b")
+    f = lm_model_flops(cfg, batch=256, seq=4096, train=True)
+    # 6 * 14.5B * 1.05M tokens ~ 9.2e16
+    assert 6e16 < f < 1.6e17
+    g = gnn_model_flops(registry.get_config("gcn-cora"), 2708, 10556, 1433)
+    assert g > 0
+    b = bst_model_flops(registry.get_config("bst"), 65536)
+    assert b > 0

@@ -1,0 +1,176 @@
+"""RapidStore end-to-end: bulk load, transactions, snapshot isolation,
+version-chain bound (Prop 5.2), vertex lifecycle, concurrency stress."""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import RapidStore
+
+
+def rand_edges(n, m, seed=0):
+    rng = np.random.default_rng(seed)
+    e = rng.integers(0, n, size=(m, 2), dtype=np.int64)
+    return e[e[:, 0] != e[:, 1]]
+
+
+def oracle_from(edges):
+    return {(int(u), int(v)) for u, v in edges}
+
+
+def test_bulk_load_matches_oracle():
+    n, edges = 200, rand_edges(200, 2000)
+    store = RapidStore.from_edges(n, edges, partition_size=16, B=32)
+    store.check_invariants()
+    with store.read_view() as view:
+        assert view.edge_set() == oracle_from(edges)
+        assert view.n_edges == len(oracle_from(edges))
+
+
+def test_insert_delete_transactions():
+    n = 128
+    store = RapidStore(n, partition_size=16, B=32)
+    oracle = set()
+    rng = np.random.default_rng(1)
+    for i in range(10):
+        ins = rand_edges(n, 40, seed=i)
+        t = store.insert_edges(ins)
+        assert t > 0
+        oracle |= oracle_from(ins)
+        dels = rng.choice(list(oracle), size=min(10, len(oracle)), replace=False)
+        store.delete_edges(np.asarray(dels, np.int64))
+        oracle -= oracle_from(dels)
+        with store.read_view() as view:
+            assert view.edge_set() == oracle
+    store.check_invariants()
+
+
+def test_noop_txn_returns_zero():
+    store = RapidStore(64, partition_size=16, B=32)
+    store.insert_edge(1, 2)
+    assert store.insert_edge(1, 2) == 0  # duplicate
+    assert store.delete_edge(5, 6) == 0  # absent
+
+
+def test_snapshot_isolation_under_writes():
+    n = 100
+    store = RapidStore(n, partition_size=16, B=32)
+    store.insert_edges(rand_edges(n, 300, seed=3))
+    h = store.begin_read()
+    frozen = h.view.edge_set()
+    store.insert_edges(rand_edges(n, 200, seed=4))
+    store.delete_edges(np.array(list(frozen))[:50])
+    assert h.view.edge_set() == frozen  # pinned snapshot unaffected
+    store.end_read(h)
+
+
+def test_version_chain_bound_prop52():
+    """Chain length <= k + 1 with k concurrent readers (Prop 5.2)."""
+    k = 4
+    store = RapidStore(64, partition_size=8, B=16, tracer_k=k)
+    handles = []
+    for i in range(k):
+        store.insert_edge(1, 10 + i)  # version per insert
+        handles.append(store.begin_read())  # reader pinning it
+    for i in range(10):
+        store.insert_edge(1, 40 + i)
+    assert store.chain_lengths().max() <= k + 1
+    for h in handles:
+        store.end_read(h)
+    store.insert_edge(1, 63)  # triggers GC with no readers
+    assert len(store.chains[0]) == 1
+    store.check_invariants()
+
+
+def test_gc_reclaims_pool_rows():
+    store = RapidStore(64, partition_size=8, B=16, tracer_k=4)
+    for i in range(50):
+        store.insert_edge(int(i % 8), int(8 + i % 40))
+    live_before = store.pool.n_live_rows()
+    for i in range(40):
+        store.delete_edge(int(i % 8), int(8 + i % 40))
+    assert store.stats["versions_reclaimed"] > 0
+    store.check_invariants()
+
+
+def test_vertex_insert_delete_and_reuse():
+    store = RapidStore(32, partition_size=8, B=16)
+    store.insert_edges(np.array([[3, 4], [3, 5]]))
+    store.delete_vertex(3)
+    with store.read_view() as view:
+        assert view.degree(3) == 0
+    vid = store.insert_vertex()
+    assert vid == 3  # recycled id
+    vid2 = store.insert_vertex()
+    assert vid2 == 32  # grown id space
+    assert store.n_vertices == 33
+    store.insert_edge(vid2, 1)
+    with store.read_view() as view:
+        assert list(view.scan(vid2)) == [1]
+
+
+def test_batch_update_matches_incremental():
+    n = 64
+    edges = rand_edges(n, 500, seed=7)
+    s1 = RapidStore(n, partition_size=16, B=32)
+    s1.insert_edges(edges)  # one big txn
+    s2 = RapidStore(n, partition_size=16, B=32)
+    for e in edges:  # one txn per edge
+        s2.insert_edge(int(e[0]), int(e[1]))
+    with s1.read_view() as v1, s2.read_view() as v2:
+        assert v1.edge_set() == v2.edge_set()
+
+
+def test_concurrent_writers_readers_linearizable():
+    """Replay-verified consistency under 4 writers + 6 readers."""
+    n = 128
+    store = RapidStore(n, partition_size=16, B=32, tracer_k=16)
+    history, observations, errors = [], [], []
+    hlock = threading.Lock()
+
+    def writer(seed):
+        r = np.random.default_rng(seed)
+        try:
+            for _ in range(40):
+                edges = r.integers(0, n, size=(6, 2), dtype=np.int64)
+                edges = edges[edges[:, 0] != edges[:, 1]]
+                if not len(edges):
+                    continue
+                if r.random() < 0.7:
+                    t, op = store.insert_edges(edges), "+"
+                else:
+                    t, op = store.delete_edges(edges), "-"
+                if t > 0:
+                    with hlock:
+                        history.append((t, op, edges.copy()))
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    def reader(seed):
+        try:
+            for _ in range(20):
+                with store.read_view() as view:
+                    observations.append((view.ts, frozenset(view.edge_set())))
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=writer, args=(i,)) for i in range(4)]
+    threads += [threading.Thread(target=reader, args=(100 + i,)) for i in range(6)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    tss = [h[0] for h in history]
+    assert len(set(tss)) == len(tss), "commit timestamps must be unique"
+    history.sort(key=lambda h: h[0])
+    for obs_ts, obs_edges in observations:
+        state = set()
+        for t, op, edges in history:
+            if t > obs_ts:
+                break
+            for u, v in edges:
+                (state.add if op == "+" else state.discard)((int(u), int(v)))
+        assert state == set(obs_edges), f"reader at ts={obs_ts} inconsistent"
+    store.check_invariants()

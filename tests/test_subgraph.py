@@ -1,0 +1,116 @@
+"""Subgraph snapshot tests: COW updates, promotion/demotion, refcounts."""
+
+import numpy as np
+
+from repro.core.leaf_pool import LeafPool
+from repro.core.subgraph import build_subgraph
+
+
+def build(p=8, threshold=8, B=8, edges=()):
+    pool = LeafPool(B=B)
+    e = np.asarray(edges, np.int64).reshape(-1, 2)
+    snap = build_subgraph(
+        0, p, pool,
+        e[:, 0] if len(e) else np.empty(0, np.int64),
+        e[:, 1].astype(np.int32) if len(e) else np.empty(0, np.int32),
+        high_threshold=threshold,
+    )
+    return pool, snap
+
+
+def test_bulk_build_routes_by_degree():
+    edges = [(0, v) for v in range(20)] + [(1, 5), (1, 7)]
+    pool, s = build(threshold=8, edges=edges)
+    assert 0 in s.dirs  # degree 20 > 8 -> C-ART
+    assert 1 not in s.dirs  # low degree -> clustered index
+    assert s.degree(0) == 20
+    assert list(s.scan(1)) == [5, 7]
+    assert s.n_edges == 22
+    s.check_invariants()
+
+
+def test_apply_updates_cow_isolation():
+    pool, s0 = build(edges=[(0, 1), (2, 3)])
+    s1 = s0.apply_updates(
+        ins_u=np.array([0]), ins_v=np.array([9]),
+        del_u=np.array([2]), del_v=np.array([3]),
+    )
+    assert list(s1.scan(0)) == [1, 9]
+    assert s1.degree(2) == 0
+    assert list(s0.scan(0)) == [1]  # old version untouched
+    assert list(s0.scan(2)) == [3]
+    s1.check_invariants()
+
+
+def test_noop_returns_none():
+    pool, s0 = build(edges=[(0, 1)])
+    assert s0.apply_updates(
+        ins_u=np.array([0]), ins_v=np.array([1]),  # duplicate
+        del_u=np.array([3]), del_v=np.array([7]),  # absent
+    ) is None
+
+
+def test_promotion_to_cart():
+    pool, s0 = build(threshold=4, edges=[(0, v) for v in range(4)])
+    assert 0 not in s0.dirs
+    s1 = s0.apply_updates(
+        ins_u=np.full(3, 0), ins_v=np.array([10, 11, 12]),
+        del_u=np.empty(0), del_v=np.empty(0),
+    )
+    assert 0 in s1.dirs  # 7 > 4 -> promoted
+    assert s1.degree(0) == 7
+    assert 0 not in s0.dirs
+    s1.check_invariants()
+
+
+def test_demotion_to_ci():
+    pool, s0 = build(threshold=4, B=4, edges=[(0, v) for v in range(10)])
+    assert 0 in s0.dirs
+    s1 = s0.apply_updates(
+        ins_u=np.empty(0), ins_v=np.empty(0),
+        del_u=np.full(9, 0), del_v=np.arange(1, 10),
+    )
+    assert 0 not in s1.dirs  # degree 1 < threshold/2 -> demoted
+    assert list(s1.scan(0)) == [0]
+    assert s0.degree(0) == 10
+    s1.check_invariants()
+
+
+def test_release_returns_rows():
+    pool, s0 = build(threshold=2, B=4, edges=[(0, v) for v in range(8)] + [(1, v) for v in range(6)])
+    live0 = pool.n_live_rows()
+    s1 = s0.apply_updates(
+        ins_u=np.array([0]), ins_v=np.array([100]),
+        del_u=np.empty(0), del_v=np.empty(0),
+    )
+    s0.release()  # reclaim version 0
+    assert list(s1.scan(0)) == list(range(8)) + [100]
+    s1.release()
+    assert pool.n_live_rows() == 0
+    pool.check_invariants()
+
+
+def test_insert_then_delete_same_vertex_one_txn():
+    pool, s0 = build(threshold=4, B=4, edges=[(0, v) for v in range(8)])
+    s1 = s0.apply_updates(
+        ins_u=np.array([0, 0]), ins_v=np.array([50, 51]),
+        del_u=np.array([0, 0]), del_v=np.array([2, 3]),
+    )
+    want = sorted(set(range(8)) - {2, 3} | {50, 51})
+    assert list(s1.scan(0)) == want
+    assert list(s0.scan(0)) == list(range(8))
+    # refcount hygiene: release both, pool must drain
+    s0.release()
+    s1.release()
+    assert pool.n_live_rows() == 0
+
+
+def test_vertex_flags():
+    pool, s0 = build(edges=[(0, 1)])
+    s1 = s0.apply_updates(
+        ins_u=np.empty(0), ins_v=np.empty(0), del_u=np.empty(0), del_v=np.empty(0),
+        vset_active={3: False},
+    )
+    assert s1 is not None
+    assert not s1.active[3]
+    assert s0.active[3]
