@@ -63,9 +63,42 @@ def _run_mix(store, n, edges, n_readers, n_writers, duration=2.0, pev=False):
     return lat, wps
 
 
+def _bench_read_after_small_write(n: int, edges: np.ndarray, trials: int = 10) -> None:
+    """Reader materialization latency right after a small write.
+
+    Each trial commits a tiny batch (dirtying a handful of subgraphs) and
+    times the next reader's first to_coo — the incremental-materialization
+    path (O(dirty) rebuild + concat of per-subgraph caches) vs the uncached
+    full-rebuild oracle the seed paid on every read.
+    """
+    store = RapidStore.from_edges(n, edges, **store_defaults())
+    with store.read_view() as view:
+        view.to_coo()  # warm the per-subgraph caches
+        t_oracle = time.perf_counter()
+        view.to_coo_uncached()
+        t_oracle = time.perf_counter() - t_oracle
+    rng = np.random.default_rng(11)
+    lat = []
+    for _ in range(trials):
+        e = rng.integers(0, n, size=(8, 2), dtype=np.int64)
+        e = e[e[:, 0] != e[:, 1]]
+        store.insert_edges(e)
+        h = store.begin_read()
+        t0 = time.perf_counter()
+        h.view.to_coo()
+        lat.append(time.perf_counter() - t0)
+        store.end_read(h)
+    t_incr = float(np.median(lat))
+    record("concurrent/read_after_small_write/incremental", t_incr * 1e6,
+           f"vs_full_rebuild={t_oracle / max(t_incr, 1e-9):.1f}x")
+    record("concurrent/read_after_small_write/full_rebuild_oracle",
+           t_oracle * 1e6, "seed per-vertex-loop path")
+
+
 def run(quick: bool = False) -> None:
     n, edges = dataset("lj")
     dur = 1.0 if quick else 2.0
+    _bench_read_after_small_write(n, edges, trials=5 if quick else 10)
     mixes = [(2, 0), (2, 2), (1, 3)] if quick else [(4, 0), (4, 2), (2, 4), (1, 6)]
 
     for n_r, n_w in mixes:

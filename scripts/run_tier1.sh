@@ -1,0 +1,11 @@
+#!/usr/bin/env bash
+# One reproducible invocation of the tier-1 gate (see ROADMAP.md).
+# Installs dev deps when a package index is reachable; the suite degrades
+# gracefully without them (hypothesis-based files importorskip).
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+python -m pip install -q -r requirements-dev.txt 2>/dev/null \
+    || echo "run_tier1: dev deps unavailable (offline?) — continuing" >&2
+
+PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"

@@ -19,6 +19,8 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import PartitionSpec as P
 
+from repro.jax_compat import shard_map
+
 
 def shard_edges(
     src: np.ndarray, dst: np.ndarray, n_shards: int
@@ -48,7 +50,7 @@ def make_pagerank(mesh, axis: str, n: int, iters: int = 10, damping: float = 0.8
         return jax.ops.segment_sum(valid.astype(jnp.float32), src, num_segments=n)
 
     @partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
         in_specs=(P(axis, None), P(axis, None), P(axis, None)),
         out_specs=P(),
@@ -76,7 +78,7 @@ def make_bfs(mesh, axis: str, n: int):
     """Level-synchronous BFS with replicated frontier, sharded edges."""
 
     @partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
         in_specs=(P(axis, None), P(axis, None), P(axis, None), P()),
         out_specs=P(),

@@ -11,16 +11,38 @@ Materializers produce device-ready layouts:
 - ``to_leaf_blocks`` — the padded ``[n_blocks, B]`` leaf-tile stream consumed
   by the Pallas scan/intersect/spmm kernels (the TPU analogue of the paper's
   AVX2 leaf scans).
+
+Cache lifecycle
+---------------
+
+Materialization is memoized at two layers, exploiting snapshot immutability:
+
+1. **Per-subgraph** (:meth:`SubgraphSnapshot.to_coo_global` /
+   ``to_leaf_blocks_global``): each immutable snapshot computes its own
+   vectorized COO / leaf-block arrays once (global src ids baked in) and
+   caches them for every view that resolves it.  A write produces a *new* snapshot object only for the
+   subgraphs it touches, so after a commit dirtying ``d`` of ``S``
+   subgraphs, the next global materialization costs O(d) rebuild + O(S)
+   concatenation instead of an O(S) full rebuild.  The caches are dropped in
+   :meth:`SubgraphSnapshot.release` — GC recycles the version's pool rows,
+   so invalidation there is a correctness requirement, not just a leak fix —
+   and are charged to :meth:`RapidStore.memory_bytes`.
+2. **Per-view**: the assembled global arrays are cached on the view itself
+   (views are immutable too), so repeat ``to_coo``/``to_csr`` calls on an
+   unchanged view are O(1).
+
+All cached arrays are read-only; callers needing scratch space must copy.
+``to_coo_uncached`` / ``to_leaf_blocks_uncached`` keep the original
+per-vertex-loop path alive as the oracle for tests and benchmarks.
 """
 
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 
-from . import cart
 from .subgraph import SubgraphSnapshot
 
 
@@ -60,13 +82,16 @@ class LeafBlockView:
 class SnapshotView:
     """Reader workspace over resolved per-subgraph snapshots."""
 
-    __slots__ = ("ts", "p", "snaps", "n_vertices")
+    __slots__ = ("ts", "p", "snaps", "n_vertices", "_coo", "_csr", "_blocks")
 
     def __init__(self, ts: int, p: int, snaps: Tuple[SubgraphSnapshot, ...], n_vertices: int):
         self.ts = ts
         self.p = p
         self.snaps = snaps
         self.n_vertices = n_vertices
+        self._coo: Optional[Tuple[np.ndarray, np.ndarray]] = None
+        self._csr: Optional[CSRView] = None
+        self._blocks: Optional[LeafBlockView] = None
 
     # -- point reads ------------------------------------------------------------
     def _local(self, u: int) -> Tuple[SubgraphSnapshot, int]:
@@ -94,9 +119,25 @@ class SnapshotView:
 
     # -- materialization -----------------------------------------------------------
     def to_coo(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Global (src, dst) in (u, v) order — assembled from snapshot caches.
+
+        Per-subgraph caches already carry global src ids, so assembly is two
+        concatenations: O(d) rebuild for dirty subgraphs + O(E) copy.
+        """
+        if self._coo is None:
+            parts = [s.to_coo_global() for s in self.snaps]
+            src = np.concatenate([p[0] for p in parts])
+            dst = np.concatenate([p[1] for p in parts])
+            src.setflags(write=False)
+            dst.setflags(write=False)
+            self._coo = (src, dst)
+        return self._coo
+
+    def to_coo_uncached(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Full-rebuild reference path (per-vertex loops; the seed oracle)."""
         srcs, dsts = [], []
         for s in self.snaps:
-            lu, vs = s.to_coo()
+            lu, vs = s.to_coo_uncached()
             srcs.append(lu + s.sid * self.p)
             dsts.append(vs)
         src = np.concatenate(srcs).astype(np.int64)
@@ -104,21 +145,47 @@ class SnapshotView:
         return src, dst
 
     def to_csr(self) -> CSRView:
-        src, dst = self.to_coo()
-        degs = np.bincount(src, minlength=self.n_vertices)
-        offsets = np.zeros(self.n_vertices + 1, np.int64)
-        np.cumsum(degs, out=offsets[1:])
-        # to_coo emits per-subgraph (u sorted, v sorted) — already CSR order.
-        return CSRView(offsets, dst)
+        if self._csr is None:
+            src, dst = self.to_coo()
+            degs = np.bincount(src, minlength=self.n_vertices)
+            offsets = np.zeros(self.n_vertices + 1, np.int64)
+            np.cumsum(degs, out=offsets[1:])
+            offsets.setflags(write=False)
+            # to_coo emits per-subgraph (u sorted, v sorted) — already CSR order.
+            self._csr = CSRView(offsets, dst)
+        return self._csr
 
     def to_leaf_blocks(self) -> LeafBlockView:
+        if self._blocks is None:
+            srcs, rows, lens = [], [], []
+            for s in self.snaps:
+                ls, lr, ll = s.to_leaf_blocks_global()
+                srcs.append(ls)
+                rows.append(lr)
+                lens.append(ll)
+            if not srcs:
+                B = 8
+                blocks = LeafBlockView(
+                    np.zeros(0, np.int32), np.zeros((0, B), np.int32), np.zeros(0, np.int32)
+                )
+            else:
+                src = np.concatenate(srcs).astype(np.int32)
+                row = np.concatenate(rows)
+                ln = np.concatenate(lens)
+                for a in (src, row, ln):
+                    a.setflags(write=False)
+                blocks = LeafBlockView(src, row, ln)
+            self._blocks = blocks
+        return self._blocks
+
+    def to_leaf_blocks_uncached(self) -> LeafBlockView:
+        """Full-rebuild reference path for the leaf-tile stream (oracle)."""
         from .leaf_pool import SENTINEL
 
         srcs, rows, lens = [], [], []
         for s in self.snaps:
             base = s.sid * self.p
             B = s.pool.B
-            # clustered index: chunk each segment to width B
             for lu in range(s.p):
                 if lu in s.dirs:
                     continue
@@ -132,7 +199,6 @@ class SnapshotView:
                     srcs.append(base + lu)
                     rows.append(padded)
                     lens.append(len(chunk))
-            # C-ART leaves are already the right shape — gather pool rows
             for lu, d in sorted(s.dirs.items()):
                 data = s.pool.data[d.leaf_ids]  # [n_leaves, B]
                 ln = s.pool.length[d.leaf_ids]

@@ -110,6 +110,12 @@ class RapidStore:
             v = edges[:, 1].astype(np.int32)
             if u.max() >= n_vertices or v.max() >= n_vertices:
                 raise ValueError("vertex id out of range")
+            if u.min() < 0 or v.min() < 0:
+                # negative ids would floor-divide into bogus subgraphs and
+                # corrupt the (u << 32) | v dedup key below
+                raise ValueError(
+                    f"negative vertex id {min(int(u.min()), int(v.min()))}"
+                )
             # de-dup (u,v) pairs, sort by (u,v): clustered bulk order
             key = (u << 32) | v.astype(np.int64)
             key = np.unique(key)
@@ -227,9 +233,14 @@ class RapidStore:
     def memory_bytes(self) -> int:
         total = self.pool.memory_bytes()
         for chain in self.chains:
-            for snap in chain._versions:
+            # capture the list reference once, the lock-free convention
+            # resolve() follows: collect()/link() replace the attribute with
+            # a new list, so a captured reference is a stable snapshot
+            versions = chain._versions
+            for snap in versions:
                 total += snap.ci.values.nbytes + snap.ci.offsets.nbytes
                 total += snap.active.nbytes
+                total += snap.cache_bytes()
                 for d in snap.dirs.values():
                     total += d.leaf_ids.nbytes + d.leaf_min.nbytes
         return total
@@ -243,5 +254,6 @@ class RapidStore:
     def check_invariants(self) -> None:
         self.pool.check_invariants()
         for chain in self.chains:
-            for snap in chain._versions:
+            versions = chain._versions  # stable reference; see memory_bytes
+            for snap in versions:
                 snap.check_invariants()

@@ -20,7 +20,7 @@ reclaimed version's references wholesale (writer-driven GC, paper §5.3/6.4).
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 import numpy as np
 
@@ -40,6 +40,17 @@ class SubgraphSnapshot:
     ci: ClusteredIndex
     dirs: Dict[int, CartDir] = field(default_factory=dict)  # local_u -> C-ART
     high_threshold: int = 256
+    # Memoized materializations. A snapshot is immutable once published, so
+    # each cache is computed at most once and shared by every view resolving
+    # this version; a write produces a *new* snapshot object (cold caches)
+    # for the touched subgraph only.  Cleared by ``release()`` — pool rows
+    # are recycled after GC, so a surviving cache would go stale.
+    _coo_cache: Optional[Tuple[np.ndarray, np.ndarray]] = field(
+        default=None, init=False, repr=False, compare=False
+    )
+    _blocks_cache: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]] = field(
+        default=None, init=False, repr=False, compare=False
+    )
 
     # -- degree / kind ---------------------------------------------------------
     def degree(self, lu: int) -> int:
@@ -202,14 +213,75 @@ class SubgraphSnapshot:
         return snap
 
     def release(self) -> None:
-        """Drop this version's leaf references (GC of a reclaimed version)."""
+        """Drop this version's leaf references (GC of a reclaimed version).
+
+        Also drops the materialization caches: once the references are gone
+        the pool recycles the rows, so a cache outliving ``release`` would
+        alias rewritten memory — invalidation here is a correctness matter.
+        """
         for d in self.dirs.values():
             cart.free(self.pool, d)
         self.dirs = {}
+        self._coo_cache = None
+        self._blocks_cache = None
 
     # -- materialization ----------------------------------------------------------
-    def to_coo(self):
-        """(local_src, dst) arrays in (u, v) order — snapshot materialization."""
+    def _dir_leaf_gather(self, dir_lus: np.ndarray):
+        """Gather every C-ART leaf of this snapshot in (lu, leaf) order.
+
+        Returns ``(leaves_per_dir, data, lens)`` where ``data`` is a fresh
+        ``[n_leaves, B]`` copy of the pool rows (fancy indexing copies — the
+        cache must never alias recyclable pool memory) and ``lens`` the live
+        counts.
+        """
+        leaves_per = np.array(
+            [self.dirs[int(lu)].n_leaves for lu in dir_lus], np.int64
+        )
+        all_ids = np.concatenate([self.dirs[int(lu)].leaf_ids for lu in dir_lus])
+        return leaves_per, self.pool.data[all_ids], self.pool.length[all_ids]
+
+    def to_coo_global(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(src, dst) in (u, v) order with GLOBAL src ids — memoized.
+
+        Computed once per snapshot (vectorized — no per-vertex Python loop)
+        and cached with the ``sid * p`` base already applied, so assembling a
+        global view is pure concatenation.  The returned arrays are read-only
+        and shared between callers.
+        """
+        cached = self._coo_cache
+        if cached is None:
+            cached = self._materialize_coo()
+            for a in cached:
+                a.setflags(write=False)
+            self._coo_cache = cached
+        return cached
+
+    def _materialize_coo(self) -> Tuple[np.ndarray, np.ndarray]:
+        p = self.p
+        base = self.sid * p
+        ci_lu = np.repeat(
+            np.arange(p, dtype=np.int64), np.diff(self.ci.offsets).astype(np.int64)
+        )
+        ci_v = self.ci.values.astype(np.int32, copy=True)
+        if not self.dirs:
+            return ci_lu + base, ci_v
+        dir_lus = np.fromiter(sorted(self.dirs), np.int64, len(self.dirs))
+        leaves_per, data, lens = self._dir_leaf_gather(dir_lus)
+        lens = lens.astype(np.int64)
+        # flatten live leaf contents in (lu, leaf) order — stays sorted per lu
+        dir_v = data[np.arange(self.pool.B)[None, :] < lens[:, None]]
+        starts = np.cumsum(leaves_per) - leaves_per
+        deg_per_dir = np.add.reduceat(lens, starts)
+        dir_lu = np.repeat(dir_lus, deg_per_dir)
+        # merge the two lu-sorted streams; a vertex lives in exactly one, so a
+        # stable sort on lu alone preserves each vertex's sorted neighbor run
+        lu_all = np.concatenate([ci_lu, dir_lu])
+        v_all = np.concatenate([ci_v, dir_v])
+        order = np.argsort(lu_all, kind="stable")
+        return lu_all[order] + base, v_all[order]
+
+    def to_coo_uncached(self) -> Tuple[np.ndarray, np.ndarray]:
+        """Per-vertex-loop reference materializer (oracle for the cache)."""
         p = self.p
         if not self.dirs:
             lu = np.repeat(np.arange(p, dtype=np.int64), np.diff(self.ci.offsets))
@@ -224,6 +296,66 @@ class SubgraphSnapshot:
         if not srcs:
             return np.empty(0, np.int64), np.empty(0, np.int32)
         return np.concatenate(srcs), np.concatenate(dsts).astype(np.int32)
+
+    def to_leaf_blocks_global(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Memoized ``(src, rows, length)`` leaf-tile blocks, GLOBAL src ids.
+
+        Same contract as :meth:`SnapshotView.to_leaf_blocks` restricted to
+        this subgraph: clustered-index segments chunked to width B, then one
+        row per live C-ART leaf.  Read-only, computed once per snapshot.
+        """
+        cached = self._blocks_cache
+        if cached is None:
+            cached = self._materialize_leaf_blocks()
+            for a in cached:
+                a.setflags(write=False)
+            self._blocks_cache = cached
+        return cached
+
+    def _materialize_leaf_blocks(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        from .leaf_pool import SENTINEL
+
+        p, B = self.p, self.pool.B
+        base = self.sid * p
+        # clustered index: chunk each segment to width B, fully vectorized
+        degs = np.diff(self.ci.offsets).astype(np.int64)
+        chunks_per = -(-degs // B)  # ceil; 0 for empty segments
+        n_ci = int(chunks_per.sum())
+        chunk_base = np.cumsum(chunks_per) - chunks_per
+        ci_src = np.repeat(np.arange(p, dtype=np.int64), chunks_per)
+        ci_rows = np.full((n_ci, B), SENTINEL, np.int32)
+        if len(self.ci.values):
+            lu_of_val = np.repeat(np.arange(p, dtype=np.int64), degs)
+            off_in_lu = np.arange(len(self.ci.values), dtype=np.int64) - np.repeat(
+                self.ci.offsets[:-1].astype(np.int64), degs
+            )
+            ci_rows[chunk_base[lu_of_val] + off_in_lu // B, off_in_lu % B] = self.ci.values
+        c_within = np.arange(n_ci, dtype=np.int64) - np.repeat(chunk_base, chunks_per)
+        ci_lens = np.minimum(B, np.repeat(degs, chunks_per) - c_within * B)
+        if not self.dirs:
+            return (
+                (ci_src + base).astype(np.int32),
+                ci_rows,
+                ci_lens.astype(np.int32),
+            )
+        # C-ART leaves are already the device shape — gather live pool rows
+        dir_lus = np.fromiter(sorted(self.dirs), np.int64, len(self.dirs))
+        leaves_per, data, lens = self._dir_leaf_gather(dir_lus)
+        keep = lens > 0
+        d_src = np.repeat(dir_lus, leaves_per)[keep]
+        return (
+            (np.concatenate([ci_src, d_src]) + base).astype(np.int32),
+            np.concatenate([ci_rows, data[keep].astype(np.int32)]),
+            np.concatenate([ci_lens, lens[keep].astype(np.int64)]).astype(np.int32),
+        )
+
+    def cache_bytes(self) -> int:
+        """Bytes held by the memoized materializations (memory accounting)."""
+        total = 0
+        for cached in (self._coo_cache, self._blocks_cache):
+            if cached is not None:
+                total += sum(a.nbytes for a in cached)
+        return total
 
     def check_invariants(self) -> None:
         cidx.check_invariants(self.ci)

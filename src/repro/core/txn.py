@@ -33,14 +33,16 @@ def execute_write(
     dels = np.asarray(dels, np.int64).reshape(-1, 2)
     p = store.p
 
-    if len(ins):
-        hi = max(int(ins[:, 0].max()), int(ins[:, 1].max()))
-        if hi >= store.n_vertices:
-            raise ValueError(f"vertex id {hi} out of range [0, {store.n_vertices})")
-    if len(dels):
-        hi = max(int(dels[:, 0].max()), int(dels[:, 1].max()))
-        if hi >= store.n_vertices:
-            raise ValueError(f"vertex id {hi} out of range [0, {store.n_vertices})")
+    for arr in (ins, dels):
+        if len(arr):
+            hi = int(arr.max())
+            if hi >= store.n_vertices:
+                raise ValueError(f"vertex id {hi} out of range [0, {store.n_vertices})")
+            lo = int(arr.min())
+            if lo < 0:
+                # a negative id would floor-divide into a wrong (or negative)
+                # subgraph id and silently corrupt routing — reject up front
+                raise ValueError(f"vertex id {lo} out of range [0, {store.n_vertices})")
 
     # -- step 1: identify affected subgraphs -----------------------------------
     sids = set((ins[:, 0] // p).tolist()) | set((dels[:, 0] // p).tolist())

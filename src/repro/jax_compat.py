@@ -1,0 +1,49 @@
+"""Version-compat shims over the installed JAX.
+
+The codebase targets the current JAX API surface; this module bridges the
+gaps when running against older releases:
+
+- ``shard_map``: new JAX exposes ``jax.shard_map(..., check_vma=...)``;
+  older releases only have ``jax.experimental.shard_map.shard_map`` with the
+  kwarg spelled ``check_rep``.  Semantics are identical for our uses.
+- ``make_mesh``: new JAX accepts ``axis_types=(jax.sharding.AxisType.Auto,
+  ...)``; older releases predate ``AxisType`` (Auto is the default there, so
+  omitting the argument is equivalent).
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """``jax.shard_map`` across JAX versions (kwargs-only, as our call sites use)."""
+    new_sm = getattr(jax, "shard_map", None)
+    if new_sm is not None:
+        try:
+            return new_sm(
+                f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=check_vma
+            )
+        except TypeError:
+            # the window where jax.shard_map exists but the kwarg is still
+            # spelled check_rep
+            return new_sm(
+                f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=check_vma
+            )
+    from jax.experimental.shard_map import shard_map as old_sm
+
+    # The legacy replication checker miscounts scan carries under psum (its
+    # own error message prescribes check_rep=False as the workaround); it is
+    # a static check only, so disabling it never changes results.
+    return old_sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False)
+
+
+def make_mesh(shape, axes):
+    """``jax.make_mesh`` with Auto axis types where the release supports them."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(shape, axes, axis_types=(axis_type.Auto,) * len(axes))
+        except TypeError:
+            pass  # AxisType exists but make_mesh predates the kwarg
+    return jax.make_mesh(shape, axes)

@@ -8,15 +8,13 @@ optional int8 compression, optim/compression.py).
 
 from __future__ import annotations
 
-import jax
+from repro.jax_compat import make_mesh  # noqa: F401  (canonical compat home)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def data_axes(mesh) -> tuple:
@@ -27,6 +25,4 @@ def data_axes(mesh) -> tuple:
 
 def make_host_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh over forced host devices — CPU integration tests."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)

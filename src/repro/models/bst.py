@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.jax_compat import shard_map
+
 from ..configs.base import RecsysConfig
 from .common import dense_init, embed_init, rms_norm
 
@@ -85,7 +87,7 @@ def make_sharded_lookup(mesh, axis: str = "model", batch_axes=None):
         out_spec = P(batch, *([None] * ids_rank))
 
         @partial(
-            jax.shard_map,
+            shard_map,
             mesh=mesh,
             in_specs=(P(axis, None), ids_spec),
             out_specs=out_spec,

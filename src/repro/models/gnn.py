@@ -18,6 +18,8 @@ from typing import Dict, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.jax_compat import shard_map
+
 from ..configs.base import GNNConfig
 from ..graph.segment_ops import (
     segment_max,
@@ -67,7 +69,7 @@ def make_shardmap_gather(mesh, node_axes, edge_axes):
     axes = node_axes if isinstance(node_axes, tuple) else (node_axes,)
 
     @_ft.partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
         in_specs=(P(node_axes, None), P(edge_axes)),
         out_specs=P(edge_axes, None),
@@ -83,7 +85,7 @@ def make_shardmap_gather(mesh, node_axes, edge_axes):
     rest = tuple(a for a in e_axes if a not in axes)
 
     @_ft.partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
         in_specs=(P(edge_axes, None), P(edge_axes), P(node_axes, None)),
         out_specs=P(node_axes, None),
@@ -143,7 +145,7 @@ def make_shardmap_scatter(mesh, node_axes, edge_axes, n_nodes: int):
     rest = tuple(a for a in e_axes if a not in axes)
 
     @_ft.partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
         in_specs=(P(edge_axes, None), P(edge_axes)),
         out_specs=P(node_axes, None),
@@ -161,7 +163,7 @@ def make_shardmap_scatter(mesh, node_axes, edge_axes, n_nodes: int):
         return out.astype(m_l.dtype)
 
     @_ft.partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
         in_specs=(P(node_axes, None), P(edge_axes)),
         out_specs=P(edge_axes, None),

@@ -18,6 +18,8 @@ from typing import Dict
 import jax
 import jax.numpy as jnp
 
+from repro.jax_compat import shard_map
+
 from ..configs.base import LMConfig
 from .common import activation, dense_init
 
@@ -156,7 +158,7 @@ def make_weight_stationary_moe_ffn(cfg: LMConfig, mesh, dp, tp: str = "model"):
         n_dp *= mesh.shape[a]
 
     @_ft.partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
         in_specs=(
             {
@@ -234,7 +236,7 @@ def make_sharded_moe_ffn(cfg: LMConfig, mesh, dp, tp: str = "model"):
     from jax.sharding import PartitionSpec as P
 
     @_ft.partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
         in_specs=(
             {

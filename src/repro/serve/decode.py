@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.jax_compat import shard_map
+
 from ..configs.base import LMConfig
 from ..models import transformer as T
 from ..models.common import softcap as _softcap
@@ -46,7 +48,7 @@ def make_sp_attn_fn(mesh, seq_axes, batch_axes=None):
         local_s = s // n_shards
 
         @partial(
-            jax.shard_map,
+            shard_map,
             mesh=mesh,
             in_specs=(
                 P(bspec, None, None, None),

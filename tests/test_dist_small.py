@@ -1,6 +1,7 @@
 """Multi-device integration tests — run in subprocesses so the forced host
 device count never leaks into the (single-device) main test session."""
 
+import os
 import subprocess
 import sys
 import textwrap
@@ -17,10 +18,13 @@ def run_sub(code: str, devices: int = 8, timeout: int = 600) -> str:
         f"os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count={devices}'\n"
         + textwrap.dedent(code)
     )
+    # Forced host devices only make sense on the CPU platform; pin it so the
+    # subprocess never wastes a minute probing for TPU metadata.
+    env = {"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin:/usr/local/bin", "HOME": "/root",
+           "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")}
     res = subprocess.run(
         [sys.executable, "-c", prog],
-        capture_output=True, text=True, timeout=timeout,
-        env={"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin:/usr/local/bin", "HOME": "/root"},
+        capture_output=True, text=True, timeout=timeout, env=env,
     )
     assert res.returncode == 0, f"STDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr[-3000:]}"
     return res.stdout
@@ -31,7 +35,8 @@ def test_distributed_pagerank_matches_single():
     import jax, numpy as np
     from repro.core.distributed import make_pagerank, make_bfs, shard_edges
     from repro.core.analytics import pagerank_coo, bfs_coo
-    mesh = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((8,), ("data",))
     n = 64
     rng = np.random.default_rng(0)
     e = rng.integers(0, n, size=(700, 2), dtype=np.int64)
@@ -52,8 +57,8 @@ def test_sharded_embedding_lookup_matches_take():
     run_sub("""
     import jax, jax.numpy as jnp, numpy as np
     from repro.models.bst import make_sharded_lookup
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
     table = np.random.default_rng(0).normal(size=(64, 8)).astype(np.float32)
     ids = np.random.default_rng(1).integers(0, 64, size=(6, 5)).astype(np.int32)
     lookup = make_sharded_lookup(mesh, "model", batch_axes=None)
@@ -69,8 +74,8 @@ def test_sp_decode_attention_matches_ref():
     import jax, jax.numpy as jnp, numpy as np
     from repro.serve.decode import make_sp_attn_fn
     from repro.models.transformer import decode_attention_ref
-    mesh = jax.make_mesh((2, 4), ("data", "model"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((2, 4), ("data", "model"))
     B, S, KV, H, dh = 4, 64, 2, 4, 8
     rng = np.random.default_rng(0)
     q = rng.normal(size=(B, 1, H, dh)).astype(np.float32)
@@ -101,8 +106,8 @@ def test_sharded_moe_matches_local():
     cfg = LMConfig(name='m', n_layers=1, d_model=16, n_heads=2, n_kv_heads=2,
                    d_head=8, d_ff=32, vocab=32,
                    moe=MoEConfig(n_experts=4, top_k=2, d_ff=32, impl='capacity'))
-    mesh = jax.make_mesh((2, 4), ('data', 'model'),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((2, 4), ('data', 'model'))
     key = jax.random.PRNGKey(0)
     lw = {k: v[0] for k, v in init_moe_layer(cfg, key).items()}
     x = jax.random.normal(jax.random.PRNGKey(1), (64, 16))
@@ -125,10 +130,11 @@ def test_elastic_reshard_roundtrip():
     from repro.checkpoint.elastic import reshard
     tree = {"w": np.arange(32, dtype=np.float32).reshape(8, 4)}
     specs = {"w": P("data", None)}
-    mesh8 = jax.make_mesh((8,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    mesh8 = make_mesh((8,), ("data",))
     placed = reshard(tree, specs, mesh8)
     np.testing.assert_array_equal(np.asarray(placed["w"]), tree["w"])
-    mesh2 = jax.make_mesh((2,), ("data",), axis_types=(jax.sharding.AxisType.Auto,))
+    mesh2 = make_mesh((2,), ("data",))
     placed2 = reshard({"w": np.asarray(placed["w"])}, specs, mesh2)
     np.testing.assert_array_equal(np.asarray(placed2["w"]), tree["w"])
     print("elastic reshard OK")
@@ -141,10 +147,12 @@ def test_compressed_psum_grad_reduce():
     from functools import partial
     from jax.sharding import PartitionSpec as P
     from repro.optim.compression import quantize_int8, psum_compressed
-    mesh = jax.make_mesh((4,), ("pod",), axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+    from repro.jax_compat import shard_map
+    mesh = make_mesh((4,), ("pod",))
     g = np.random.default_rng(0).normal(size=(4, 64)).astype(np.float32)
 
-    @partial(jax.shard_map, mesh=mesh, in_specs=P("pod", None), out_specs=P("pod", None),
+    @partial(shard_map, mesh=mesh, in_specs=P("pod", None), out_specs=P("pod", None),
              check_vma=False)
     def reduce_fn(g_local):
         q, s = quantize_int8(g_local[0])

@@ -1,0 +1,202 @@
+"""Memoized incremental snapshot materialization (cache layer).
+
+Covers: cached == uncached oracle, O(d) incremental reuse after small
+writes, coherence of a pinned old view across newer commits + GC, cache
+release on version reclamation, and a no-hypothesis property-style sweep
+over mixed insert/delete batches.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import RapidStore
+from repro.core.leaf_pool import SENTINEL
+
+
+def rand_edges(n, m, seed=0):
+    rng = np.random.default_rng(seed)
+    e = rng.integers(0, n, size=(m, 2), dtype=np.int64)
+    return e[e[:, 0] != e[:, 1]]
+
+
+def blocks_edge_set(lb):
+    out = set()
+    for s, row, ln in zip(lb.src, lb.rows, lb.length):
+        for v in row[:ln].tolist():
+            out.add((int(s), int(v)))
+    return out
+
+
+def oracle_edge_set(view):
+    src, dst = view.to_coo_uncached()
+    return set(zip(src.tolist(), dst.tolist()))
+
+
+# -- cached results == fresh/oracle results ---------------------------------------
+@pytest.mark.parametrize("p,B,ht", [(16, 16, 8), (64, 32, 16), (8, 8, 4)])
+def test_cached_matches_uncached_oracle(p, B, ht):
+    n = 96
+    e = rand_edges(n, 900, seed=1)
+    store = RapidStore.from_edges(n, e, partition_size=p, B=B, high_threshold=ht)
+    with store.read_view() as view:
+        src, dst = view.to_coo()
+        osrc, odst = view.to_coo_uncached()
+        assert np.array_equal(src, osrc)
+        assert np.array_equal(dst, odst)
+        # CSR built on the cached COO matches per-vertex scans
+        csr = view.to_csr()
+        for u in range(n):
+            assert np.array_equal(csr.neighbors(u), np.sort(view.scan(u)))
+        # leaf blocks reconstruct the same edge set as the seed loop path
+        assert blocks_edge_set(view.to_leaf_blocks()) == blocks_edge_set(
+            view.to_leaf_blocks_uncached()
+        )
+        assert blocks_edge_set(view.to_leaf_blocks()) == view.edge_set()
+        # padding rows are SENTINEL beyond the live count
+        lb = view.to_leaf_blocks()
+        for row, ln in zip(lb.rows, lb.length):
+            assert np.all(row[ln:] == SENTINEL)
+
+
+def test_repeat_calls_reuse_cache_and_are_readonly():
+    n = 64
+    store = RapidStore.from_edges(n, rand_edges(n, 400, seed=2), partition_size=16, B=16)
+    with store.read_view() as view:
+        a = view.to_coo()
+        b = view.to_coo()
+        assert a[0] is b[0] and a[1] is b[1]  # view-level memo
+        assert view.to_csr() is view.to_csr()
+        assert view.to_leaf_blocks() is view.to_leaf_blocks()
+        with pytest.raises(ValueError):
+            a[1][0] = 7  # cached arrays are read-only
+    # a second view over the same (unchanged) snapshots reuses snapshot caches
+    with store.read_view() as v2:
+        assert all(s._coo_cache is not None for s in v2.snaps)
+        assert np.array_equal(v2.to_coo()[1], a[1])
+
+
+def test_incremental_rebuild_touches_only_dirty_subgraphs():
+    n = 128
+    p = 16
+    store = RapidStore.from_edges(n, rand_edges(n, 800, seed=3), partition_size=p, B=16)
+    with store.read_view() as v1:
+        v1.to_coo()
+        v1.to_leaf_blocks()
+        snaps1 = v1.snaps
+    # one write into subgraph 0 only
+    store.insert_edge(1, 2)
+    with store.read_view() as v2:
+        # untouched subgraphs resolve to the SAME snapshot objects, caches warm
+        for sid in range(1, store.n_subgraphs):
+            assert v2.snaps[sid] is snaps1[sid]
+            assert v2.snaps[sid]._coo_cache is not None
+        assert v2.snaps[0] is not snaps1[0]
+        assert v2.snaps[0]._coo_cache is None  # cold until next materialize
+        assert v2.edge_set() == oracle_edge_set(v2)
+        assert (1, 2) in v2.edge_set()
+
+
+def test_pinned_old_view_coherent_across_commits_and_gc():
+    n = 96
+    store = RapidStore.from_edges(
+        n, rand_edges(n, 600, seed=4), partition_size=16, B=16, high_threshold=8
+    )
+    h = store.begin_read()
+    before = oracle_edge_set(h.view)
+    rng = np.random.default_rng(5)
+    for i in range(20):  # newer commits + writer-driven GC while h stays pinned
+        e = rand_edges(n, 40, seed=100 + i)
+        store.insert_edges(e)
+        store.delete_edges(rand_edges(n, 30, seed=200 + i))
+    assert store.stats["versions_reclaimed"] > 0
+    # the pinned view materializes exactly its snapshot, cached or not
+    assert h.view.edge_set() == before
+    assert blocks_edge_set(h.view.to_leaf_blocks()) == before
+    store.end_read(h)
+    with store.read_view() as v:
+        assert v.edge_set() == oracle_edge_set(v)
+        store.check_invariants()
+
+
+def test_release_clears_caches_no_stale_pool_rows():
+    n = 64
+    p = 16
+    store = RapidStore.from_edges(
+        n, rand_edges(n, 700, seed=6), partition_size=p, B=8, high_threshold=4
+    )
+    with store.read_view() as v:
+        v.to_coo()
+        v.to_leaf_blocks()
+        old_snaps = v.snaps
+        assert all(s.cache_bytes() > 0 for s in old_snaps)
+    mem_with_caches = store.memory_bytes()
+    assert mem_with_caches > store.pool.memory_bytes()
+    # with no pinned readers, each commit reclaims the predecessor version
+    for i in range(4):
+        store.insert_edges(rand_edges(n, 50, seed=300 + i))
+    # every old snapshot that was reclaimed dropped BOTH caches with its refs
+    for chain in store.chains:
+        live = set(id(s) for s in chain._versions)
+        for s in old_snaps:
+            if id(s) not in live:
+                assert s.cache_bytes() == 0
+                assert s._coo_cache is None and s._blocks_cache is None
+    assert store.stats["versions_reclaimed"] > 0
+    store.check_invariants()  # recycled rows are consistent — nothing stale
+    with store.read_view() as v:
+        assert v.edge_set() == oracle_edge_set(v)
+
+
+def test_memory_bytes_accounts_for_caches():
+    n = 64
+    store = RapidStore.from_edges(n, rand_edges(n, 400, seed=7), partition_size=16, B=16)
+    base = store.memory_bytes()
+    with store.read_view() as v:
+        v.to_coo()
+        v.to_leaf_blocks()
+        cached = store.memory_bytes()
+    expect = sum(s.cache_bytes() for c in store.chains for s in c._versions)
+    assert expect > 0
+    assert cached == base + expect
+
+
+# -- no-hypothesis property-style sweep -------------------------------------------
+@pytest.mark.parametrize("p,B,ht,seed", [(8, 8, 4, 10), (16, 16, 8, 11), (32, 8, 4, 12)])
+def test_property_sweep_mixed_batches(p, B, ht, seed):
+    n = 48
+    rng = np.random.default_rng(seed)
+    store = RapidStore(n, partition_size=p, B=B, high_threshold=ht)
+    oracle = set()
+    for step in range(25):
+        k_ins = int(rng.integers(0, 14))
+        k_del = int(rng.integers(0, 10))
+        ins = rand_edges(n, k_ins, seed=int(rng.integers(1 << 30))) if k_ins else np.empty((0, 2), np.int64)
+        # delete a mix of present and absent edges
+        dels = list(ins[: k_del // 2])
+        if oracle and k_del:
+            pool = list(oracle)
+            dels += [pool[i] for i in rng.integers(0, len(pool), size=k_del // 2 + 1)]
+        dels = np.array([list(d) for d in dels], np.int64) if dels else np.empty((0, 2), np.int64)
+        store.apply(ins, dels)
+        oracle |= {(int(u), int(v)) for u, v in ins}
+        oracle -= {(int(u), int(v)) for u, v in dels}
+        with store.read_view() as view:
+            assert view.edge_set() == oracle
+            assert view.edge_set() == oracle_edge_set(view)
+            assert blocks_edge_set(view.to_leaf_blocks()) == oracle
+        if step % 5 == 0:
+            store.check_invariants()
+
+
+def test_negative_vertex_ids_rejected():
+    store = RapidStore(32, partition_size=8, B=8)
+    with pytest.raises(ValueError):
+        store.insert_edge(-1, 3)
+    with pytest.raises(ValueError):
+        store.delete_edges(np.array([[2, -5]], np.int64))
+    with pytest.raises(ValueError):
+        RapidStore.from_edges(32, np.array([[-1, 2]], np.int64))
+    # the store stays usable after a rejected write
+    store.insert_edge(1, 2)
+    with store.read_view() as v:
+        assert v.edge_set() == {(1, 2)}

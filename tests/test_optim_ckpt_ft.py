@@ -125,8 +125,9 @@ def test_async_checkpointer(tmp_path):
 def test_elastic_validate_specs():
     from jax.sharding import PartitionSpec as P
 
-    mesh = jax.make_mesh((1,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    from repro.launch.mesh import make_mesh
+
+    mesh = make_mesh((1,), ("data",))
     tree = {"w": np.zeros((8, 4))}
     validate_specs(tree, {"w": P("data", None)}, mesh)  # 8 % 1 == 0
     bad = {"w": np.zeros((7, 4))}

@@ -3,6 +3,9 @@ under arbitrary interleaved insert/delete batches, across partition/leaf
 hyperparameters, with invariants intact after every transaction."""
 
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import RapidStore
