@@ -2,10 +2,30 @@
 # One reproducible invocation of the tier-1 gate (see ROADMAP.md).
 # Installs dev deps when a package index is reachable; the suite degrades
 # gracefully without them (hypothesis-based files importorskip).
+#
+# Runs the FAST tier by default (-m "not slow"; accelerator-only tests are
+# auto-skipped on host via the `device` marker).  Opt in to the full suite
+# with `--full` or TIER1_FULL=1.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 
 python -m pip install -q -r requirements-dev.txt 2>/dev/null \
     || echo "run_tier1: dev deps unavailable (offline?) — continuing" >&2
 
-PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" python -m pytest -x -q "$@"
+FULL="${TIER1_FULL:-0}"
+ARGS=()
+for a in "$@"; do
+    if [[ "$a" == "--full" ]]; then
+        FULL=1
+    else
+        ARGS+=("$a")
+    fi
+done
+
+if [[ "$FULL" == "1" ]]; then
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m pytest -x -q ${ARGS[@]+"${ARGS[@]}"}
+else
+    PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}" \
+        python -m pytest -x -q -m "not slow" ${ARGS[@]+"${ARGS[@]}"}
+fi

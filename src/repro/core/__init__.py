@@ -1,6 +1,7 @@
 """RapidStore core: subgraph-centric MVCC dynamic graph storage."""
 
 from .clock import LogicalClock
+from .device_cache import DeviceCSRView, DeviceLeafBlockView
 from .leaf_pool import LeafPool, SENTINEL
 from .reader_tracer import ReaderTracer, FREE_TS
 from .snapshot import CSRView, LeafBlockView, SnapshotView
@@ -15,6 +16,8 @@ __all__ = [
     "ReaderTracer",
     "FREE_TS",
     "CSRView",
+    "DeviceCSRView",
+    "DeviceLeafBlockView",
     "LeafBlockView",
     "SnapshotView",
     "RapidStore",

@@ -1,0 +1,279 @@
+"""Device-resident leaf-block tile cache (ROADMAP: device-resident cached tiles).
+
+PR 1 memoized snapshot materialization on the *host*; every Pallas
+scan/intersect/spmm call still re-shipped the leaf tiles host->device.  This
+module keeps each :class:`~repro.core.subgraph.SubgraphSnapshot`'s
+materialized arrays resident on the accelerator as ``jax.Array`` tiles, so a
+warm repeat query performs **zero** host->device leaf-block transfers: the
+view-level assembly (:meth:`SnapshotView.to_leaf_blocks_device` /
+``to_coo_device`` / ``to_csr_device``) is an O(dirty) upload of the touched
+subgraphs plus an O(S) on-device concatenation.
+
+Lifecycle contract (release / GC invalidation)
+----------------------------------------------
+
+Device tiles follow the exact lifecycle of the host caches they mirror:
+
+1. **Birth** — the first device request on a snapshot uploads that snapshot's
+   host-memoized arrays once (``jax.device_put``) and pins them on the
+   snapshot object.  The host arrays are themselves *copies* of the
+   :class:`~repro.core.leaf_pool.LeafPool` rows, so neither cache layer ever
+   aliases recyclable pool memory.
+2. **Sharing** — snapshots are immutable once published; every view that
+   resolves the same version shares the same device tiles.  After a commit
+   dirtying ``d`` of ``S`` subgraphs, only the ``d`` fresh snapshots upload.
+3. **Death** — :meth:`SubgraphSnapshot.release` (writer-driven GC reclaiming
+   a version) drops the device tiles together with the host caches and marks
+   the snapshot *released*.  Releasing is a correctness event, not merely a
+   memory optimization: GC returns the version's pool rows to the free list,
+   after which the pool may recycle them for unrelated neighbor sets.  A
+   released snapshot therefore **refuses** to re-materialize (RuntimeError)
+   instead of silently rebuilding tiles from recycled rows — a recycled
+   ``LeafPool`` row can never serve a stale tile.
+4. **Audit** — each upload stamps the pool row *generations* backing the
+   snapshot's directories (:func:`tiles_fresh`).  The pool bumps a row's
+   generation whenever the row is freed, so a live snapshot's stamp is
+   invariant (its refcounts keep the rows alive) and a violated stamp is
+   direct evidence of a stale tile.  Tests and the concurrency stress
+   harness assert this after every GC cycle.
+
+Accounting: resident device bytes are charged to
+:meth:`RapidStore.memory_bytes` via ``SubgraphSnapshot.device_cache_bytes``,
+and module-level :data:`stats` counts hits / misses / uploads / bytes so
+tests (and benchmarks) can assert the zero-transfer warm path.
+"""
+
+from __future__ import annotations
+
+import os
+import threading
+from dataclasses import dataclass
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+
+# ---------------------------------------------------------------------------
+# Cache statistics — the observable transfer contract
+# ---------------------------------------------------------------------------
+@dataclass
+class CacheStats:
+    """Counters for the device tile cache (process-wide, lock-protected).
+
+    ``uploads`` counts ``jax.device_put`` calls on leaf-block / COO arrays —
+    the acceptance criterion "warm repeat performs zero host->device
+    transfers" is asserted as ``uploads`` staying flat across the repeat.
+    """
+
+    hits: int = 0
+    misses: int = 0
+    uploads: int = 0
+    bytes_uploaded: int = 0
+    releases: int = 0
+
+    def reset(self) -> None:
+        self.hits = 0
+        self.misses = 0
+        self.uploads = 0
+        self.bytes_uploaded = 0
+        self.releases = 0
+
+    def snapshot(self) -> Tuple[int, int, int, int, int]:
+        return (self.hits, self.misses, self.uploads, self.bytes_uploaded, self.releases)
+
+
+stats = CacheStats()
+_lock = threading.Lock()
+# Serializes the miss path: without it two readers racing on a fresh
+# snapshot would both materialize + upload (benign data-wise — snapshots are
+# immutable — but it double-counts stats and transiently doubles device
+# memory).  Hits stay lock-free.
+_mat_lock = threading.Lock()
+
+
+def enabled() -> bool:
+    """Device-cache routing switch (``REPRO_DISABLE_DEVICE_CACHE`` opts out)."""
+    return not os.environ.get("REPRO_DISABLE_DEVICE_CACHE")
+
+
+def _device_put(host_arrays: Sequence[np.ndarray]) -> tuple:
+    import jax
+
+    out = tuple(jax.device_put(a) for a in host_arrays)
+    for o in out:
+        o.block_until_ready()
+    with _lock:
+        stats.uploads += len(host_arrays)
+        # charge the *device* bytes: device_put canonicalizes int64 -> int32
+        # under default x64-disabled JAX, halving the resident size
+        stats.bytes_uploaded += int(sum(o.nbytes for o in out))
+    return out
+
+
+def _hit() -> None:
+    with _lock:
+        stats.hits += 1
+
+
+def _miss() -> None:
+    with _lock:
+        stats.misses += 1
+
+
+# ---------------------------------------------------------------------------
+# Per-snapshot device tiles
+# ---------------------------------------------------------------------------
+def _gen_stamp(snap) -> Tuple[np.ndarray, np.ndarray]:
+    """Capture (leaf row ids, pool generations) backing ``snap``'s dirs."""
+    if not snap.dirs:
+        e = np.empty(0, np.int64)
+        return e, e
+    ids = np.concatenate([d.leaf_ids for d in snap.dirs.values()]).astype(np.int64)
+    return ids, snap.pool.generation[ids].copy()
+
+
+def tiles_fresh(snap) -> bool:
+    """True iff ``snap``'s device tiles still describe live pool rows.
+
+    A live (un-released) snapshot's refcounts pin its rows, so its stamp can
+    never change — a False return means a stale tile escaped the lifecycle
+    contract.  Snapshots without device tiles are vacuously fresh.
+    """
+    stamp = getattr(snap, "_dev_gen_stamp", None)
+    if stamp is None:
+        return True
+    ids, gens = stamp
+    return bool(np.array_equal(snap.pool.generation[ids], gens))
+
+
+def leaf_block_tiles(snap) -> tuple:
+    """Device-resident ``(src, rows, length)`` tiles of one snapshot.
+
+    Memoized on the snapshot: the first call uploads the host-memoized
+    arrays (one transfer per snapshot version, ever); repeats return the
+    pinned ``jax.Array`` tuple.  Raises RuntimeError on released snapshots.
+    """
+    cached = snap._dev_blocks_cache
+    if cached is not None:
+        _hit()
+        return cached
+    with _mat_lock:
+        cached = snap._dev_blocks_cache
+        if cached is not None:  # lost the race: another reader just uploaded
+            _hit()
+            return cached
+        _miss()
+        host = snap.to_leaf_blocks_global()  # raises if released; copies pool rows
+        tiles = _device_put(host)
+        snap._dev_gen_stamp = _gen_stamp(snap)
+        snap._dev_blocks_cache = tiles
+        return tiles
+
+
+def coo_tiles(snap) -> tuple:
+    """Device-resident ``(src, dst)`` COO tiles of one snapshot (memoized)."""
+    cached = snap._dev_coo_cache
+    if cached is not None:
+        _hit()
+        return cached
+    with _mat_lock:
+        cached = snap._dev_coo_cache
+        if cached is not None:
+            _hit()
+            return cached
+        _miss()
+        host = snap.to_coo_global()
+        tiles = _device_put(host)
+        if snap._dev_gen_stamp is None:
+            snap._dev_gen_stamp = _gen_stamp(snap)
+        snap._dev_coo_cache = tiles
+        return tiles
+
+
+def note_release(snap) -> None:
+    """Record (for stats) that a snapshot's device tiles died with GC."""
+    if snap._dev_blocks_cache is not None or snap._dev_coo_cache is not None:
+        with _lock:
+            stats.releases += 1
+
+
+# ---------------------------------------------------------------------------
+# View-level assembly: O(dirty) upload + O(S) device concat
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class DeviceLeafBlockView:
+    """Device twin of :class:`~repro.core.snapshot.LeafBlockView`."""
+
+    src: object  # jax.Array int32 [n_blocks]
+    rows: object  # jax.Array int32 [n_blocks, B]
+    length: object  # jax.Array int32 [n_blocks]
+
+    @property
+    def n_blocks(self) -> int:
+        return int(self.src.shape[0])
+
+
+@dataclass(frozen=True)
+class DeviceCSRView:
+    """Device twin of :class:`~repro.core.snapshot.CSRView`."""
+
+    offsets: object  # jax.Array [n_vertices + 1]
+    indices: object  # jax.Array int32 [n_edges]
+
+
+def assemble_leaf_blocks(snaps: Sequence, B: int) -> DeviceLeafBlockView:
+    """Concatenate per-snapshot device tiles into the global tile stream."""
+    import jax.numpy as jnp
+
+    parts = [leaf_block_tiles(s) for s in snaps]
+    if not parts:
+        z = np.zeros(0, np.int32)
+        src, rows, length = _device_put((z, np.zeros((0, B), np.int32), z))
+        return DeviceLeafBlockView(src, rows, length)
+    return DeviceLeafBlockView(
+        jnp.concatenate([p[0] for p in parts]),
+        jnp.concatenate([p[1] for p in parts]),
+        jnp.concatenate([p[2] for p in parts]),
+    )
+
+
+def assemble_coo(snaps: Sequence) -> tuple:
+    """Concatenate per-snapshot device COO tiles into global (src, dst)."""
+    import jax.numpy as jnp
+
+    parts = [coo_tiles(s) for s in snaps]
+    if not parts:
+        z = np.zeros(0, np.int32)
+        return _device_put((z, z))
+    return (
+        jnp.concatenate([p[0] for p in parts]),
+        jnp.concatenate([p[1] for p in parts]),
+    )
+
+
+def assemble_csr(snaps: Sequence, n_vertices: int) -> DeviceCSRView:
+    """Device CSR from the cached device COO (offsets computed on device)."""
+    import jax.numpy as jnp
+
+    src, dst = assemble_coo(snaps)
+    degs = jnp.bincount(src, length=n_vertices)
+    offsets = jnp.concatenate([jnp.zeros(1, degs.dtype), jnp.cumsum(degs)])
+    # per-subgraph COO is (u sorted, v sorted) and subgraphs are id-ordered,
+    # so the concatenated dst stream is already in CSR order (as on host).
+    return DeviceCSRView(offsets, dst)
+
+
+__all__ = [
+    "CacheStats",
+    "DeviceCSRView",
+    "DeviceLeafBlockView",
+    "assemble_coo",
+    "assemble_csr",
+    "assemble_leaf_blocks",
+    "coo_tiles",
+    "enabled",
+    "leaf_block_tiles",
+    "note_release",
+    "stats",
+    "tiles_fresh",
+]

@@ -38,6 +38,11 @@ class LeafPool:
         self.data = np.full((cap, self.B), SENTINEL, dtype=np.int32)
         self.length = np.zeros(cap, dtype=np.int32)
         self.refcount = np.zeros(cap, dtype=np.int32)
+        # Per-row generation, bumped each time a row is freed (and hence
+        # eligible for recycling).  Snapshot/device caches stamp the
+        # generations they captured; a changed generation under a live cache
+        # is direct evidence of a stale tile (see core.device_cache).
+        self.generation = np.zeros(cap, dtype=np.int64)
         self._free: List[int] = list(range(cap - 1, -1, -1))
         self._lock = threading.Lock()
         self.n_allocs = 0  # statistics
@@ -56,6 +61,7 @@ class LeafPool:
         self.data = data
         self.length = np.concatenate([self.length, np.zeros(old_cap, np.int32)])
         self.refcount = np.concatenate([self.refcount, np.zeros(old_cap, np.int32)])
+        self.generation = np.concatenate([self.generation, np.zeros(old_cap, np.int64)])
         self._free.extend(range(new_cap - 1, old_cap - 1, -1))
 
     # -- allocation -------------------------------------------------------------
@@ -88,6 +94,7 @@ class LeafPool:
             self.refcount[row] -= 1
             if self.refcount[row] == 0:
                 self.length[row] = 0
+                self.generation[row] += 1
                 self._free.append(int(row))
                 self.n_frees += 1
             elif self.refcount[row] < 0:  # pragma: no cover - invariant guard
@@ -101,6 +108,7 @@ class LeafPool:
                 # dedupe (a directory never references a row twice, but be safe)
                 dead = np.unique(dead)
                 self.length[dead] = 0
+                self.generation[dead] += 1
                 self._free.extend(int(r) for r in dead)
                 self.n_frees += len(dead)
             if np.any(self.refcount[rows] < 0):  # pragma: no cover
@@ -128,7 +136,12 @@ class LeafPool:
         return float(self.length[live].sum()) / (len(live) * self.B)
 
     def memory_bytes(self) -> int:
-        return self.data.nbytes + self.length.nbytes + self.refcount.nbytes
+        return (
+            self.data.nbytes
+            + self.length.nbytes
+            + self.refcount.nbytes
+            + self.generation.nbytes
+        )
 
     def check_invariants(self) -> None:
         """Free list and refcounted rows must partition the pool."""

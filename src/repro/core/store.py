@@ -241,6 +241,7 @@ class RapidStore:
                 total += snap.ci.values.nbytes + snap.ci.offsets.nbytes
                 total += snap.active.nbytes
                 total += snap.cache_bytes()
+                total += snap.device_cache_bytes()
                 for d in snap.dirs.values():
                     total += d.leaf_ids.nbytes + d.leaf_min.nbytes
         return total

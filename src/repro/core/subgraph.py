@@ -51,6 +51,21 @@ class SubgraphSnapshot:
     _blocks_cache: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]] = field(
         default=None, init=False, repr=False, compare=False
     )
+    # Device-resident twins of the host caches (jax.Arrays, uploaded once per
+    # snapshot by core.device_cache) plus the pool-row generation stamp taken
+    # at upload time.  Same lifecycle: dropped in ``release()``.
+    _dev_blocks_cache: Optional[tuple] = field(
+        default=None, init=False, repr=False, compare=False
+    )
+    _dev_coo_cache: Optional[tuple] = field(
+        default=None, init=False, repr=False, compare=False
+    )
+    _dev_gen_stamp: Optional[Tuple[np.ndarray, np.ndarray]] = field(
+        default=None, init=False, repr=False, compare=False
+    )
+    # Set by ``release()``: the pool may recycle this version's rows, so any
+    # further materialization would read unrelated data — refuse instead.
+    _released: bool = field(default=False, init=False, repr=False, compare=False)
 
     # -- degree / kind ---------------------------------------------------------
     def degree(self, lu: int) -> int:
@@ -215,17 +230,34 @@ class SubgraphSnapshot:
     def release(self) -> None:
         """Drop this version's leaf references (GC of a reclaimed version).
 
-        Also drops the materialization caches: once the references are gone
-        the pool recycles the rows, so a cache outliving ``release`` would
-        alias rewritten memory — invalidation here is a correctness matter.
+        Also drops the materialization caches — host AND device: once the
+        references are gone the pool recycles the rows, so a cache outliving
+        ``release`` would alias rewritten memory — invalidation here is a
+        correctness matter.  The snapshot is marked released and refuses any
+        later materialization (see core.device_cache lifecycle contract).
         """
+        from . import device_cache
+
+        device_cache.note_release(self)
         for d in self.dirs.values():
             cart.free(self.pool, d)
         self.dirs = {}
         self._coo_cache = None
         self._blocks_cache = None
+        self._dev_blocks_cache = None
+        self._dev_coo_cache = None
+        self._dev_gen_stamp = None
+        self._released = True
 
     # -- materialization ----------------------------------------------------------
+    def _check_not_released(self) -> None:
+        if self._released:
+            raise RuntimeError(
+                f"subgraph {self.sid} snapshot ts={self.ts} was released: its "
+                "pool rows may have been recycled, materialization would "
+                "serve stale tiles"
+            )
+
     def _dir_leaf_gather(self, dir_lus: np.ndarray):
         """Gather every C-ART leaf of this snapshot in (lu, leaf) order.
 
@@ -250,6 +282,7 @@ class SubgraphSnapshot:
         """
         cached = self._coo_cache
         if cached is None:
+            self._check_not_released()
             cached = self._materialize_coo()
             for a in cached:
                 a.setflags(write=False)
@@ -306,6 +339,7 @@ class SubgraphSnapshot:
         """
         cached = self._blocks_cache
         if cached is None:
+            self._check_not_released()
             cached = self._materialize_leaf_blocks()
             for a in cached:
                 a.setflags(write=False)
@@ -355,6 +389,14 @@ class SubgraphSnapshot:
         for cached in (self._coo_cache, self._blocks_cache):
             if cached is not None:
                 total += sum(a.nbytes for a in cached)
+        return total
+
+    def device_cache_bytes(self) -> int:
+        """Accelerator bytes pinned by this snapshot's device tiles."""
+        total = 0
+        for cached in (self._dev_blocks_cache, self._dev_coo_cache):
+            if cached is not None:
+                total += sum(int(a.nbytes) for a in cached)
         return total
 
     def check_invariants(self) -> None:

@@ -1,3 +1,3 @@
-from .ops import intersect_count, intersect_count_hybrid
+from .ops import intersect_count, intersect_count_hybrid, intersect_tiles_view
 
-__all__ = ["intersect_count", "intersect_count_hybrid"]
+__all__ = ["intersect_count", "intersect_count_hybrid", "intersect_tiles_view"]

@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..runtime import use_interpret
+from ..runtime import device_cache_enabled, use_interpret
 from .kernel import intersect_count_kernel, SENTINEL
 from .ref import intersect_count_ref
 
@@ -50,4 +50,25 @@ def intersect_count_hybrid(a, b) -> jnp.ndarray:
     return intersect_count(a2, b2)
 
 
-__all__ = ["intersect_count", "intersect_count_hybrid", "intersect_count_ref"]
+def intersect_tiles_view(view, idx_a, idx_b, q_block: int = 64, chunk: int = 128):
+    """|tile_a ∩ tile_b| for pairs of a view's device-resident leaf tiles.
+
+    ``idx_a``/``idx_b`` index rows of ``view.to_leaf_blocks_device()``; the
+    gathers happen on device, so warm repeats move no leaf data host->device.
+    Honors REPRO_DISABLE_DEVICE_CACHE (host tiles re-upload per call then).
+    """
+    if device_cache_enabled():
+        rows = view.to_leaf_blocks_device().rows
+    else:
+        rows = jnp.asarray(view.to_leaf_blocks().rows)
+    a = rows[jnp.asarray(idx_a, jnp.int32)]
+    b = rows[jnp.asarray(idx_b, jnp.int32)]
+    return intersect_count(a, b, q_block=q_block, chunk=chunk)
+
+
+__all__ = [
+    "intersect_count",
+    "intersect_count_hybrid",
+    "intersect_count_ref",
+    "intersect_tiles_view",
+]

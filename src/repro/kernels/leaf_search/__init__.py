@@ -1,3 +1,3 @@
-from .ops import leaf_search
+from .ops import edge_search_view, leaf_search
 
-__all__ = ["leaf_search"]
+__all__ = ["edge_search_view", "leaf_search"]

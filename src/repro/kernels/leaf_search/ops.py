@@ -7,7 +7,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..runtime import use_interpret
+from ..runtime import device_cache_enabled, use_interpret
 from .kernel import leaf_search_kernel
 from .ref import leaf_search_ref
 
@@ -32,4 +32,37 @@ def leaf_search(rows, targets, q_block: int = 256):
     return found[:q], pos[:q]
 
 
-__all__ = ["leaf_search", "leaf_search_ref"]
+def edge_search_view(view, us, vs, q_block: int = 256) -> np.ndarray:
+    """Batched edge-membership Search(u, v) through the device tile cache.
+
+    Resolves each query's candidate tiles via the host block index (memoized
+    on the view), gathers those rows *on device* — the leaf blocks themselves
+    are never re-uploaded — and answers every query with one batched
+    ``leaf_search``: query i hits iff any tile of ``us[i]`` contains
+    ``vs[i]``.  Returns a bool [len(us)] numpy array.
+    """
+    us = np.asarray(us, np.int64).reshape(-1)
+    vs = np.asarray(vs, np.int64).reshape(-1)
+    if us.shape != vs.shape:
+        raise ValueError("us and vs must have matching shapes")
+    if device_cache_enabled():
+        dev_rows = view.to_leaf_blocks_device().rows
+    else:
+        dev_rows = jnp.asarray(view.to_leaf_blocks().rows)
+    src = np.asarray(view.to_leaf_blocks().src, np.int64)
+    order = np.argsort(src, kind="stable")
+    lo = np.searchsorted(src[order], us, "left")
+    hi = np.searchsorted(src[order], us, "right")
+    counts = hi - lo
+    out = np.zeros(len(us), bool)
+    if counts.sum() == 0:
+        return out
+    qidx = np.repeat(np.arange(len(us)), counts)
+    flat = np.concatenate([order[l:h] for l, h in zip(lo, hi) if h > l])
+    rows_sel = dev_rows[jnp.asarray(flat, jnp.int32)]
+    found, _ = leaf_search(rows_sel, jnp.asarray(vs[qidx], jnp.int32), q_block=q_block)
+    np.logical_or.at(out, qidx, np.asarray(found))
+    return out
+
+
+__all__ = ["edge_search_view", "leaf_search", "leaf_search_ref"]

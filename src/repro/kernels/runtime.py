@@ -3,20 +3,69 @@
 Pallas kernels compile natively on TPU; everywhere else (this container is
 CPU-only) they execute in interpret mode, which runs the kernel body with the
 same tiling semantics — our correctness gate.
+
+Also hosts the device-path policy knobs shared by the ops wrappers,
+analytics and benchmarks:
+
+- :func:`device_cache_enabled` — route view-level entry points through the
+  device-resident tile cache (`repro.core.device_cache`);
+- :func:`require_accelerator` — benchmarks that claim device-cache numbers
+  must fail loudly on host-only JAX instead of silently timing the CPU
+  fallback (override with ``REPRO_BENCH_ALLOW_HOST=1``).
 """
 
 from __future__ import annotations
 
 import os
+import sys
 
 import jax
+
+_ACCELERATORS = ("tpu", "gpu", "cuda", "rocm")
 
 
 def on_tpu() -> bool:
     return jax.default_backend() == "tpu"
 
 
+def has_accelerator() -> bool:
+    return jax.default_backend() in _ACCELERATORS
+
+
 def use_interpret() -> bool:
     if os.environ.get("REPRO_FORCE_INTERPRET"):
         return True
     return not on_tpu()
+
+
+def device_cache_enabled() -> bool:
+    """Whether view-level ops default to the device-resident tile cache."""
+    from repro.core import device_cache
+
+    return device_cache.enabled()
+
+
+def require_accelerator(context: str) -> None:
+    """Fail loudly when a device benchmark would silently run on host.
+
+    Raises RuntimeError unless an accelerator backend is active.  Setting
+    ``REPRO_BENCH_ALLOW_HOST=1`` downgrades the failure to a stderr warning
+    so the host-only container can still exercise the code path (timings are
+    then explicitly labeled as host numbers by the caller).
+    """
+    if has_accelerator():
+        return
+    backend = jax.default_backend()
+    if os.environ.get("REPRO_BENCH_ALLOW_HOST"):
+        print(
+            f"WARNING: {context}: JAX backend is '{backend}' (no accelerator); "
+            "device-cache timings below measure HOST execution only",
+            file=sys.stderr,
+            flush=True,
+        )
+        return
+    raise RuntimeError(
+        f"{context}: JAX backend is '{backend}' — no accelerator available. "
+        "Refusing to report device-cache timings from a silent host fallback; "
+        "set REPRO_BENCH_ALLOW_HOST=1 to run on host anyway."
+    )

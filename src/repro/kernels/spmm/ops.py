@@ -5,9 +5,17 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from ..runtime import use_interpret
+from ..runtime import device_cache_enabled, use_interpret
 from .kernel import leaf_scan_reduce_kernel, leaf_spmm_kernel, SENTINEL
 from .ref import leaf_scan_reduce_ref, leaf_spmm_ref
+
+
+def _view_blocks(view):
+    """The view's leaf tiles — device-resident unless the cache is disabled
+    (REPRO_DISABLE_DEVICE_CACHE); the host LeafBlockView has the same fields."""
+    if device_cache_enabled():
+        return view.to_leaf_blocks_device()
+    return view.to_leaf_blocks()
 
 
 def leaf_scan_reduce(rows, x, n_block: int = 256) -> jnp.ndarray:
@@ -51,4 +59,43 @@ def leaf_spmm(rows, h, n_block: int = 64, v_tile: int = 512) -> jnp.ndarray:
     return out[:n, :d]
 
 
-__all__ = ["leaf_scan_reduce", "leaf_spmm", "leaf_scan_reduce_ref", "leaf_spmm_ref"]
+def leaf_scan_reduce_view(view, x, n_block: int = 256) -> jnp.ndarray:
+    """Per-tile scan-reduce over a view's device-resident leaf blocks.
+
+    ``y[i] = sum_j x[rows[i, j]]`` for tile i of
+    ``view.to_leaf_blocks_device()``; warm repeats on an unchanged view read
+    the pinned device tiles and transfer nothing host->device (pass ``x`` as
+    a ``jax.Array`` to keep the whole call transfer-free).
+    """
+    return leaf_scan_reduce(_view_blocks(view).rows, x, n_block=n_block)
+
+
+def leaf_spmm_view(view, h, n_block: int = 64, v_tile: int = 512) -> jnp.ndarray:
+    """Per-tile SpMM (GNN messages) over device-resident leaf blocks."""
+    return leaf_spmm(_view_blocks(view).rows, h, n_block=n_block, v_tile=v_tile)
+
+
+def spmm_view(view, h, n_block: int = 64, v_tile: int = 512) -> jnp.ndarray:
+    """Per-vertex aggregated SpMM: ``Y[u] = sum_{v in N(u)} H[v]``.
+
+    Runs the tile kernel then segment-sums tile outputs by their source
+    vertex — all on device, sized by the view's vertex count.
+    """
+    import jax
+
+    blocks = _view_blocks(view)
+    per_tile = leaf_spmm(blocks.rows, h, n_block=n_block, v_tile=v_tile)
+    return jax.ops.segment_sum(
+        per_tile, jnp.asarray(blocks.src), num_segments=view.n_vertices
+    )
+
+
+__all__ = [
+    "leaf_scan_reduce",
+    "leaf_scan_reduce_view",
+    "leaf_spmm",
+    "leaf_spmm_view",
+    "leaf_scan_reduce_ref",
+    "leaf_spmm_ref",
+    "spmm_view",
+]

@@ -1,6 +1,9 @@
 """Hypothesis property tests: the store must track a dict-of-sets oracle
-under arbitrary interleaved insert/delete batches, across partition/leaf
-hyperparameters, with invariants intact after every transaction."""
+under arbitrary interleaved insert/delete batches — including mixed
+transactions driving the vertex-lifecycle ``vset`` argument of
+``execute_write`` — across partition/leaf hyperparameters, with
+degrees/edge-count cross-checks and invariants intact after every
+transaction."""
 
 import numpy as np
 import pytest
@@ -10,6 +13,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import RapidStore
 from repro.core import cart
+from repro.core import txn as _txn
 from repro.core.leaf_pool import LeafPool
 
 N_VERTICES = 48
@@ -19,6 +23,17 @@ edge = st.tuples(
 ).filter(lambda e: e[0] != e[1])
 
 op = st.tuples(st.sampled_from(["+", "-"]), st.lists(edge, min_size=1, max_size=12))
+
+# one mixed transaction: inserts, deletes, and vertex-flag toggles (vset)
+mixed_txn = st.tuples(
+    st.lists(edge, min_size=0, max_size=10),  # inserts
+    st.lists(edge, min_size=0, max_size=8),  # deletes
+    st.lists(
+        st.tuples(st.integers(0, N_VERTICES - 1), st.booleans()),
+        min_size=0,
+        max_size=4,
+    ),  # vset: (vertex, active flag)
+)
 
 
 @settings(max_examples=40, deadline=None)
@@ -40,6 +55,44 @@ def test_store_matches_oracle(ops, p, B):
             oracle -= set(edges)
         with store.read_view() as view:
             assert view.edge_set() == oracle
+    store.check_invariants()
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    txns=st.lists(mixed_txn, min_size=1, max_size=12),
+    p=st.sampled_from([4, 16, 64]),
+    B=st.sampled_from([8, 32]),
+)
+def test_store_matches_oracle_with_vertex_lifecycle(txns, p, B):
+    """Mixed edge+vset transactions through ``execute_write`` must track a
+    (edge set, active-flag dict) oracle, with ``degrees()`` / ``n_edges``
+    cross-checked against the edge oracle after every transaction."""
+    store = RapidStore(N_VERTICES, partition_size=p, B=B, tracer_k=4)
+    edge_oracle = set()
+    active_oracle = {u: True for u in range(N_VERTICES)}
+    for ins, dels, vops in txns:
+        ins_a = np.asarray(ins, np.int64).reshape(-1, 2)
+        del_a = np.asarray(dels, np.int64).reshape(-1, 2)
+        vset = dict(vops) or None
+        _txn.execute_write(store, ins=ins_a, dels=del_a, vset=vset)
+        edge_oracle |= set(ins)
+        edge_oracle -= set(dels)
+        if vset:
+            active_oracle.update(vset)
+        with store.read_view() as view:
+            assert view.edge_set() == edge_oracle
+            assert view.n_edges == len(edge_oracle)
+            want_deg = np.zeros(N_VERTICES, np.int64)
+            for u, _ in edge_oracle:
+                want_deg[u] += 1
+            assert np.array_equal(view.degrees(), want_deg)
+            for u in range(N_VERTICES):
+                assert view.degree(u) == want_deg[u]
+            got_active = {
+                u: bool(view.snaps[u // p].active[u % p]) for u in range(N_VERTICES)
+            }
+            assert got_active == active_oracle
     store.check_invariants()
 
 

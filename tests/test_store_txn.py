@@ -1,12 +1,14 @@
 """RapidStore end-to-end: bulk load, transactions, snapshot isolation,
-version-chain bound (Prop 5.2), vertex lifecycle, concurrency stress."""
+version-chain bound (Prop 5.2), vertex lifecycle, concurrency stress —
+including deterministic (barriered) writer/reader interleavings over the
+device-resident tile cache."""
 
 import threading
 
 import numpy as np
 import pytest
 
-from repro.core import RapidStore
+from repro.core import RapidStore, device_cache
 
 
 def rand_edges(n, m, seed=0):
@@ -120,6 +122,143 @@ def test_batch_update_matches_incremental():
         s2.insert_edge(int(e[0]), int(e[1]))
     with s1.read_view() as v1, s2.read_view() as v2:
         assert v1.edge_set() == v2.edge_set()
+
+
+def test_barriered_pinned_reader_never_sees_mixed_ts_or_stale_tiles():
+    """Deterministic writer/reader interleaving (two-thread barrier protocol).
+
+    Each round: the reader pins a view and materializes its device tiles;
+    the writer then commits several transactions (triggering writer-driven
+    GC); the reader re-checks that (a) every subgraph still resolves to the
+    exact snapshot visible at its pinned timestamp — no mixed-timestamp
+    view, (b) its edge set and device tile bytes are unchanged, and (c) the
+    pool-row generation stamps are intact — no stale device tile.  After
+    the reader unpins, the writer's next commit reclaims the old versions;
+    the epilogue checks they dropped their tiles and refuse to rebuild.
+    """
+    n = 96
+    store = RapidStore.from_edges(
+        n, rand_edges(n, 700, seed=31), partition_size=16, B=8,
+        high_threshold=4, tracer_k=8,
+    )
+    rounds = 4
+    bar = threading.Barrier(2, timeout=60)
+    errors = []
+    pinned_history = []  # snaps each round's reader held
+
+    def reader():
+        try:
+            for _ in range(rounds):
+                h = store.begin_read()
+                frozen = h.view.edge_set()
+                rows0 = np.asarray(h.view.to_leaf_blocks_device().rows).copy()
+                pinned_history.append(h.view.snaps)
+                bar.wait()  # (a) -> writer commits while we stay pinned
+                bar.wait()  # (b) <- writer done committing + GC
+                assert h.view.ts < store.clock.read_timestamp()
+                for sid, snap in enumerate(h.view.snaps):
+                    assert snap.ts <= h.view.ts, "snapshot from the future"
+                    assert store.chains[sid].resolve(h.view.ts) is snap, (
+                        "mixed-timestamp view: pinned subgraph version "
+                        "no longer resolves at the pinned ts"
+                    )
+                assert h.view.edge_set() == frozen
+                dev = h.view.to_leaf_blocks_device()
+                assert np.array_equal(np.asarray(dev.rows), rows0)
+                assert all(device_cache.tiles_fresh(s) for s in h.view.snaps)
+                store.end_read(h)
+                bar.wait()  # (c) -> writer may now reclaim our versions
+        except Exception as e:  # pragma: no cover - surfaced via errors
+            errors.append(e)
+            bar.abort()
+
+    def writer():
+        try:
+            for r in range(rounds):
+                bar.wait()  # (a) <- reader pinned
+                for i in range(5):
+                    store.insert_edges(rand_edges(n, 30, seed=1000 + 10 * r + i))
+                    store.delete_edges(rand_edges(n, 20, seed=2000 + 10 * r + i))
+                bar.wait()  # (b) -> reader validates under churn
+                bar.wait()  # (c) <- reader unpinned
+                # this commit's GC can now reclaim the versions it pinned
+                store.insert_edges(rand_edges(n, 10, seed=3000 + r))
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+            bar.abort()
+
+    threads = [threading.Thread(target=reader), threading.Thread(target=writer)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    assert store.stats["versions_reclaimed"] > 0
+    live = {id(s) for c in store.chains for s in c._versions}
+    reclaimed = [s for snaps in pinned_history for s in snaps if id(s) not in live]
+    assert reclaimed, "GC should have reclaimed formerly pinned versions"
+    for s in reclaimed:
+        assert s.device_cache_bytes() == 0 and s.cache_bytes() == 0
+        with pytest.raises(RuntimeError, match="released"):
+            s.to_leaf_blocks_global()
+    store.check_invariants()
+    with store.read_view() as v:
+        dev = v.to_leaf_blocks_device()
+        host = v.to_leaf_blocks_uncached()
+        assert np.array_equal(np.asarray(dev.rows), host.rows)
+
+
+@pytest.mark.slow
+def test_concurrent_device_tile_readers_stress():
+    """Free-running stress: writers churn + GC while readers race device-tile
+    materialization; every observed view must bit-match its own host oracle
+    and pass the generation-stamp freshness audit."""
+    n = 128
+    store = RapidStore.from_edges(
+        n, rand_edges(n, 900, seed=37), partition_size=16, B=8,
+        high_threshold=4, tracer_k=16,
+    )
+    errors = []
+    stop = threading.Event()
+
+    def writer(seed):
+        r = np.random.default_rng(seed)
+        try:
+            for i in range(30):
+                edges = r.integers(0, n, size=(8, 2), dtype=np.int64)
+                edges = edges[edges[:, 0] != edges[:, 1]]
+                if not len(edges):
+                    continue
+                if r.random() < 0.6:
+                    store.insert_edges(edges)
+                else:
+                    store.delete_edges(edges)
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+        finally:
+            stop.set()
+
+    def reader(seed):
+        try:
+            while not stop.is_set():
+                with store.read_view() as view:
+                    dev = view.to_leaf_blocks_device()
+                    host = view.to_leaf_blocks_uncached()
+                    assert np.array_equal(np.asarray(dev.src), host.src)
+                    assert np.array_equal(np.asarray(dev.rows), host.rows)
+                    assert np.array_equal(np.asarray(dev.length), host.length)
+                    assert all(device_cache.tiles_fresh(s) for s in view.snaps)
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
+
+    threads = [threading.Thread(target=writer, args=(i,)) for i in range(2)]
+    threads += [threading.Thread(target=reader, args=(100 + i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors, errors
+    store.check_invariants()
 
 
 def test_concurrent_writers_readers_linearizable():
