@@ -74,6 +74,105 @@ def bench_incremental_materialize(name: str, n: int, edges: np.ndarray) -> None:
            "seed per-vertex-loop path")
 
 
+def bench_delta_plane(name: str, n: int, edges: np.ndarray) -> None:
+    """Full-concat vs delta-splice HOST assembly across the four regimes
+    backing the splice threshold: cold (no predecessor), warm (consecutive
+    reads, empty dirty set), post-1-subgraph write, post-50%-dirty write.
+
+    Forced comparisons use the knobs the assembler reads per call:
+    ``REPRO_DISABLE_DELTA_SPLICE`` (always concat) and
+    ``REPRO_SPLICE_MAX_DIRTY_FRAC`` (splice even at 50% dirty).
+    """
+    import os
+    import time
+
+    from repro.core import view_assembler
+
+    LAYOUTS = {
+        "csr": lambda v: v.to_csr(),
+        "blocks": lambda v: v.to_leaf_blocks(),
+    }
+
+    def timed_fresh_view(store, mat):
+        h = store.begin_read()
+        t0 = time.perf_counter()
+        mat(h.view)
+        dt = time.perf_counter() - t0
+        store.end_read(h)
+        return dt
+
+    def warm_all(store):
+        with store.read_view() as v:
+            v.to_coo()
+            v.to_csr()
+            v.to_leaf_blocks()
+
+    def one_subgraph_write(store, rng):
+        u = int(rng.integers(0, store.p))  # stays inside subgraph 0
+        store.insert_edge(u, int(rng.integers(store.p, n)))
+
+    def half_dirty_write(store, rng):
+        sids = rng.choice(store.n_subgraphs, store.n_subgraphs // 2, replace=False)
+        us = (sids * store.p + rng.integers(0, store.p, len(sids))).astype(np.int64)
+        us = np.minimum(us, n - 1)  # the last subgraph may be partial
+        vs = rng.integers(0, n, len(sids)).astype(np.int64)
+        store.insert_edges(np.stack([us, vs], 1))
+
+    store = RapidStore.from_edges(n, edges, **store_defaults())
+    S = store.n_subgraphs
+
+    for lname, mat in LAYOUTS.items():
+        # cold: first materialization of this layout — full concat
+        t_cold = timed_fresh_view(store, mat)
+        record(f"analytics/{name}/delta_host_{lname}_cold_full_concat",
+               t_cold * 1e6, f"S={S}")
+        # warm: consecutive read, nothing dirty — pure predecessor reuse
+        view_assembler.stats.reset()
+        t_warm = timeit(lambda: timed_fresh_view(store, mat), repeat=3, number=5)
+        assert view_assembler.stats.snapshot_touches == 0
+        record(f"analytics/{name}/delta_host_{lname}_warm_reuse", t_warm * 1e6,
+               f"vs_cold={t_cold / max(t_warm, 1e-9):.0f}x touches=0")
+
+    rng = np.random.default_rng(11)
+    for wlabel, write, frac in (
+        ("post_1subgraph_write", one_subgraph_write, None),
+        ("post_50pct_dirty_write", half_dirty_write, "1.0"),
+    ):
+        for lname, mat in LAYOUTS.items():
+            warm_all(store)  # predecessor bundle must carry every layout
+            splice_trials, concat_trials = [], []
+            for i in range(7):
+                write(store, rng)
+                if frac is not None:
+                    os.environ["REPRO_SPLICE_MAX_DIRTY_FRAC"] = frac
+                view_assembler.stats.reset()
+                splice_trials.append(timed_fresh_view(store, mat))
+                touches = view_assembler.stats.snapshot_touches
+                assert view_assembler.stats.full_concats == 0, (
+                    f"{wlabel}/{lname}: splice run unexpectedly fell back "
+                    "to full concat"
+                )
+                os.environ.pop("REPRO_SPLICE_MAX_DIRTY_FRAC", None)
+                warm_all(store)  # re-warm every layout for the next trial
+
+                write(store, rng)
+                os.environ["REPRO_DISABLE_DELTA_SPLICE"] = "1"
+                concat_trials.append(timed_fresh_view(store, mat))
+                os.environ.pop("REPRO_DISABLE_DELTA_SPLICE", None)
+                warm_all(store)
+            t_splice = float(np.median(splice_trials))
+            t_concat = float(np.median(concat_trials))
+            record(
+                f"analytics/{name}/delta_host_{wlabel}_{lname}_splice",
+                t_splice * 1e6, f"touches={touches}",
+            )
+            record(
+                f"analytics/{name}/delta_host_{wlabel}_{lname}_full_concat",
+                t_concat * 1e6,
+                f"splice_speedup={t_concat / max(t_splice, 1e-9):.2f}x",
+            )
+
+
 def bench_device_cache_analytics(name: str, n: int, edges: np.ndarray) -> None:
     """Device tile cache on the analytics path: cold (upload + concat) vs
     warm (zero host->device transfer) PageRank over the pinned device COO."""
@@ -126,6 +225,7 @@ def run(quick: bool = False) -> None:
                f"edges={len(src_s)}")
         if name == "lj":
             bench_incremental_materialize(name, n, edges)
+            bench_delta_plane(name, n, edges)
 
         algos = {
             "pr": lambda s, d: pagerank_coo(s, d, n).block_until_ready(),

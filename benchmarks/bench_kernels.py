@@ -62,6 +62,72 @@ def bench_device_tile_cache(quick: bool = False) -> None:
                f"vs_host_reupload={t_host / max(t_dev, 1e-9):.2f}x")
         record("kernels/scan_reduce_host_reupload", t_host * 1e6, "")
 
+    bench_device_delta_splice(store, n)
+
+
+def bench_device_delta_splice(store, n: int) -> None:
+    """DEVICE assembly: delta splice vs the O(S) full-concat reference
+    (device_cache.assemble_leaf_blocks) across the regimes that back the
+    splice threshold — warm (pure reuse), post-1-subgraph write, and
+    post-50%-dirty write (spliced via REPRO_SPLICE_MAX_DIRTY_FRAC=1.0)."""
+    import os
+    import time
+
+    from repro.core import view_assembler
+
+    def timed_fresh_dev_blocks(block=True):
+        h = store.begin_read()
+        t0 = time.perf_counter()
+        dev = h.view.to_leaf_blocks_device()
+        if block:
+            dev.rows.block_until_ready()
+        dt = time.perf_counter() - t0
+        store.end_read(h)
+        return dt
+
+    timed_fresh_dev_blocks()  # ensure a retired predecessor bundle exists
+    t_warm = timeit(lambda: timed_fresh_dev_blocks(), repeat=3, number=5)
+    with store.read_view() as v:
+        t_full = timeit(
+            lambda: device_cache.assemble_leaf_blocks(
+                v.snaps, store.B
+            ).rows.block_until_ready(),
+            repeat=3,
+        )
+    record("kernels/device_tiles_warm_reuse", t_warm * 1e6,
+           f"vs_full_concat={t_full / max(t_warm, 1e-9):.0f}x")
+    record("kernels/device_tiles_full_concat", t_full * 1e6, f"S={store.n_subgraphs}")
+
+    rng = np.random.default_rng(9)
+    for label, n_dirty, frac in (
+        ("post_1subgraph_write", 1, None),
+        ("post_50pct_dirty_write", store.n_subgraphs // 2, "1.0"),
+    ):
+        splice_trials, concat_trials = [], []
+        for _ in range(5):
+            sids = rng.choice(store.n_subgraphs, n_dirty, replace=False)
+            us = (sids * store.p + rng.integers(0, store.p, n_dirty)).astype(np.int64)
+            us = np.minimum(us, n - 1)  # the last subgraph may be partial
+            vs = rng.integers(0, n, n_dirty).astype(np.int64)
+            store.insert_edges(np.stack([us, vs], 1))
+            if frac is not None:
+                os.environ["REPRO_SPLICE_MAX_DIRTY_FRAC"] = frac
+            view_assembler.stats.reset()
+            splice_trials.append(timed_fresh_dev_blocks())
+            assert view_assembler.stats.full_concats == 0, \
+                f"{label}: device splice run fell back to full concat"
+            os.environ.pop("REPRO_SPLICE_MAX_DIRTY_FRAC", None)
+            with store.read_view() as v:
+                t0 = time.perf_counter()
+                device_cache.assemble_leaf_blocks(v.snaps, store.B).rows.block_until_ready()
+                concat_trials.append(time.perf_counter() - t0)
+        t_splice = float(np.median(splice_trials))
+        t_concat = float(np.median(concat_trials))
+        record(f"kernels/device_tiles_{label}_splice", t_splice * 1e6,
+               f"dirty={n_dirty}")
+        record(f"kernels/device_tiles_{label}_full_concat", t_concat * 1e6,
+               f"splice_speedup={t_concat / max(t_splice, 1e-9):.2f}x")
+
 
 def run(quick: bool = False) -> None:
     rng = np.random.default_rng(0)

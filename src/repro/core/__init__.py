@@ -7,9 +7,12 @@ from .reader_tracer import ReaderTracer, FREE_TS
 from .snapshot import CSRView, LeafBlockView, SnapshotView
 from .store import RapidStore, ReadHandle
 from .subgraph import SubgraphSnapshot, build_subgraph
-from .version_chain import VersionChain
+from .version_chain import CommitLineage, VersionChain
+from .view_assembler import ViewAssembly
 
 __all__ = [
+    "CommitLineage",
+    "ViewAssembly",
     "LogicalClock",
     "LeafPool",
     "SENTINEL",

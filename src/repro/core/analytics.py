@@ -163,9 +163,81 @@ def wcc_view(view, device: Optional[bool] = None) -> jnp.ndarray:
     )
 
 
-def triangle_count_view(view) -> int:
-    """TC over the cached CSR (store an undirected graph for exact counts)."""
-    return triangle_count_fast(view.to_csr())
+def triangle_count_view(view, device: Optional[bool] = None) -> int:
+    """Triangle count over a snapshot view (store an undirected simple graph
+    for exact counts).
+
+    By default routes through the Pallas ``intersect_tiles_view`` entry point
+    on the view's device-resident leaf tiles (paper §6.5's hybrid
+    merge/probe rule applied as operand orientation); pass ``device=False``
+    or set ``REPRO_DISABLE_DEVICE_CACHE`` for the host CSR loop.
+    """
+    if device is None:
+        device = device_cache.enabled()
+    if not device:
+        return triangle_count_fast(view.to_csr())
+    return _triangle_count_device(view)
+
+
+def _triangle_count_device(view, batch: int = 8192) -> int:
+    """Device TC: one Pallas intersect per (leaf-tile, leaf-tile) pair.
+
+    Enumerate each undirected edge once as (u, v), u < v, and intersect the
+    *full* neighbor tile sets of u and v on device: every common neighbor w
+    closes the triangle {u, v, w}, and each triangle is discovered exactly
+    once per edge — three times total — so the pair-count sum is 3T.  Tiles
+    are the delta-plane assembled leaf blocks, so a repeat count after a
+    small write re-uses every clean subgraph's device rows.
+
+    The paper's hybrid rule (merge when the degree ratio < 10, probe
+    otherwise) picks the operand *orientation*: probing keeps the smaller
+    tile resident as `a` (see kernels.intersect.ops.intersect_count_hybrid).
+    Assumes a simple graph (no self-loops), like the host oracle.
+    """
+    from repro.kernels.intersect import sum_intersect_tiles_view
+
+    blocks = view.to_leaf_blocks()
+    from . import view_assembler
+
+    src, order = view_assembler.block_src_index(view)
+    lens = np.asarray(blocks.length, np.int64)
+    s_sorted = src[order]
+
+    csr = view.to_csr()
+    n = csr.n_vertices
+    deg = np.diff(csr.offsets)
+    eu = np.repeat(np.arange(n, dtype=np.int64), deg)
+    ev = csr.indices.astype(np.int64)
+    fwd = ev > eu  # orient each undirected edge low -> high, once
+    eu, ev = eu[fwd], ev[fwd]
+    if len(eu) == 0:
+        return 0
+
+    # per-edge tile spans via the src-sorted block index
+    lo_u = np.searchsorted(s_sorted, eu, "left")
+    hi_u = np.searchsorted(s_sorted, eu, "right")
+    lo_v = np.searchsorted(s_sorted, ev, "left")
+    hi_v = np.searchsorted(s_sorted, ev, "right")
+    ku, kv = hi_u - lo_u, hi_v - lo_v
+    pairs_per_edge = ku * kv
+    total_pairs = int(pairs_per_edge.sum())
+    if total_pairs == 0:
+        return 0
+    # all (tile of u) x (tile of v) pairs, vectorized
+    e_idx = np.repeat(np.arange(len(eu)), pairs_per_edge)
+    rank = np.arange(total_pairs, dtype=np.int64) - np.repeat(
+        np.cumsum(pairs_per_edge) - pairs_per_edge, pairs_per_edge
+    )
+    ia = order[lo_u[e_idx] + rank // kv[e_idx]]
+    ib = order[lo_v[e_idx] + rank % kv[e_idx]]
+    # hybrid orientation: when the size ratio selects the probe strategy,
+    # probe with the smaller tile as operand `a`
+    la, lb = lens[ia], lens[ib]
+    big, small = np.maximum(la, lb), np.maximum(np.minimum(la, lb), 1)
+    swap = (big >= HYBRID_RATIO * small) & (la > lb)
+    ia2 = np.where(swap, ib, ia)
+    ib2 = np.where(swap, ia, ib)
+    return sum_intersect_tiles_view(view, ia2, ib2, batch=batch) // 3
 
 
 # ---------------------------------------------------------------------------

@@ -1,13 +1,30 @@
-"""Device-resident leaf-block tile cache (ROADMAP: device-resident cached tiles).
+"""Device-resident leaf-block tile cache — per-snapshot layer of the
+three-layer memo + delta-plane design.
 
-PR 1 memoized snapshot materialization on the *host*; every Pallas
-scan/intersect/spmm call still re-shipped the leaf tiles host->device.  This
-module keeps each :class:`~repro.core.subgraph.SubgraphSnapshot`'s
-materialized arrays resident on the accelerator as ``jax.Array`` tiles, so a
-warm repeat query performs **zero** host->device leaf-block transfers: the
-view-level assembly (:meth:`SnapshotView.to_leaf_blocks_device` /
-``to_coo_device`` / ``to_csr_device``) is an O(dirty) upload of the touched
-subgraphs plus an O(S) on-device concatenation.
+View materialization is memoized at three layers, each exploiting snapshot
+immutability:
+
+1. **Per-subgraph host** (:meth:`SubgraphSnapshot.to_coo_global` /
+   ``to_leaf_blocks_global``): each immutable snapshot computes its
+   vectorized arrays once; a commit creates new (cold) snapshots only for
+   the subgraphs it touches.
+2. **Per-subgraph device** (this module): each snapshot's host arrays are
+   uploaded once (``jax.device_put``) and pinned as ``jax.Array`` tiles —
+   one transfer per snapshot version, ever.  A warm repeat query performs
+   **zero** host->device leaf-block transfers.
+3. **Per-view delta plane** (:mod:`repro.core.view_assembler`): the global
+   concatenated arrays of a view.  A fresh view splices only the dirty
+   subgraphs' tiles into its *predecessor view's* concatenated device
+   arrays (``jax.lax.dynamic_update_slice`` when segment sizes are
+   unchanged, an O(dirty)-run concat otherwise), so post-write assembly is
+   O(dirty) device work instead of the O(S) re-concatenation this module's
+   :func:`assemble_leaf_blocks`/:func:`assemble_coo` perform.  Those
+   ``assemble_*`` functions remain as the non-delta full-concat reference
+   used by benchmarks to quantify the splice win.  The assembler's dirty
+   uploads go through :func:`leaf_block_tiles` / :func:`coo_tiles` with
+   ``wait=False`` — async prefetch: per-subgraph ``device_put`` is issued
+   as soon as each host tile is ready, overlapping transfer with the host
+   materialization of the remaining dirty subgraphs.
 
 Lifecycle contract (release / GC invalidation)
 ----------------------------------------------
@@ -96,12 +113,13 @@ def enabled() -> bool:
     return not os.environ.get("REPRO_DISABLE_DEVICE_CACHE")
 
 
-def _device_put(host_arrays: Sequence[np.ndarray]) -> tuple:
+def _device_put(host_arrays: Sequence[np.ndarray], wait: bool = True) -> tuple:
     import jax
 
     out = tuple(jax.device_put(a) for a in host_arrays)
-    for o in out:
-        o.block_until_ready()
+    if wait:
+        for o in out:
+            o.block_until_ready()
     with _lock:
         stats.uploads += len(host_arrays)
         # charge the *device* bytes: device_put canonicalizes int64 -> int32
@@ -146,12 +164,17 @@ def tiles_fresh(snap) -> bool:
     return bool(np.array_equal(snap.pool.generation[ids], gens))
 
 
-def leaf_block_tiles(snap) -> tuple:
+def leaf_block_tiles(snap, wait: bool = True) -> tuple:
     """Device-resident ``(src, rows, length)`` tiles of one snapshot.
 
     Memoized on the snapshot: the first call uploads the host-memoized
     arrays (one transfer per snapshot version, ever); repeats return the
     pinned ``jax.Array`` tuple.  Raises RuntimeError on released snapshots.
+
+    ``wait=False`` skips the post-upload ``block_until_ready`` — the delta
+    plane's async prefetch path issues one non-blocking ``jax.device_put``
+    per dirty subgraph so the transfer overlaps the next subgraph's host
+    materialization; JAX sequences any downstream use automatically.
     """
     cached = snap._dev_blocks_cache
     if cached is not None:
@@ -164,14 +187,17 @@ def leaf_block_tiles(snap) -> tuple:
             return cached
         _miss()
         host = snap.to_leaf_blocks_global()  # raises if released; copies pool rows
-        tiles = _device_put(host)
+        tiles = _device_put(host, wait=wait)
         snap._dev_gen_stamp = _gen_stamp(snap)
         snap._dev_blocks_cache = tiles
         return tiles
 
 
-def coo_tiles(snap) -> tuple:
-    """Device-resident ``(src, dst)`` COO tiles of one snapshot (memoized)."""
+def coo_tiles(snap, wait: bool = True) -> tuple:
+    """Device-resident ``(src, dst)`` COO tiles of one snapshot (memoized).
+
+    ``wait=False`` prefetches without blocking (see :func:`leaf_block_tiles`).
+    """
     cached = snap._dev_coo_cache
     if cached is not None:
         _hit()
@@ -183,7 +209,7 @@ def coo_tiles(snap) -> tuple:
             return cached
         _miss()
         host = snap.to_coo_global()
-        tiles = _device_put(host)
+        tiles = _device_put(host, wait=wait)
         if snap._dev_gen_stamp is None:
             snap._dev_gen_stamp = _gen_stamp(snap)
         snap._dev_coo_cache = tiles
@@ -198,7 +224,11 @@ def note_release(snap) -> None:
 
 
 # ---------------------------------------------------------------------------
-# View-level assembly: O(dirty) upload + O(S) device concat
+# View-level assembly: O(dirty) upload + O(S) device concat.
+# This is the NON-DELTA reference path: SnapshotView.to_*_device route
+# through repro.core.view_assembler (which splices against the predecessor
+# view and falls back to an equivalent of these when no predecessor exists);
+# benchmarks call these directly to time the full-concat baseline.
 # ---------------------------------------------------------------------------
 @dataclass(frozen=True)
 class DeviceLeafBlockView:

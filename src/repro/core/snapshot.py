@@ -12,34 +12,41 @@ Materializers produce device-ready layouts:
   by the Pallas scan/intersect/spmm kernels (the TPU analogue of the paper's
   AVX2 leaf scans).
 
-Cache lifecycle
----------------
+Cache lifecycle — the three-layer memo + delta plane
+----------------------------------------------------
 
-Materialization is memoized at two layers, exploiting snapshot immutability:
+Materialization is memoized at three layers, each exploiting snapshot
+immutability:
 
-1. **Per-subgraph** (:meth:`SubgraphSnapshot.to_coo_global` /
+1. **Per-subgraph host** (:meth:`SubgraphSnapshot.to_coo_global` /
    ``to_leaf_blocks_global``): each immutable snapshot computes its own
    vectorized COO / leaf-block arrays once (global src ids baked in) and
-   caches them for every view that resolves it.  A write produces a *new* snapshot object only for the
-   subgraphs it touches, so after a commit dirtying ``d`` of ``S``
-   subgraphs, the next global materialization costs O(d) rebuild + O(S)
-   concatenation instead of an O(S) full rebuild.  The caches are dropped in
+   caches them for every view that resolves it.  A write produces a *new*
+   snapshot object only for the subgraphs it touches, so only dirty
+   subgraphs ever rebuild.  The caches are dropped in
    :meth:`SubgraphSnapshot.release` — GC recycles the version's pool rows,
    so invalidation there is a correctness requirement, not just a leak fix —
    and are charged to :meth:`RapidStore.memory_bytes`.
-2. **Per-view**: the assembled global arrays are cached on the view itself
-   (views are immutable too), so repeat ``to_coo``/``to_csr`` calls on an
-   unchanged view are O(1).
+2. **Per-subgraph device** (:mod:`repro.core.device_cache`): each
+   snapshot's arrays are uploaded once and pinned on the accelerator as
+   ``jax.Array`` tiles; a warm repeat performs zero host->device transfers.
+3. **Per-view delta plane** (:mod:`repro.core.view_assembler`): the
+   assembled *global* arrays.  Each view owns a
+   :class:`~repro.core.view_assembler.ViewAssembly` bundle recording the
+   assembled columns plus per-subgraph segment offsets.  ``begin_read``
+   links a fresh view to the most recently retired view's bundle (weakly —
+   GC still reclaims superseded bundles) together with the commit-lineage
+   handle; materialization then *splices* only the dirty subgraphs'
+   segments into the predecessor's arrays — O(d) rebuild + memmove-style
+   patch on host, ``jax.lax.dynamic_update_slice`` / O(d)-run concat on
+   device with async per-subgraph upload prefetch — instead of the O(S)
+   concatenation a predecessor-less view pays.  Repeat calls on one view
+   are O(1).
 
 All cached arrays are read-only; callers needing scratch space must copy.
 ``to_coo_uncached`` / ``to_leaf_blocks_uncached`` keep the original
-per-vertex-loop path alive as the oracle for tests and benchmarks.
-
-Device variants (``to_coo_device`` / ``to_csr_device`` /
-``to_leaf_blocks_device``) add a third memo layer through
-:mod:`repro.core.device_cache`: per-subgraph tiles stay resident on the
-accelerator as ``jax.Array``s, so a warm repeat performs zero host->device
-transfers and a post-write assembly uploads only the dirty subgraphs.
+per-vertex-loop path alive as the oracle for tests and benchmarks — they
+never touch any cache layer.
 """
 
 from __future__ import annotations
@@ -86,24 +93,39 @@ class LeafBlockView:
 
 
 class SnapshotView:
-    """Reader workspace over resolved per-subgraph snapshots."""
+    """Reader workspace over resolved per-subgraph snapshots.
+
+    ``pred`` is a weak reference to the predecessor view's
+    :class:`~repro.core.view_assembler.ViewAssembly` (the most recently
+    retired view, handed over by :meth:`RapidStore.begin_read`) and
+    ``lineage`` the store's commit log — together they let materializers
+    splice instead of concatenate.  ``B`` is the store's configured leaf
+    width, so even a subgraph-less view emits block shapes matching the
+    device path's padding.
+    """
 
     __slots__ = (
-        "ts", "p", "snaps", "n_vertices", "_coo", "_csr", "_blocks",
-        "_dev_coo", "_dev_csr", "_dev_blocks",
+        "ts", "p", "snaps", "n_vertices", "B", "assembly", "_pred", "_lineage",
     )
 
-    def __init__(self, ts: int, p: int, snaps: Tuple[SubgraphSnapshot, ...], n_vertices: int):
+    def __init__(
+        self,
+        ts: int,
+        p: int,
+        snaps: Tuple[SubgraphSnapshot, ...],
+        n_vertices: int,
+        B: Optional[int] = None,
+        pred=None,
+        lineage=None,
+    ):
         self.ts = ts
         self.p = p
         self.snaps = snaps
         self.n_vertices = n_vertices
-        self._coo: Optional[Tuple[np.ndarray, np.ndarray]] = None
-        self._csr: Optional[CSRView] = None
-        self._blocks: Optional[LeafBlockView] = None
-        self._dev_coo = None
-        self._dev_csr = None
-        self._dev_blocks = None
+        self.B = int(B) if B is not None else (snaps[0].pool.B if snaps else 8)
+        self.assembly = None  # ViewAssembly, created lazily on materialization
+        self._pred = pred  # weakref to the predecessor view's ViewAssembly
+        self._lineage = lineage  # CommitLineage for the dirty-set diff
 
     # -- point reads ------------------------------------------------------------
     def _local(self, u: int) -> Tuple[SubgraphSnapshot, int]:
@@ -131,19 +153,15 @@ class SnapshotView:
 
     # -- materialization -----------------------------------------------------------
     def to_coo(self) -> Tuple[np.ndarray, np.ndarray]:
-        """Global (src, dst) in (u, v) order — assembled from snapshot caches.
+        """Global (src, dst) in (u, v) order — delta-plane assembled.
 
-        Per-subgraph caches already carry global src ids, so assembly is two
-        concatenations: O(d) rebuild for dirty subgraphs + O(E) copy.
+        Spliced from the predecessor view's cached arrays when the lineage
+        diff allows (O(dirty) segment rebuild + one output pass); full
+        per-subgraph concat otherwise.  See :mod:`repro.core.view_assembler`.
         """
-        if self._coo is None:
-            parts = [s.to_coo_global() for s in self.snaps]
-            src = np.concatenate([p[0] for p in parts])
-            dst = np.concatenate([p[1] for p in parts])
-            src.setflags(write=False)
-            dst.setflags(write=False)
-            self._coo = (src, dst)
-        return self._coo
+        from . import view_assembler
+
+        return view_assembler.host_coo(self)
 
     def to_coo_uncached(self) -> Tuple[np.ndarray, np.ndarray]:
         """Full-rebuild reference path (per-vertex loops; the seed oracle)."""
@@ -157,38 +175,17 @@ class SnapshotView:
         return src, dst
 
     def to_csr(self) -> CSRView:
-        if self._csr is None:
-            src, dst = self.to_coo()
-            degs = np.bincount(src, minlength=self.n_vertices)
-            offsets = np.zeros(self.n_vertices + 1, np.int64)
-            np.cumsum(degs, out=offsets[1:])
-            offsets.setflags(write=False)
-            # to_coo emits per-subgraph (u sorted, v sorted) — already CSR order.
-            self._csr = CSRView(offsets, dst)
-        return self._csr
+        """Global CSR — cross-snapshot delta: offsets are patched from the
+        predecessor's degrees over dirty vertex ranges when splicing."""
+        from . import view_assembler
+
+        return view_assembler.host_csr(self)
 
     def to_leaf_blocks(self) -> LeafBlockView:
-        if self._blocks is None:
-            srcs, rows, lens = [], [], []
-            for s in self.snaps:
-                ls, lr, ll = s.to_leaf_blocks_global()
-                srcs.append(ls)
-                rows.append(lr)
-                lens.append(ll)
-            if not srcs:
-                B = 8
-                blocks = LeafBlockView(
-                    np.zeros(0, np.int32), np.zeros((0, B), np.int32), np.zeros(0, np.int32)
-                )
-            else:
-                src = np.concatenate(srcs).astype(np.int32)
-                row = np.concatenate(rows)
-                ln = np.concatenate(lens)
-                for a in (src, row, ln):
-                    a.setflags(write=False)
-                blocks = LeafBlockView(src, row, ln)
-            self._blocks = blocks
-        return self._blocks
+        """Global padded leaf-tile stream — delta-plane assembled."""
+        from . import view_assembler
+
+        return view_assembler.host_blocks(self)
 
     def to_leaf_blocks_uncached(self) -> LeafBlockView:
         """Full-rebuild reference path for the leaf-tile stream (oracle)."""
@@ -220,7 +217,7 @@ class SnapshotView:
                     rows.append(r)
                     lens.append(int(n))
         if not rows:
-            B = self.snaps[0].pool.B if self.snaps else 8
+            B = self.B
             return LeafBlockView(
                 np.zeros(0, np.int32), np.zeros((0, B), np.int32), np.zeros(0, np.int32)
             )
@@ -234,37 +231,32 @@ class SnapshotView:
     def to_coo_device(self):
         """Global (src, dst) as device-resident ``jax.Array``s.
 
-        Assembled by on-device concatenation of per-subgraph device COO
-        tiles: O(dirty) upload + O(S) concat; a warm repeat (unchanged
-        snapshots) moves zero bytes host->device.
+        Delta-plane assembled: the predecessor view's concatenated device
+        arrays are reused and only dirty subgraphs' tiles are spliced in
+        (async-prefetched uploads); a predecessor-less view pays one O(S)
+        device concat.  A warm repeat moves zero bytes host->device.
         """
-        if self._dev_coo is None:
-            from . import device_cache
+        from . import view_assembler
 
-            self._dev_coo = device_cache.assemble_coo(self.snaps)
-        return self._dev_coo
+        return view_assembler.device_coo(self)
 
     def to_csr_device(self):
-        """Device CSR built from the cached device COO (see ``to_csr``)."""
-        if self._dev_csr is None:
-            from . import device_cache
+        """Device CSR built from the (spliced) device COO (see ``to_csr``)."""
+        from . import view_assembler
 
-            self._dev_csr = device_cache.assemble_csr(self.snaps, self.n_vertices)
-        return self._dev_csr
+        return view_assembler.device_csr(self)
 
     def to_leaf_blocks_device(self):
         """Device-resident leaf-tile stream feeding the Pallas kernels.
 
         Same layout as :meth:`to_leaf_blocks` but the tiles never leave the
         accelerator once uploaded; repeat kernel calls on an unchanged view
-        re-use the pinned arrays directly.
+        re-use the pinned arrays directly, and a post-write view splices
+        only the dirty subgraphs' tiles on device.
         """
-        if self._dev_blocks is None:
-            from . import device_cache
+        from . import view_assembler
 
-            B = self.snaps[0].pool.B if self.snaps else 8
-            self._dev_blocks = device_cache.assemble_leaf_blocks(self.snaps, B)
-        return self._dev_blocks
+        return view_assembler.device_blocks(self)
 
     # -- verification ------------------------------------------------------------
     def edge_set(self) -> set:

@@ -18,6 +18,7 @@ snapshot per subgraph at the pinned timestamp, and hands back an immutable
 from __future__ import annotations
 
 import threading
+import weakref
 from contextlib import contextmanager
 from dataclasses import dataclass
 from typing import Dict, Iterator, List, Optional, Tuple
@@ -29,7 +30,7 @@ from .leaf_pool import LeafPool
 from .reader_tracer import ReaderTracer
 from .snapshot import SnapshotView
 from .subgraph import SubgraphSnapshot, build_subgraph
-from .version_chain import VersionChain
+from .version_chain import CommitLineage, VersionChain
 from . import txn as _txn
 
 
@@ -74,6 +75,11 @@ class RapidStore:
         self._vid_lock = threading.Lock()
         self._free_vids: List[int] = []
         self.stats: Dict[str, int] = {"commits": 0, "versions_reclaimed": 0}
+        # delta plane: commit lineage + the most recent retired view's
+        # assembly bundle (strong here, weak in views — see begin_read)
+        self.lineage = CommitLineage()
+        self._retired_assembly = None
+        self._retire_lock = threading.Lock()
 
     # -- construction -------------------------------------------------------------
     @classmethod
@@ -103,6 +109,9 @@ class RapidStore:
         store._vid_lock = threading.Lock()
         store._free_vids = []
         store.stats = {"commits": 0, "versions_reclaimed": 0}
+        store.lineage = CommitLineage()
+        store._retired_assembly = None
+        store._retire_lock = threading.Lock()
 
         store.chains = []
         if len(edges):
@@ -206,7 +215,14 @@ class RapidStore:
 
     # -- read API ---------------------------------------------------------------
     def begin_read(self) -> ReadHandle:
-        """Register a read query and build its snapshot view (paper §5.2.2)."""
+        """Register a read query and build its snapshot view (paper §5.2.2).
+
+        The view is lineage-linked: it receives a *weak* reference to the
+        most recently retired view's assembly bundle plus the commit-lineage
+        handle, so its materializers can splice only the subgraphs dirtied
+        between the two timestamps (delta plane) instead of re-concatenating
+        all S.  Weak linkage keeps GC free to reclaim superseded bundles.
+        """
         t = self.clock.read_timestamp()
         slot = self.tracer.register(t)
         # Close the register/GC race: re-read t_r after publishing our slot;
@@ -216,10 +232,34 @@ class RapidStore:
             self.tracer.update(slot, t2)
             t = t2
         snaps = tuple(chain.resolve(t) for chain in self.chains)
-        return ReadHandle(slot=slot, ts=t, view=SnapshotView(t, self.p, snaps, self.n_vertices))
+        retired = self._retired_assembly
+        view = SnapshotView(
+            t, self.p, snaps, self.n_vertices, B=self.B,
+            pred=weakref.ref(retired) if retired is not None else None,
+            lineage=self.lineage,
+        )
+        return ReadHandle(slot=slot, ts=t, view=view)
 
     def end_read(self, handle: ReadHandle) -> None:
         self.tracer.unregister(handle.slot)
+        self._retire_view(handle.view)
+
+    def _retire_view(self, view: SnapshotView) -> None:
+        """Keep the newest retired view's assembly state for successors.
+
+        Only bundles that actually assembled something are kept (a
+        point-read-only view must not clobber a materialized predecessor),
+        and only the single newest — the previous bundle loses its last
+        strong reference here, so Python GC reclaims superseded assembly
+        arrays instead of a lineage-linked chain pinning all history.
+        """
+        a = view.assembly
+        if a is None or not a.has_content():
+            return
+        with self._retire_lock:
+            cur = self._retired_assembly
+            if cur is None or a.ts >= cur.ts:
+                self._retired_assembly = a
 
     @contextmanager
     def read_view(self) -> Iterator[SnapshotView]:
@@ -244,6 +284,10 @@ class RapidStore:
                 total += snap.device_cache_bytes()
                 for d in snap.dirs.values():
                     total += d.leaf_ids.nbytes + d.leaf_min.nbytes
+        retired = self._retired_assembly
+        if retired is not None:
+            # the one retained delta-plane bundle (successor splice source)
+            total += retired.host_bytes() + retired.device_bytes()
         return total
 
     def fill_ratio(self) -> float:

@@ -383,6 +383,15 @@ class SubgraphSnapshot:
             np.concatenate([ci_lens, lens[keep].astype(np.int64)]).astype(np.int32),
         )
 
+    def has_host_cache(self) -> bool:
+        """True when a host materialization memo is already warm.
+
+        The delta plane's async prefetch orders dirty subgraphs host-warm
+        first, so their ``jax.device_put`` is in flight while the cold
+        subgraphs still rebuild on host.
+        """
+        return self._blocks_cache is not None or self._coo_cache is not None
+
     def cache_bytes(self) -> int:
         """Bytes held by the memoized materializations (memory accounting)."""
         total = 0

@@ -84,6 +84,10 @@ def execute_write(
         for sid, snap in new_snaps.items():
             snap.ts = t
             store.chains[sid].link(snap)
+        # Lineage BEFORE publish: once t_r >= t any reader may diff a window
+        # containing t, so the (ts, dirty sids) record must already be
+        # queryable (delta-plane splice, see core.view_assembler).
+        store.lineage.record(t, new_snaps.keys())
         store.clock.publish(t)
         store.stats["commits"] += 1
 

@@ -4,14 +4,83 @@ Each subgraph keeps its committed snapshots newest-first.  A version ``v_i``
 is reclaimable when it is not the head and no active reader's start timestamp
 falls in ``[v_i.ts, v_{i-1}.ts)`` (the half-open window during which ``v_i``
 was the visible version).  Proposition 5.2 bounds the chain length at k+1.
+
+This module also hosts :class:`CommitLineage`, the store-wide commit log the
+delta plane (:mod:`repro.core.view_assembler`) consumes: one record per
+committed write transaction carrying ``(commit ts, dirty subgraph-id set)``.
+A fresh :class:`~repro.core.snapshot.SnapshotView` diffs its timestamp
+against its predecessor view's through the lineage to learn exactly which
+subgraphs changed between the two reads — the O(d) input that lets view
+materialization splice instead of re-concatenating all S subgraphs.
 """
 
 from __future__ import annotations
 
+import bisect
 import threading
-from typing import List, Optional, Sequence
+from typing import FrozenSet, Iterable, List, Optional, Sequence
 
 from .subgraph import SubgraphSnapshot
+
+
+class CommitLineage:
+    """Bounded, timestamp-ordered log of committed writes' dirty-subgraph sets.
+
+    Writers append a record *before* publishing their commit timestamp, so by
+    the time any reader observes ``t_r >= ts`` the record for ``ts`` is
+    already queryable — :meth:`dirty_between` can therefore answer exactly
+    for any window bounded by published timestamps.
+
+    The log is bounded at ``max_records``; trimming advances ``_base_ts``
+    (every commit with ``ts > _base_ts`` is still recorded).  A query whose
+    window reaches at or below the trimmed region returns ``None`` —
+    "unknown", which the view assembler treats as a full-concat fallback.
+    """
+
+    __slots__ = ("_lock", "_ts", "_sids", "_base_ts", "max_records")
+
+    def __init__(self, max_records: int = 4096) -> None:
+        self._lock = threading.Lock()
+        self._ts: List[int] = []
+        self._sids: List[FrozenSet[int]] = []
+        self._base_ts = 0  # every commit with ts > _base_ts is recorded
+        self.max_records = int(max_records)
+
+    def record(self, ts: int, sids: Iterable[int]) -> None:
+        """Log one commit.  Called by the writer before publishing ``ts``."""
+        dirty = frozenset(int(s) for s in sids)
+        with self._lock:
+            i = bisect.bisect_right(self._ts, ts)
+            self._ts.insert(i, int(ts))
+            self._sids.insert(i, dirty)
+            while len(self._ts) > self.max_records:
+                self._base_ts = self._ts[0]
+                del self._ts[0]
+                del self._sids[0]
+
+    def dirty_between(self, a: int, b: int) -> Optional[FrozenSet[int]]:
+        """Union of dirty sets for commits in ``(min(a,b), max(a,b)]``.
+
+        Symmetric in its arguments: the subgraphs *not* in the returned set
+        resolve to identical snapshot versions at both timestamps, whichever
+        is older.  Returns ``None`` when the window reaches into the trimmed
+        region and the diff is unknowable.
+        """
+        lo, hi = (a, b) if a <= b else (b, a)
+        if lo == hi:
+            return frozenset()
+        with self._lock:
+            if lo < self._base_ts:
+                return None
+            i = bisect.bisect_right(self._ts, lo)
+            j = bisect.bisect_right(self._ts, hi)
+            out: set = set()
+            for k in range(i, j):
+                out |= self._sids[k]
+        return frozenset(out)
+
+    def __len__(self) -> int:
+        return len(self._ts)
 
 
 class VersionChain:

@@ -53,9 +53,11 @@ def intersect_count_hybrid(a, b) -> jnp.ndarray:
 def intersect_tiles_view(view, idx_a, idx_b, q_block: int = 64, chunk: int = 128):
     """|tile_a ∩ tile_b| for pairs of a view's device-resident leaf tiles.
 
-    ``idx_a``/``idx_b`` index rows of ``view.to_leaf_blocks_device()``; the
-    gathers happen on device, so warm repeats move no leaf data host->device.
-    Honors REPRO_DISABLE_DEVICE_CACHE (host tiles re-upload per call then).
+    ``idx_a``/``idx_b`` index rows of ``view.to_leaf_blocks_device()`` (the
+    delta-plane assembled tile stream — after a small write only the dirty
+    subgraphs' tiles were spliced on device); the gathers happen on device,
+    so warm repeats move no leaf data host->device.  Honors
+    REPRO_DISABLE_DEVICE_CACHE (host tiles re-upload per call then).
     """
     if device_cache_enabled():
         rows = view.to_leaf_blocks_device().rows
@@ -66,9 +68,33 @@ def intersect_tiles_view(view, idx_a, idx_b, q_block: int = 64, chunk: int = 128
     return intersect_count(a, b, q_block=q_block, chunk=chunk)
 
 
+def sum_intersect_tiles_view(
+    view, idx_a, idx_b, batch: int = 8192, q_block: int = 64, chunk: int = 128
+) -> int:
+    """Sum of |tile_a ∩ tile_b| over many tile pairs, batched on device.
+
+    The workhorse of device-path triangle counting: pair lists can reach
+    O(E) entries, so the [pairs, B] gathers are chunked to ``batch`` rows to
+    bound device memory; partial sums are accumulated in int64 on host.
+    """
+    idx_a = np.asarray(idx_a, np.int64).reshape(-1)
+    idx_b = np.asarray(idx_b, np.int64).reshape(-1)
+    if idx_a.shape != idx_b.shape:
+        raise ValueError("idx_a and idx_b must have matching shapes")
+    total = 0
+    for lo in range(0, len(idx_a), batch):
+        counts = intersect_tiles_view(
+            view, idx_a[lo : lo + batch], idx_b[lo : lo + batch],
+            q_block=q_block, chunk=chunk,
+        )
+        total += int(np.asarray(counts, np.int64).sum())
+    return total
+
+
 __all__ = [
     "intersect_count",
     "intersect_count_hybrid",
     "intersect_count_ref",
     "intersect_tiles_view",
+    "sum_intersect_tiles_view",
 ]

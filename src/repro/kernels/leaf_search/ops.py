@@ -35,12 +35,15 @@ def leaf_search(rows, targets, q_block: int = 256):
 def edge_search_view(view, us, vs, q_block: int = 256) -> np.ndarray:
     """Batched edge-membership Search(u, v) through the device tile cache.
 
-    Resolves each query's candidate tiles via the host block index (memoized
-    on the view), gathers those rows *on device* — the leaf blocks themselves
-    are never re-uploaded — and answers every query with one batched
-    ``leaf_search``: query i hits iff any tile of ``us[i]`` contains
-    ``vs[i]``.  Returns a bool [len(us)] numpy array.
+    Resolves each query's candidate tiles via the host block index (the
+    delta-plane assembler memoizes both the spliced block stream and its
+    src-sorted order on the view), gathers those rows *on device* — the leaf
+    blocks themselves are never re-uploaded — and answers every query with
+    one batched ``leaf_search``: query i hits iff any tile of ``us[i]``
+    contains ``vs[i]``.  Returns a bool [len(us)] numpy array.
     """
+    from repro.core import view_assembler
+
     us = np.asarray(us, np.int64).reshape(-1)
     vs = np.asarray(vs, np.int64).reshape(-1)
     if us.shape != vs.shape:
@@ -49,8 +52,7 @@ def edge_search_view(view, us, vs, q_block: int = 256) -> np.ndarray:
         dev_rows = view.to_leaf_blocks_device().rows
     else:
         dev_rows = jnp.asarray(view.to_leaf_blocks().rows)
-    src = np.asarray(view.to_leaf_blocks().src, np.int64)
-    order = np.argsort(src, kind="stable")
+    src, order = view_assembler.block_src_index(view)
     lo = np.searchsorted(src[order], us, "left")
     hi = np.searchsorted(src[order], us, "right")
     counts = hi - lo

@@ -12,7 +12,14 @@ from .ref import leaf_scan_reduce_ref, leaf_spmm_ref
 
 def _view_blocks(view):
     """The view's leaf tiles — device-resident unless the cache is disabled
-    (REPRO_DISABLE_DEVICE_CACHE); the host LeafBlockView has the same fields."""
+    (REPRO_DISABLE_DEVICE_CACHE); the host LeafBlockView has the same fields.
+
+    Both variants come from the delta-plane assembler
+    (:mod:`repro.core.view_assembler`): after a commit dirtying d of S
+    subgraphs, a fresh view's tile stream is spliced from its predecessor
+    in O(d), so repeat scan/spmm calls after a small write re-gather only
+    the spliced slices instead of re-concatenating all S tile sets.
+    """
     if device_cache_enabled():
         return view.to_leaf_blocks_device()
     return view.to_leaf_blocks()

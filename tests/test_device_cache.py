@@ -177,18 +177,27 @@ def test_warm_repeat_zero_uploads():
         assert device_cache.stats.uploads == cold[2]
         assert device_cache.stats.bytes_uploaded == cold[3]
 
-    # a brand-new view over the unchanged store hits the snapshot-level cache
+    # a brand-new view over the unchanged store reuses the retired
+    # predecessor's assembled device arrays wholesale (delta plane, empty
+    # dirty set): no uploads, no misses — and no per-snapshot touches at all
+    from repro.core import view_assembler
+
     with store.read_view() as v2:
         before = device_cache.stats.snapshot()
+        view_assembler.stats.reset()
         v2.to_leaf_blocks_device()
         v2.to_coo_device()
         after = device_cache.stats.snapshot()
         assert after[2] == before[2]  # uploads flat
         assert after[1] == before[1]  # no misses
-        assert after[0] == before[0] + 2 * store.n_subgraphs  # all hits
+        assert after[0] == before[0]  # not even per-snapshot cache hits
+        assert view_assembler.stats.reuses == 2
+        assert view_assembler.stats.snapshot_touches == 0
 
 
 def test_write_uploads_only_dirty_subgraphs():
+    from repro.core import view_assembler
+
     n = 128
     store = make_store(n=n, m=800, seed=11)
     with store.read_view() as v1:
@@ -196,13 +205,19 @@ def test_write_uploads_only_dirty_subgraphs():
         absent = next(v for v in range(2, n) if not v1.search(1, v))
     assert store.insert_edge(1, absent) > 0  # dirties subgraph 0 only
     before = device_cache.stats.snapshot()
+    view_assembler.stats.reset()
     with store.read_view() as v2:
         v2.to_leaf_blocks_device()
         after = device_cache.stats.snapshot()
-        # exactly one snapshot (3 arrays) re-uploaded, the rest are hits
+        # exactly one snapshot (3 arrays) re-uploaded and spliced into the
+        # predecessor's device arrays; clean subgraphs are never touched
+        # (delta plane — not even a per-snapshot cache hit)
         assert after[1] - before[1] == 1  # misses
         assert after[2] - before[2] == 3  # uploads
-        assert after[0] - before[0] == store.n_subgraphs - 1  # hits
+        assert after[0] - before[0] == 0  # hits: clean snaps untouched
+        assert view_assembler.stats.splices == 1
+        assert view_assembler.stats.snapshot_touches == 1
+        assert view_assembler.stats.full_concats == 0
         # and the fresh tile stream is correct
         host = v2.to_leaf_blocks_uncached()
         assert np.array_equal(np.asarray(v2.to_leaf_blocks_device().rows), host.rows)

@@ -1,0 +1,130 @@
+"""Hypothesis property tests for the delta plane (core.view_assembler).
+
+Random write/read interleavings against a RapidStore must keep every
+materialization layout — host COO/CSR/leaf-blocks and device COO/leaf-blocks
+— bitwise identical to the ``*_uncached`` per-vertex-loop oracles, across:
+
+- delta-spliced assembly (small writes, warm predecessor chain),
+- pure reuse (consecutive reads with no commit between),
+- the full-concat fallback when a batch dirties more subgraphs than the
+  splice threshold allows,
+- predecessor-view assembly state GC'd mid-chain (the store's strong
+  reference dropped between two reads),
+- writer-driven GC recycling pool rows under the cached arrays.
+"""
+
+import gc
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import RapidStore, view_assembler
+
+N_VERTICES = 64
+P = 8  # S = 8 subgraphs
+B = 8
+
+edge = st.tuples(
+    st.integers(0, N_VERTICES - 1), st.integers(0, N_VERTICES - 1)
+).filter(lambda e: e[0] != e[1])
+
+# a step in the interleaving: small/local write, wide write (forces the
+# full-concat fallback via the dirty-fraction threshold), a verified read,
+# or dropping the retired predecessor bundle (GC mid-chain)
+step = st.one_of(
+    st.tuples(st.just("write"), st.lists(edge, min_size=1, max_size=6),
+              st.lists(edge, min_size=0, max_size=4)),
+    st.tuples(st.just("bigwrite"), st.lists(edge, min_size=12, max_size=40)),
+    st.tuples(st.just("read")),
+    st.tuples(st.just("drop_pred")),
+)
+
+
+def check_view(view):
+    src, dst = view.to_coo()
+    osrc, odst = view.to_coo_uncached()
+    assert np.array_equal(src, osrc)
+    assert np.array_equal(dst, odst)
+    csr = view.to_csr()
+    degs = np.bincount(osrc, minlength=view.n_vertices)
+    off = np.zeros(view.n_vertices + 1, np.int64)
+    np.cumsum(degs, out=off[1:])
+    assert np.array_equal(csr.offsets, off)
+    assert np.array_equal(csr.indices, odst)
+    lb = view.to_leaf_blocks()
+    ob = view.to_leaf_blocks_uncached()
+    assert np.array_equal(lb.src, ob.src)
+    assert np.array_equal(lb.rows, ob.rows)
+    assert np.array_equal(lb.length, ob.length)
+    db = view.to_leaf_blocks_device()
+    assert np.array_equal(np.asarray(db.src), ob.src)
+    assert np.array_equal(np.asarray(db.rows), ob.rows)
+    assert np.array_equal(np.asarray(db.length), ob.length)
+    dsrc, ddst = view.to_coo_device()
+    assert np.array_equal(np.asarray(dsrc), osrc)
+    assert np.array_equal(np.asarray(ddst), odst)
+
+
+@settings(max_examples=25, deadline=None)
+@given(steps=st.lists(step, min_size=3, max_size=18))
+def test_random_interleavings_bitmatch_oracles(steps):
+    store = RapidStore(N_VERTICES, partition_size=P, B=B, high_threshold=4)
+    oracle = set()
+    for s in steps:
+        if s[0] == "write":
+            _, ins, dels = s
+            store.apply(
+                np.array(ins, np.int64) if ins else np.empty((0, 2), np.int64),
+                np.array(dels, np.int64) if dels else np.empty((0, 2), np.int64),
+            )
+            oracle |= {tuple(map(int, e)) for e in ins}
+            oracle -= {tuple(map(int, e)) for e in dels}
+        elif s[0] == "bigwrite":
+            _, ins = s
+            store.insert_edges(np.array(ins, np.int64))
+            oracle |= {tuple(map(int, e)) for e in ins}
+        elif s[0] == "drop_pred":
+            store._retired_assembly = None
+            gc.collect()
+        else:  # read
+            with store.read_view() as view:
+                check_view(view)
+                assert view.edge_set() == oracle
+    # final read closes every chain shape the interleaving produced
+    with store.read_view() as view:
+        check_view(view)
+        assert view.edge_set() == oracle
+    store.check_invariants()
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    frac=st.sampled_from(["0.0", "0.25", "1.0"]),
+)
+def test_threshold_sweep_never_changes_results(seed, frac, monkeypatch=None):
+    """The splice threshold is a pure performance knob: any value must give
+    bitwise-identical materializations."""
+    import os
+
+    rng = np.random.default_rng(seed)
+    store = RapidStore(N_VERTICES, partition_size=P, B=B, high_threshold=4)
+    old = os.environ.get("REPRO_SPLICE_MAX_DIRTY_FRAC")
+    os.environ["REPRO_SPLICE_MAX_DIRTY_FRAC"] = frac
+    try:
+        for _ in range(6):
+            k = int(rng.integers(1, 10))
+            e = rng.integers(0, N_VERTICES, size=(k, 2), dtype=np.int64)
+            e = e[e[:, 0] != e[:, 1]]
+            if len(e):
+                store.insert_edges(e)
+            with store.read_view() as view:
+                check_view(view)
+    finally:
+        if old is None:
+            os.environ.pop("REPRO_SPLICE_MAX_DIRTY_FRAC", None)
+        else:
+            os.environ["REPRO_SPLICE_MAX_DIRTY_FRAC"] = old
