@@ -21,7 +21,7 @@ from repro.core.analytics import (
 from repro.core.baselines import CSRGraph
 from repro.kernels.runtime import require_accelerator
 
-from .common import dataset, record, store_defaults, timeit
+from .common import dataset, record, run_forced_device_rows, store_defaults, timeit
 
 
 def _coo_from_csr(g: CSRGraph):
@@ -173,6 +173,75 @@ def bench_delta_plane(name: str, n: int, edges: np.ndarray) -> None:
             )
 
 
+_SHARD_SUB_BODY = """
+import numpy as np
+from repro.core import RapidStore
+from repro.core.analytics import pagerank_view
+from benchmarks.common import dataset, store_defaults, timeit
+
+K = %(devices)d
+n, edges = dataset(%(name)r)
+store = RapidStore.from_edges(n, edges, undirected=True, **store_defaults())
+plane = store.attach_shard_plane(n_devices=K, symmetric=True)
+
+# cold: first sharded assembly (per-subgraph uploads + per-shard concat)
+h = store.begin_read()
+t0 = time.perf_counter()
+plane.sharded_coo(h.view)
+t_cold = time.perf_counter() - t0
+print("ROW,assembly_cold,%%f,uploads=%%d" %% (t_cold * 1e6, sum(plane.stats.uploads)))
+pagerank_view(h.view).block_until_ready()  # compile
+t_pr = timeit(lambda: pagerank_view(h.view).block_until_ready(), repeat=3)
+print("ROW,pagerank_warm,%%f,shards=%%d" %% (t_pr * 1e6, K))
+store.end_read(h)
+
+# warm: fresh view, nothing dirty -> wholesale bundle reuse
+def fresh_assembly():
+    hh = store.begin_read()
+    t0 = time.perf_counter()
+    plane.sharded_coo(hh.view)
+    dt = time.perf_counter() - t0
+    store.end_read(hh)
+    return dt
+
+t_warm = timeit(fresh_assembly, repeat=3, number=5)
+print("ROW,assembly_warm_reuse,%%f,vs_cold=%%.0fx" %% (t_warm * 1e6, t_cold / max(t_warm, 1e-9)))
+
+# post-1-subgraph write: splice — uploads land on one shard only.  Each
+# trial targets a random subgraph (edge kept inside one vertex block) so
+# successive splices land on different shards, not always shard 0.
+u0 = list(plane.stats.uploads)
+trials = []
+rng = np.random.default_rng(7)
+for _ in range(5):
+    sid = int(rng.integers(0, store.n_subgraphs - 1))
+    u = sid * store.p + int(rng.integers(0, store.p - 1))
+    store.insert_edges(np.array([[u, u + 1], [u + 1, u]], np.int64))
+    trials.append(fresh_assembly())
+delta = [a - b for a, b in zip(plane.stats.uploads, u0)]
+dirty_shards = sum(1 for d in delta if d)
+print("ROW,assembly_post_1subgraph_write,%%f,dirty_shards=%%d/%%d" %% (
+    float(np.median(trials)) * 1e6, dirty_shards, K))
+t_pr2 = timeit(lambda: (lambda hh: (pagerank_view(hh.view).block_until_ready(), store.end_read(hh)))(store.begin_read()), repeat=3)
+print("ROW,pagerank_fresh_view,%%f," %% (t_pr2 * 1e6))
+"""
+
+
+def bench_shard_plane(name: str, device_counts=(1, 2, 4)) -> None:
+    """Sharded vs single-device assembly + PageRank on forced host meshes.
+
+    Runs one subprocess per device count (see common.run_forced_device_rows
+    — the forced host platform flag must be set before jax imports).  The
+    K=1 rows are the single-device baseline on the identical plane code
+    path; host-device emulation numbers measure the orchestration overhead,
+    not accelerator speedup (CPU "devices" share the same cores).
+    """
+    for devices in device_counts:
+        rows = run_forced_device_rows(_SHARD_SUB_BODY, devices, name=name)
+        for rname, us, derived in rows or ():
+            record(f"analytics/{name}/shard{devices}_{rname}", us, derived)
+
+
 def bench_device_cache_analytics(name: str, n: int, edges: np.ndarray) -> None:
     """Device tile cache on the analytics path: cold (upload + concat) vs
     warm (zero host->device transfer) PageRank over the pinned device COO."""
@@ -226,6 +295,7 @@ def run(quick: bool = False) -> None:
         if name == "lj":
             bench_incremental_materialize(name, n, edges)
             bench_delta_plane(name, n, edges)
+            bench_shard_plane(name, (1, 2) if quick else (1, 2, 4))
 
         algos = {
             "pr": lambda s, d: pagerank_coo(s, d, n).block_until_ready(),

@@ -95,10 +95,75 @@ def _bench_read_after_small_write(n: int, edges: np.ndarray, trials: int = 10) -
            t_oracle * 1e6, "seed per-vertex-loop path")
 
 
+_SHARD_MIX_BODY = """
+import threading
+import numpy as np
+from repro.core import RapidStore
+from repro.core.analytics import pagerank_view
+from benchmarks.common import dataset, store_defaults
+
+K = %(devices)d
+n, edges = dataset("lj")
+store = RapidStore.from_edges(n, edges, undirected=True, **store_defaults())
+plane = store.attach_shard_plane(n_devices=K, symmetric=True)
+with store.read_view() as v:
+    pagerank_view(v).block_until_ready()  # compile + warm tiles
+
+stop = threading.Event()
+lat, errors = [], []
+
+def reader():
+    try:
+        while not stop.is_set():
+            t0 = time.perf_counter()
+            with store.read_view() as v:
+                pagerank_view(v, iters=2).block_until_ready()
+            lat.append(time.perf_counter() - t0)
+    except Exception as exc:
+        errors.append(exc)
+
+def writer():
+    rng = np.random.default_rng(0)
+    try:
+        while not stop.is_set():
+            # one random subgraph per commit (edge inside a vertex block),
+            # so splices rotate across the shards
+            sid = int(rng.integers(0, store.n_subgraphs - 1))
+            u = sid * store.p + int(rng.integers(0, store.p - 1))
+            store.insert_edges(np.array([[u, u + 1], [u + 1, u]], np.int64))
+    except Exception as exc:
+        errors.append(exc)
+
+threads = [threading.Thread(target=reader), threading.Thread(target=writer)]
+for t in threads:
+    t.start()
+time.sleep(%(duration)f)
+stop.set()
+for t in threads:
+    t.join()
+assert not errors, errors
+print("ROW,sharded_pr_read_latency_under_writes,%%f,splices=%%d reuses=%%d" %% (
+    float(np.median(lat)) * 1e6, plane.stats.splices, plane.stats.reuses))
+"""
+
+
+def _bench_sharded_under_writes(device_counts, duration: float) -> None:
+    """Sharded PageRank reader latency while a writer dirties one subgraph
+    per commit — the splice path under real interleaving, per shard count
+    (host-device emulation; see bench_analytics.bench_shard_plane)."""
+    from .common import run_forced_device_rows
+
+    for devices in device_counts:
+        rows = run_forced_device_rows(_SHARD_MIX_BODY, devices, duration=duration)
+        for rname, us, derived in rows or ():
+            record(f"concurrent/shard{devices}/{rname}", us, derived)
+
+
 def run(quick: bool = False) -> None:
     n, edges = dataset("lj")
     dur = 1.0 if quick else 2.0
     _bench_read_after_small_write(n, edges, trials=5 if quick else 10)
+    _bench_sharded_under_writes((1, 2) if quick else (1, 2, 4), dur)
     mixes = [(2, 0), (2, 2), (1, 3)] if quick else [(4, 0), (4, 2), (2, 4), (1, 6)]
 
     for n_r, n_w in mixes:

@@ -62,3 +62,48 @@ def store_defaults() -> dict:
         high_threshold=CONFIG.high_degree_threshold,
         tracer_k=CONFIG.tracer_k,
     )
+
+
+# Header shared by the forced-host-device benchmark subprocesses
+# (bench_analytics.bench_shard_plane, bench_concurrent sharded rows): the
+# XLA flag must be set before jax imports, and the subprocess needs both
+# src/ and the repo root on sys.path.  Bodies may use extra %(...)s
+# substitutions passed through run_forced_device_rows(**subs).
+FORCED_DEVICE_HEADER = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=%(devices)d"
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import sys, time
+sys.path.insert(0, %(src)r)
+sys.path.insert(0, %(root)r)
+"""
+
+
+def run_forced_device_rows(body: str, devices: int, timeout: int = 1200, **subs):
+    """Run a benchmark body on ``devices`` forced host devices; parse rows.
+
+    The subprocess prints ``ROW,<name>,<us>,<derived>`` lines; returns them
+    as ``[(name, us, derived)]``, or None after printing the failure (a
+    benchmark leg failing must not abort the whole suite).
+    """
+    import subprocess
+    import sys as _sys
+    from pathlib import Path
+
+    root = Path(__file__).resolve().parents[1]
+    prog = (FORCED_DEVICE_HEADER + body) % {
+        "devices": devices, "src": str(root / "src"), "root": str(root), **subs,
+    }
+    res = subprocess.run(
+        [_sys.executable, "-c", prog], capture_output=True, text=True,
+        timeout=timeout,
+    )
+    if res.returncode != 0:
+        print(f"forced-device bench (devices={devices}) failed:\n{res.stderr[-2000:]}")
+        return None
+    rows = []
+    for line in res.stdout.splitlines():
+        if line.startswith("ROW,"):
+            _, rname, us, derived = line.split(",", 3)
+            rows.append((rname, float(us), derived))
+    return rows

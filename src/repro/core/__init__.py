@@ -5,6 +5,7 @@ from .device_cache import DeviceCSRView, DeviceLeafBlockView
 from .leaf_pool import LeafPool, SENTINEL
 from .reader_tracer import ReaderTracer, FREE_TS
 from .snapshot import CSRView, LeafBlockView, SnapshotView
+from .shard_plane import ShardPlane, ShardedViewAssembly
 from .store import RapidStore, ReadHandle
 from .subgraph import SubgraphSnapshot, build_subgraph
 from .version_chain import CommitLineage, VersionChain
@@ -12,6 +13,8 @@ from .view_assembler import ViewAssembly
 
 __all__ = [
     "CommitLineage",
+    "ShardPlane",
+    "ShardedViewAssembly",
     "ViewAssembly",
     "LogicalClock",
     "LeafPool",

@@ -23,10 +23,32 @@ from . import device_cache
 # ---------------------------------------------------------------------------
 # PageRank (push-style over COO; 10 iterations per GAPBS convention)
 # ---------------------------------------------------------------------------
-@partial(jax.jit, static_argnames=("n", "iters"))
+def _pr_step(agg: jnp.ndarray, dangling: jnp.ndarray, n: int, damping: float) -> jnp.ndarray:
+    """The PageRank update expression, shared verbatim with the shard-plane
+    collective kernel (:mod:`repro.core.shard_plane`).
+
+    XLA's rounding of an elementwise expression can differ between two
+    programs when the expression structure differs (FMA contraction,
+    constant folding vs runtime evaluation): here ``damping`` is a traced
+    f32 scalar in :func:`pagerank_coo` but a Python constant in the plane
+    kernel, so the base term is built from the same f32 *ops* in both —
+    XLA constant-folds them with identical IEEE semantics.  Routing both
+    programs through this exact function is what makes the sharded
+    PageRank bitwise-equal to this oracle.
+    """
+    d = jnp.float32(damping)
+    base = (jnp.float32(1.0) - d) / n
+    return base + d * (agg + dangling / n)
+
+
+@partial(jax.jit, static_argnames=("n", "iters", "damping"))
 def pagerank_coo(
     src: jnp.ndarray, dst: jnp.ndarray, n: int, iters: int = 10, damping: float = 0.85
 ) -> jnp.ndarray:
+    # damping is static so the update constants are *folded* exactly as in
+    # the shard-plane kernel (where damping is a closure constant) — a
+    # traced scalar here would round the shared _pr_step expression
+    # differently and break the cross-program bitwise contract
     deg = jax.ops.segment_sum(jnp.ones_like(src, jnp.float32), src, num_segments=n)
     inv_deg = jnp.where(deg > 0, 1.0 / jnp.maximum(deg, 1.0), 0.0)
     p = jnp.full((n,), 1.0 / n, jnp.float32)
@@ -35,8 +57,7 @@ def pagerank_coo(
         contrib = (p * inv_deg)[src]
         agg = jax.ops.segment_sum(contrib, dst, num_segments=n)
         dangling = jnp.sum(jnp.where(deg == 0, p, 0.0))
-        p_new = (1.0 - damping) / n + damping * (agg + dangling / n)
-        return p_new, None
+        return _pr_step(agg, dangling, n, damping), None
 
     p, _ = jax.lax.scan(body, p, None, length=iters)
     return p
@@ -122,6 +143,12 @@ def wcc_coo(src: jnp.ndarray, dst: jnp.ndarray, n: int) -> jnp.ndarray:
 # arrays stay resident on the accelerator, so a warm repeat performs zero
 # host->device transfers.  Pass ``device=False`` (or set
 # ``REPRO_DISABLE_DEVICE_CACHE``) for the host-array path.
+#
+# When the view's store has a shard plane attached
+# (``RapidStore.attach_shard_plane``), the entry points route through the
+# plane's ``shard_map`` collectives over mesh-pinned per-subgraph tiles
+# instead (``REPRO_DISABLE_SHARD_PLANE`` or ``device=False`` opt out) —
+# see :mod:`repro.core.shard_plane` for the parity contract.
 # ---------------------------------------------------------------------------
 def _view_coo(view, device: Optional[bool]):
     if device is None:
@@ -129,26 +156,45 @@ def _view_coo(view, device: Optional[bool]):
     return view.to_coo_device() if device else view.to_coo()
 
 
+def _plane(view, device: Optional[bool]):
+    from . import shard_plane
+
+    return shard_plane.active_plane(view, device)
+
+
 def pagerank_view(
     view, iters: int = 10, damping: float = 0.85, device: Optional[bool] = None
 ) -> jnp.ndarray:
+    plane = _plane(view, device)
+    if plane is not None:
+        return plane.pagerank(view, iters=iters, damping=damping)
     src, dst = _view_coo(view, device)
     return pagerank_coo(src, dst, view.n_vertices, iters=iters, damping=damping)
 
 
 def bfs_view(view, root: int, device: Optional[bool] = None) -> jnp.ndarray:
+    plane = _plane(view, device)
+    if plane is not None:
+        return plane.bfs(view, root)
     src, dst = _view_coo(view, device)
     return bfs_coo(src, dst, view.n_vertices, root)
 
 
 def sssp_view(view, w: np.ndarray, root: int, device: Optional[bool] = None) -> jnp.ndarray:
+    plane = _plane(view, device)
+    if plane is not None:
+        return plane.sssp(view, w, root)
     src, dst = _view_coo(view, device)
     return sssp_coo(src, dst, jnp.asarray(w, jnp.float32), view.n_vertices, root)
 
 
 def wcc_view(view, device: Optional[bool] = None) -> jnp.ndarray:
     """WCC over a directed view: symmetrizes the cached COO (on device when
-    the device cache is active — the concat never round-trips to host)."""
+    the device cache is active — the concat never round-trips to host; under
+    a shard plane each shard symmetrizes its local edges in-kernel)."""
+    plane = _plane(view, device)
+    if plane is not None:
+        return plane.wcc(view)
     src, dst = _view_coo(view, device)
     if isinstance(src, np.ndarray):
         return wcc_coo(

@@ -218,9 +218,86 @@ def coo_tiles(snap, wait: bool = True) -> tuple:
 
 def note_release(snap) -> None:
     """Record (for stats) that a snapshot's device tiles died with GC."""
-    if snap._dev_blocks_cache is not None or snap._dev_coo_cache is not None:
+    if (
+        snap._dev_blocks_cache is not None
+        or snap._dev_coo_cache is not None
+        or snap._shard_dev_cache
+    ):
         with _lock:
             stats.releases += 1
+
+
+# ---------------------------------------------------------------------------
+# Per-(snapshot, device) shard tiles — the shard plane's residency layer.
+#
+# Same lifecycle as the default-device tiles above (upload once per snapshot
+# version, generation-stamped against recycled LeafPool rows, dropped in
+# release()), but pinned to an EXPLICIT device: the shard plane
+# (repro.core.shard_plane) places each subgraph's tiles on the device its
+# placement policy chose, so a commit dirtying subgraphs on one shard
+# uploads only to that shard's device.  The functions return
+# ``(tiles, uploaded_bytes)`` — 0 bytes on a hit — so the plane can keep
+# per-shard upload counters on top of the process-wide ``stats``.
+# ---------------------------------------------------------------------------
+def _shard_cache_put(snap, key, host_arrays, device, wait):
+    import jax
+
+    tiles = tuple(jax.device_put(a, device) for a in host_arrays)
+    if wait:
+        for t in tiles:
+            t.block_until_ready()
+    nbytes = int(sum(int(t.nbytes) for t in tiles))
+    with _lock:
+        stats.uploads += len(host_arrays)
+        stats.bytes_uploaded += nbytes
+    if snap._shard_dev_cache is None:
+        snap._shard_dev_cache = {}
+    if snap._dev_gen_stamp is None:
+        snap._dev_gen_stamp = _gen_stamp(snap)
+    snap._shard_dev_cache[key] = tiles
+    return tiles, nbytes
+
+
+def shard_coo_tiles(snap, device, wait: bool = True) -> Tuple[tuple, int]:
+    """``(src, dst)`` COO tiles of one snapshot pinned on ``device``.
+
+    Memoized per (snapshot, device); returns ``(tiles, uploaded_bytes)``
+    with 0 bytes on a hit.  Raises RuntimeError on released snapshots (the
+    pool may have recycled their rows — see the lifecycle contract above).
+    """
+    key = ("coo", device.id)
+    cache = snap._shard_dev_cache
+    if cache is not None and key in cache:
+        _hit()
+        return cache[key], 0
+    with _mat_lock:
+        cache = snap._shard_dev_cache
+        if cache is not None and key in cache:
+            _hit()
+            return cache[key], 0
+        _miss()
+        host = snap.to_coo_global()  # raises if released; copies pool rows
+        return _shard_cache_put(snap, key, host, device, wait)
+
+
+def shard_leaf_tiles(snap, device, wait: bool = True) -> Tuple[tuple, int]:
+    """``(src, rows, length)`` leaf-block tiles pinned on ``device``.
+
+    Same contract as :func:`shard_coo_tiles`.
+    """
+    key = ("blocks", device.id)
+    cache = snap._shard_dev_cache
+    if cache is not None and key in cache:
+        _hit()
+        return cache[key], 0
+    with _mat_lock:
+        cache = snap._shard_dev_cache
+        if cache is not None and key in cache:
+            _hit()
+            return cache[key], 0
+        _miss()
+        host = snap.to_leaf_blocks_global()
+        return _shard_cache_put(snap, key, host, device, wait)
 
 
 # ---------------------------------------------------------------------------
@@ -304,6 +381,8 @@ __all__ = [
     "enabled",
     "leaf_block_tiles",
     "note_release",
+    "shard_coo_tiles",
+    "shard_leaf_tiles",
     "stats",
     "tiles_fresh",
 ]

@@ -4,9 +4,28 @@ The store's subgraph partitioning is exactly a distribution unit: subgraph
 ``sid`` (vertex block) maps to device ``sid % n_devices``, so the COO
 materialization of a snapshot shards by source-vertex block.  Analytics run
 under ``shard_map``: each device reduces its local edge partition into a
-full-width destination vector, then a single ``psum`` merges (vertex-cut
-pattern).  Frontier/rank vectors are replicated; edge arrays are sharded —
-the collective payload is O(n_vertices), independent of edge count.
+full-width destination vector, then a single ``psum`` (or ``pmax``/``pmin``)
+merges (vertex-cut pattern).  Frontier/rank vectors are replicated; edge
+arrays are sharded — the collective payload is O(n_vertices), independent of
+edge count.
+
+Padding contract
+----------------
+
+:func:`shard_edges` pads the final shard with self-loops on vertex 0; the
+pad slots are marked in the returned ``valid`` mask.  Every kernel here
+takes ``valid`` as a REQUIRED operand and applies it twice: contributions
+are zeroed/identity-filled on the gather side AND the scatter key of a pad
+slot is routed out of range (:func:`masked_key`) so a padded slot can never
+contribute to vertex 0 even if a value sneaks past the first mask.  An
+unmasked pad slot would silently inflate vertex 0's degree / rank /
+distance — ``tests/test_dist_small.py::test_shard_padding_masked``
+regresses exactly that hazard.
+
+This module is also the single-device reference for the shard-plane
+collectives (:mod:`repro.core.shard_plane` reads pinned per-device tiles
+instead of re-sharding host COO arrays per call, but merges with the same
+local-reduce + collective pattern built here).
 """
 
 from __future__ import annotations
@@ -24,11 +43,13 @@ from repro.jax_compat import shard_map
 
 def shard_edges(
     src: np.ndarray, dst: np.ndarray, n_shards: int
-) -> Tuple[np.ndarray, np.ndarray]:
-    """Pad + round-robin edges into equal shards (stacked on axis 0).
+) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Pad + chunk edges into equal contiguous shards (stacked on axis 0).
 
-    Padding uses self-loops on vertex 0 with zero weight contribution —
-    masked out by passing ``valid``.
+    Padding uses self-loops on vertex 0 with zero weight contribution.  The
+    returned ``valid`` mask is NOT optional: every kernel in this module
+    requires it, and forgetting it elsewhere miscounts vertex 0 (see the
+    module docstring's padding contract).
     """
     m = len(src)
     per = -(-m // n_shards)
@@ -43,11 +64,36 @@ def shard_edges(
     )
 
 
-def make_pagerank(mesh, axis: str, n: int, iters: int = 10, damping: float = 0.85):
-    """Build a shard_map PageRank over edge shards on ``axis``."""
+def masked_key(key: jnp.ndarray, valid: jnp.ndarray, n: int) -> jnp.ndarray:
+    """Scatter key with pad slots routed to ``n`` (out of range -> dropped).
 
-    def local_out_deg(src, valid):
-        return jax.ops.segment_sum(valid.astype(jnp.float32), src, num_segments=n)
+    Defense in depth for the padding contract: even if a pad slot's value
+    survives the gather-side mask, an out-of-range segment id can never land
+    in the output (segment reductions drop out-of-bounds indices).
+    """
+    return jnp.where(valid, key, n)
+
+
+def make_pagerank(
+    mesh, axis: str, n: int, iters: int = 10, damping: float = 0.85,
+    pull: bool = False,
+):
+    """Build a shard_map PageRank over edge shards on ``axis``.
+
+    ``valid`` is a required operand (see the module padding contract).
+
+    ``pull=False`` is the classic push form: gather at src, scatter by dst,
+    ``psum`` merging genuinely overlapping vertex-cut partials (equal to the
+    single-device oracle to rounding).  ``pull=True`` gathers at dst and
+    scatters by src — each shard owns its source vertices, so the ``psum``
+    adds exact zeros and the result is *bitwise*-equal to
+    :func:`~repro.core.analytics.pagerank_coo` when the edge list is
+    symmetrized (the shard plane's contract; on a directed edge list the
+    pull form computes PageRank of the transpose).  Both share the oracle's
+    update expression (:func:`~repro.core.analytics._pr_step`) so XLA folds
+    the constants identically across the programs.
+    """
+    from .analytics import _pr_step
 
     @partial(
         shard_map,
@@ -57,16 +103,25 @@ def make_pagerank(mesh, axis: str, n: int, iters: int = 10, damping: float = 0.8
     )
     def pr(src, dst, valid):
         src, dst, valid = src[0], dst[0], valid[0]  # peel the shard axis
-        deg = jax.lax.psum(local_out_deg(src, valid), axis)
+        skey = masked_key(src, valid, n)
+        dkey = masked_key(dst, valid, n)
+        deg = jax.lax.psum(
+            jax.ops.segment_sum(valid.astype(jnp.float32), skey, num_segments=n),
+            axis,
+        )
         inv_deg = jnp.where(deg > 0, 1.0 / jnp.maximum(deg, 1.0), 0.0)
         p0 = jnp.full((n,), 1.0 / n, jnp.float32)
 
         def body(p, _):
-            contrib = jnp.where(valid, (p * inv_deg)[src], 0.0)
-            agg = jax.ops.segment_sum(contrib, dst, num_segments=n)
+            if pull:
+                contrib = jnp.where(valid, (p * inv_deg)[dst], 0.0)
+                agg = jax.ops.segment_sum(contrib, skey, num_segments=n)
+            else:
+                contrib = jnp.where(valid, (p * inv_deg)[src], 0.0)
+                agg = jax.ops.segment_sum(contrib, dkey, num_segments=n)
             agg = jax.lax.psum(agg, axis)  # merge vertex-cut partials
             dangling = jnp.sum(jnp.where(deg == 0, p, 0.0))
-            return (1.0 - damping) / n + damping * (agg + dangling / n), None
+            return _pr_step(agg, dangling, n, damping), None
 
         p, _ = jax.lax.scan(body, p0, None, length=iters)
         return p
@@ -85,6 +140,7 @@ def make_bfs(mesh, axis: str, n: int):
     )
     def bfs(src, dst, valid, root):
         src, dst, valid = src[0], dst[0], valid[0]
+        dkey = masked_key(dst, valid, n)
         level = jnp.full((n,), -1, jnp.int32).at[root].set(0)
         frontier = jnp.zeros((n,), bool).at[root].set(True)
 
@@ -95,7 +151,7 @@ def make_bfs(mesh, axis: str, n: int):
         def body(state):
             level, frontier, d = state
             hit = jax.ops.segment_max(
-                (frontier[src] & valid).astype(jnp.int32), dst, num_segments=n
+                (frontier[src] & valid).astype(jnp.int32), dkey, num_segments=n
             )
             hit = jax.lax.pmax(hit, axis)
             new = (hit > 0) & (level < 0)
@@ -105,3 +161,87 @@ def make_bfs(mesh, axis: str, n: int):
         return level
 
     return bfs
+
+
+def make_sssp(mesh, axis: str, n: int):
+    """Bellman-Ford over sharded weighted edges (replicated distance vector).
+
+    Min-merges (``segment_min`` locally, ``pmin`` across shards) are
+    order-independent, so the sharded result is bitwise-equal to the
+    single-device :func:`~repro.core.analytics.sssp_coo` on identical edges.
+    """
+
+    @partial(
+        shard_map,
+        mesh=mesh,
+        in_specs=(P(axis, None), P(axis, None), P(axis, None), P(axis, None), P()),
+        out_specs=P(),
+    )
+    def sssp(src, dst, valid, w, root):
+        src, dst, valid, w = src[0], dst[0], valid[0], w[0]
+        dkey = masked_key(dst, valid, n)
+        inf = jnp.float32(jnp.inf)
+        dist = jnp.full((n,), inf, jnp.float32).at[root].set(0.0)
+
+        def cond(state):
+            _, changed, it = state
+            return changed & (it < n)
+
+        def body(state):
+            dist, _, it = state
+            cand = jax.ops.segment_min(
+                jnp.where(valid, dist[src] + w, inf), dkey, num_segments=n
+            )
+            cand = jax.lax.pmin(cand, axis)
+            new = jnp.minimum(dist, cand)
+            return new, jnp.any(new < dist), it + 1
+
+        dist, _, _ = jax.lax.while_loop(
+            cond, body, (dist, jnp.bool_(True), jnp.int32(0))
+        )
+        return dist
+
+    return sssp
+
+
+def make_wcc(mesh, axis: str, n: int):
+    """Label-propagation WCC over sharded edges.
+
+    Each shard propagates labels across its local edges in BOTH directions
+    (the symmetrization never leaves the device), ``pmin`` merges — also
+    bitwise-equal to the single-device oracle (min is order-free).
+    """
+    big = jnp.int32(np.iinfo(np.int32).max)
+
+    @partial(
+        shard_map,
+        mesh=mesh,
+        in_specs=(P(axis, None), P(axis, None), P(axis, None)),
+        out_specs=P(),
+    )
+    def wcc(src, dst, valid):
+        src, dst, valid = src[0], dst[0], valid[0]
+        skey = masked_key(src, valid, n)
+        dkey = masked_key(dst, valid, n)
+        labels0 = jnp.arange(n, dtype=jnp.int32)
+
+        def cond(state):
+            return state[1]
+
+        def body(state):
+            labels, _ = state
+            fwd = jax.ops.segment_min(
+                jnp.where(valid, labels[src], big), dkey, num_segments=n
+            )
+            bwd = jax.ops.segment_min(
+                jnp.where(valid, labels[dst], big), skey, num_segments=n
+            )
+            cand = jax.lax.pmin(jnp.minimum(fwd, bwd), axis)
+            new = jnp.minimum(labels, cand)
+            new = new[new]  # pointer-jump (path halving)
+            return new, jnp.any(new != labels)
+
+        labels, _ = jax.lax.while_loop(cond, body, (labels0, jnp.bool_(True)))
+        return labels
+
+    return wcc

@@ -106,6 +106,7 @@ class SnapshotView:
 
     __slots__ = (
         "ts", "p", "snaps", "n_vertices", "B", "assembly", "_pred", "_lineage",
+        "_plane",
     )
 
     def __init__(
@@ -117,6 +118,7 @@ class SnapshotView:
         B: Optional[int] = None,
         pred=None,
         lineage=None,
+        plane=None,
     ):
         self.ts = ts
         self.p = p
@@ -126,6 +128,7 @@ class SnapshotView:
         self.assembly = None  # ViewAssembly, created lazily on materialization
         self._pred = pred  # weakref to the predecessor view's ViewAssembly
         self._lineage = lineage  # CommitLineage for the dirty-set diff
+        self._plane = plane  # ShardPlane routing collective analytics, or None
 
     # -- point reads ------------------------------------------------------------
     def _local(self, u: int) -> Tuple[SubgraphSnapshot, int]:

@@ -80,6 +80,8 @@ class RapidStore:
         self.lineage = CommitLineage()
         self._retired_assembly = None
         self._retire_lock = threading.Lock()
+        # mesh shard plane (attach_shard_plane); None = single-device paths
+        self.shard_plane = None
 
     # -- construction -------------------------------------------------------------
     @classmethod
@@ -112,6 +114,7 @@ class RapidStore:
         store.lineage = CommitLineage()
         store._retired_assembly = None
         store._retire_lock = threading.Lock()
+        store.shard_plane = None
 
         store.chains = []
         if len(edges):
@@ -237,6 +240,7 @@ class RapidStore:
             t, self.p, snaps, self.n_vertices, B=self.B,
             pred=weakref.ref(retired) if retired is not None else None,
             lineage=self.lineage,
+            plane=self.shard_plane,
         )
         return ReadHandle(slot=slot, ts=t, view=view)
 
@@ -268,6 +272,42 @@ class RapidStore:
             yield h.view
         finally:
             self.end_read(h)
+
+    # -- mesh shard plane ---------------------------------------------------------
+    def attach_shard_plane(
+        self,
+        mesh=None,
+        n_devices: Optional[int] = None,
+        policy="modulo",
+        symmetric: bool = False,
+    ):
+        """Attach a :class:`~repro.core.shard_plane.ShardPlane`.
+
+        Subsequent ``begin_read`` views route their collective analytics
+        (``pagerank_view`` etc. and ``spmm_view``) through the plane's
+        ``shard_map`` kernels over mesh-pinned tiles.  ``symmetric=True``
+        declares the store holds a symmetrized graph, enabling the
+        bitwise-exact pull-form PageRank (see the shard_plane docstring).
+        """
+        from .shard_plane import ShardPlane
+
+        plane = ShardPlane(
+            self, mesh=mesh, n_devices=n_devices, policy=policy, symmetric=symmetric
+        )
+        self.shard_plane = plane
+        return plane
+
+    def detach_shard_plane(self) -> None:
+        """Drop the plane; new views take the single-device paths again.
+
+        The retained retired bundle's sharded twin is released so the
+        per-shard arrays do not outlive the plane that built them.
+        """
+        self.shard_plane = None
+        with self._retire_lock:
+            retired = self._retired_assembly
+            if retired is not None:
+                retired.sharded = None
 
     # -- introspection ------------------------------------------------------------
     def memory_bytes(self) -> int:

@@ -60,6 +60,12 @@ class SubgraphSnapshot:
     _dev_coo_cache: Optional[tuple] = field(
         default=None, init=False, repr=False, compare=False
     )
+    # Shard-plane residency: {("coo"|"blocks", device_id) -> jax.Array tiles}
+    # pinned on the device the placement policy assigned this subgraph to
+    # (repro.core.shard_plane).  Same lifecycle as the default-device caches.
+    _shard_dev_cache: Optional[Dict] = field(
+        default=None, init=False, repr=False, compare=False
+    )
     _dev_gen_stamp: Optional[Tuple[np.ndarray, np.ndarray]] = field(
         default=None, init=False, repr=False, compare=False
     )
@@ -246,6 +252,7 @@ class SubgraphSnapshot:
         self._blocks_cache = None
         self._dev_blocks_cache = None
         self._dev_coo_cache = None
+        self._shard_dev_cache = None
         self._dev_gen_stamp = None
         self._released = True
 
@@ -406,6 +413,9 @@ class SubgraphSnapshot:
         for cached in (self._dev_blocks_cache, self._dev_coo_cache):
             if cached is not None:
                 total += sum(int(a.nbytes) for a in cached)
+        if self._shard_dev_cache:
+            for tiles in self._shard_dev_cache.values():
+                total += sum(int(a.nbytes) for a in tiles)
         return total
 
     def check_invariants(self) -> None:

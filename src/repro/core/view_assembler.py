@@ -136,6 +136,7 @@ class ViewAssembly:
         "host_coo", "host_blocks", "host_csr",
         "dev_coo", "dev_csr", "dev_blocks",
         "src_order",
+        "sharded",
         "__weakref__",
     )
 
@@ -153,13 +154,17 @@ class ViewAssembly:
         self.dev_csr = None  # DeviceCSRView
         self.dev_blocks = None  # DeviceLeafBlockView
         self.src_order: Optional[np.ndarray] = None
+        # Mesh-distributed twin (ShardedViewAssembly): per-device padded
+        # tile bundles the shard plane splices across views — rides in the
+        # same retire/weak-predecessor lifecycle as the host/device fields.
+        self.sharded = None
 
     def has_content(self) -> bool:
         return any(
             x is not None
             for x in (
                 self.host_coo, self.host_blocks, self.host_csr,
-                self.dev_coo, self.dev_blocks,
+                self.dev_coo, self.dev_blocks, self.sharded,
             )
         )
 
@@ -189,6 +194,8 @@ class ViewAssembly:
             total += int(self.dev_csr.offsets.nbytes)
             if self.dev_coo is None or self.dev_csr.indices is not self.dev_coo[1]:
                 total += int(self.dev_csr.indices.nbytes)
+        if self.sharded is not None:
+            total += self.sharded.device_bytes()
         return total
 
 

@@ -87,9 +87,19 @@ def spmm_view(view, h, n_block: int = 64, v_tile: int = 512) -> jnp.ndarray:
 
     Runs the tile kernel then segment-sums tile outputs by their source
     vertex — all on device, sized by the view's vertex count.
+
+    Under an attached shard plane the same kernel runs per-shard over
+    mesh-pinned tiles and the source-keyed partials merge with an exact
+    ``psum`` (every source vertex lives on one shard) — bitwise-equal to
+    this single-device path; see :mod:`repro.core.shard_plane`.
     """
     import jax
 
+    from repro.core import shard_plane
+
+    plane = shard_plane.active_plane(view)
+    if plane is not None:
+        return plane.spmm(view, h, n_block=n_block, v_tile=v_tile)
     blocks = _view_blocks(view)
     per_tile = leaf_spmm(blocks.rows, h, n_block=n_block, v_tile=v_tile)
     return jax.ops.segment_sum(

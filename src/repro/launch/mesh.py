@@ -26,3 +26,25 @@ def data_axes(mesh) -> tuple:
 def make_host_mesh(shape=(2, 2), axes=("data", "model")):
     """Small mesh over forced host devices — CPU integration tests."""
     return make_mesh(shape, axes)
+
+
+def make_shard_mesh(n_devices=None, axis: str = "shard"):
+    """1-D mesh for the tile shard plane (:mod:`repro.core.shard_plane`).
+
+    Uses the first ``n_devices`` visible devices (all of them by default), so
+    the plane works unchanged on a real accelerator pod and on CPU with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=N`` (how the tier-1
+    matrix exercises the sharded path).  Built with the plain ``Mesh``
+    constructor rather than ``make_mesh`` because the plane routinely wants
+    fewer devices than the process exposes (e.g. a 1-device plane inside the
+    single-device unit-test session).
+    """
+    import jax
+    import numpy as np
+    from jax.sharding import Mesh
+
+    devs = jax.devices()
+    k = len(devs) if n_devices is None else int(n_devices)
+    if k < 1 or k > len(devs):
+        raise ValueError(f"n_devices={k} outside [1, {len(devs)}]")
+    return Mesh(np.array(devs[:k]), (axis,))

@@ -1,0 +1,33 @@
+"""Shared launcher for multi-device subprocess tests.
+
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` must be set before
+jax is imported, so multi-device tests run in subprocesses with a scrubbed
+environment instead of polluting the (single-device) main test session.
+Used by tests/test_dist_small.py and tests/test_shard_plane.py.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+
+
+def run_sub(code: str, devices: int = 8, timeout: int = 600) -> str:
+    prog = (
+        "import os\n"
+        f"os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count={devices}'\n"
+        + textwrap.dedent(code)
+    )
+    # Forced host devices only make sense on the CPU platform; pin it so the
+    # subprocess never wastes a minute probing for TPU metadata.
+    env = {"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin:/usr/local/bin", "HOME": "/root",
+           "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")}
+    res = subprocess.run(
+        [sys.executable, "-c", prog],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    assert res.returncode == 0, f"STDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr[-3000:]}"
+    return res.stdout

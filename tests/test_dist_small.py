@@ -1,33 +1,7 @@
 """Multi-device integration tests — run in subprocesses so the forced host
 device count never leaks into the (single-device) main test session."""
 
-import os
-import subprocess
-import sys
-import textwrap
-from pathlib import Path
-
-import pytest
-
-SRC = str(Path(__file__).resolve().parents[1] / "src")
-
-
-def run_sub(code: str, devices: int = 8, timeout: int = 600) -> str:
-    prog = (
-        "import os\n"
-        f"os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count={devices}'\n"
-        + textwrap.dedent(code)
-    )
-    # Forced host devices only make sense on the CPU platform; pin it so the
-    # subprocess never wastes a minute probing for TPU metadata.
-    env = {"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin:/usr/local/bin", "HOME": "/root",
-           "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")}
-    res = subprocess.run(
-        [sys.executable, "-c", prog],
-        capture_output=True, text=True, timeout=timeout, env=env,
-    )
-    assert res.returncode == 0, f"STDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr[-3000:]}"
-    return res.stdout
+from _subproc import run_sub
 
 
 def test_distributed_pagerank_matches_single():
@@ -50,6 +24,69 @@ def test_distributed_pagerank_matches_single():
     lv_s = np.asarray(bfs_coo(src, dst, n, 0))
     assert np.array_equal(lv_d, lv_s)
     print("distributed analytics OK")
+    """)
+
+
+def test_distributed_sssp_wcc_match_single():
+    run_sub("""
+    import jax, numpy as np
+    from repro.core.distributed import make_sssp, make_wcc, shard_edges
+    from repro.core.analytics import sssp_coo, wcc_coo
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((8,), ("data",))
+    n = 64
+    rng = np.random.default_rng(3)
+    e = rng.integers(0, n, size=(500, 2), dtype=np.int64)
+    e = e[e[:, 0] != e[:, 1]]
+    src, dst = e[:, 0], e[:, 1].astype(np.int32)
+    w = (rng.random(len(src)) + 0.1).astype(np.float32)
+    s_sh, d_sh, valid = shard_edges(src, dst, 8)
+    w_sh = np.zeros(s_sh.shape, np.float32)
+    w_sh.reshape(-1)[: len(w)] = w  # same contiguous-chunk layout as shard_edges
+    di_d = np.asarray(make_sssp(mesh, "data", n)(s_sh, d_sh, valid, w_sh, np.int32(0)))
+    di_s = np.asarray(sssp_coo(src, dst, w, n, 0))
+    # min-merges are order-independent: distributed == single-device bitwise
+    assert np.array_equal(di_d.view(np.uint32), di_s.view(np.uint32))
+    lb_d = np.asarray(make_wcc(mesh, "data", n)(s_sh, d_sh, valid))
+    lb_s = np.asarray(wcc_coo(
+        np.concatenate([src, dst.astype(np.int64)]),
+        np.concatenate([dst, src.astype(np.int32)]), n))
+    assert np.array_equal(lb_d, lb_s)
+    print("distributed sssp/wcc OK")
+    """)
+
+
+def test_shard_padding_masked():
+    """Regression for the shard_edges padding hazard: pad slots are
+    self-loops on vertex 0, and an unmasked kernel would count them into
+    vertex 0's degree/rank.  The edge count is chosen indivisible by the
+    shard count so padding exists, and vertex 0 carries real edges so the
+    corruption would be visible."""
+    run_sub("""
+    import jax, numpy as np
+    from repro.core.distributed import make_pagerank, make_bfs, shard_edges
+    from repro.core.analytics import pagerank_coo, bfs_coo
+    from repro.launch.mesh import make_mesh
+    mesh = make_mesh((8,), ("data",))
+    n = 32
+    # 13 edges over 8 shards -> per=2, 3 pad slots, all self-loops on 0
+    src = np.array([0, 0, 0, 1, 2, 3, 4, 5, 6, 7, 8, 9, 10], np.int64)
+    dst = np.array([1, 2, 3, 0, 0, 4, 5, 6, 7, 8, 9, 10, 0], np.int32)
+    s_sh, d_sh, valid = shard_edges(src, dst, 8)
+    assert valid.sum() == len(src) and (~valid).sum() == 3
+    # pad slots really are (0, 0) self-loops: the hazard is live
+    assert np.all(s_sh[~valid] == 0) and np.all(d_sh[~valid] == 0)
+    pr_d = np.asarray(make_pagerank(mesh, "data", n)(s_sh, d_sh, valid))
+    pr_s = np.asarray(pagerank_coo(src, dst, n))
+    np.testing.assert_allclose(pr_d, pr_s, rtol=1e-6, atol=1e-9)
+    # the test has teeth: an all-true mask (= forgetting `valid`) miscounts
+    # vertex 0 and visibly shifts the ranks
+    pr_bad = np.asarray(make_pagerank(mesh, "data", n)(s_sh, d_sh, np.ones_like(valid)))
+    assert np.abs(pr_bad - pr_s).max() > 1e-4
+    lv_d = np.asarray(make_bfs(mesh, "data", n)(s_sh, d_sh, valid, np.int32(3)))
+    lv_s = np.asarray(bfs_coo(src, dst, n, 3))
+    assert np.array_equal(lv_d, lv_s)
+    print("padding mask OK")
     """)
 
 

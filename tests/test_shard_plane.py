@@ -1,0 +1,437 @@
+"""Shard-plane tests: placement policies, per-shard residency/splice
+accounting, and bitwise parity of the collective analytics against the
+single-device ``*_view`` oracles.
+
+In-process tests run a 1-device plane (every code path — placement,
+residency, splice, collectives — is identical modulo shard count, and the
+suite must pass on a single-device session).  The multi-device contract —
+bitwise parity on a forced 4-host-device mesh and the "writes dirtying one
+shard upload only to that shard" counter assert — runs in subprocesses that
+set ``XLA_FLAGS`` before importing jax, like tests/test_dist_small.py.
+"""
+
+import sys
+from pathlib import Path
+
+import numpy as np
+
+SRC = str(Path(__file__).resolve().parents[1] / "src")
+if SRC not in sys.path:
+    sys.path.insert(0, SRC)
+
+from repro.core import RapidStore
+from repro.core.shard_plane import (
+    degree_balanced_placement,
+    modulo_placement,
+)
+
+
+# ---------------------------------------------------------------------------
+# Placement policies (pure host logic, no mesh)
+# ---------------------------------------------------------------------------
+def test_modulo_placement():
+    w = np.ones(10, np.int64)
+    assert np.array_equal(modulo_placement(w, 4), np.arange(10) % 4)
+
+
+def test_degree_balanced_placement_balances_skew():
+    # one hub subgraph 100x the rest: modulo lands it with 1/4 of the tail,
+    # greedy packing gives it a device nearly to itself
+    w = np.array([1000, 10, 10, 10, 10, 10, 10, 10], np.int64)
+    a = degree_balanced_placement(w, 4)
+    loads = np.bincount(a, weights=w, minlength=4)
+    assert loads.max() == 1000  # the hub shares with nothing
+    # deterministic
+    assert np.array_equal(a, degree_balanced_placement(w, 4))
+    # all devices used when there is enough work
+    assert len(np.unique(a)) == 4
+
+
+def test_degree_balanced_no_worse_than_modulo():
+    rng = np.random.default_rng(0)
+    w = (rng.pareto(1.0, size=32) * 50).astype(np.int64) + 1
+    lb = np.bincount(degree_balanced_placement(w, 4), weights=w, minlength=4).max()
+    lm = np.bincount(modulo_placement(w, 4), weights=w, minlength=4).max()
+    assert lb <= lm
+
+
+# ---------------------------------------------------------------------------
+# In-process 1-device plane
+# ---------------------------------------------------------------------------
+N, P = 96, 8
+
+
+def _edges(seed=0, m=900):
+    rng = np.random.default_rng(seed)
+    e = rng.integers(0, N, size=(m, 2), dtype=np.int64)
+    return e[e[:, 0] != e[:, 1]]
+
+
+def _mk_store(e, plane=False, **plane_kw):
+    s = RapidStore.from_edges(
+        N, e, undirected=True, partition_size=P, B=16, high_threshold=8
+    )
+    if plane:
+        s.attach_shard_plane(n_devices=1, symmetric=True, **plane_kw)
+    return s
+
+
+def _bits(a):
+    a = np.asarray(a)
+    return a.view(np.uint32) if a.dtype == np.float32 else a
+
+
+def test_plane_parity_one_device():
+    from repro.core.analytics import bfs_view, pagerank_view, sssp_view, wcc_view
+    from repro.kernels.spmm import spmm_view
+
+    e = _edges()
+    rng = np.random.default_rng(1)
+    oracle = _mk_store(e)
+    plane_store = _mk_store(e, plane=True)
+    with oracle.read_view() as vo, plane_store.read_view() as vp:
+        src, _ = vo.to_coo()
+        w = (rng.random(len(src)) + 0.1).astype(np.float32)
+        h = rng.normal(size=(N, 12)).astype(np.float32)
+        for name, a, b in [
+            ("pagerank", pagerank_view(vp), pagerank_view(vo)),
+            ("bfs", bfs_view(vp, 0), bfs_view(vo, 0)),
+            ("sssp", sssp_view(vp, w, 0), sssp_view(vo, w, 0)),
+            ("wcc", wcc_view(vp), wcc_view(vo)),
+            ("spmm", spmm_view(vp, h), spmm_view(vo, h)),
+        ]:
+            assert np.array_equal(_bits(a), _bits(b)), name
+
+
+def test_plane_assembly_reuse_and_splice_counters():
+    from repro.core.analytics import pagerank_view
+
+    e = _edges()
+    s = _mk_store(e, plane=True)
+    plane = s.shard_plane
+    S = s.n_subgraphs
+
+    h1 = s.begin_read()
+    pagerank_view(h1.view)
+    assert plane.stats.full_builds == 1
+    assert plane.stats.uploads[0] == S  # one COO upload per subgraph
+    # repeat on the same view: memoized, no new assembly work
+    pagerank_view(h1.view)
+    assert plane.stats.full_builds == 1 and plane.stats.splices == 0
+    s.end_read(h1)
+
+    # fresh view, no writes: wholesale bundle reuse, zero uploads
+    u0 = list(plane.stats.uploads)
+    with s.read_view() as v2:
+        pagerank_view(v2)
+    assert plane.stats.reuses >= 1
+    assert plane.stats.uploads == u0
+
+    # a write dirtying exactly 2 subgraphs (symmetric edge): splice path,
+    # upload delta == dirty count, no full rebuild
+    s.insert_edges(np.array([[3, 70], [70, 3]], np.int64))
+    with s.read_view() as v3:
+        pagerank_view(v3)
+    assert plane.stats.splices == 1
+    assert plane.stats.spliced_segments == 2
+    assert plane.stats.uploads[0] == u0[0] + 2
+    assert plane.stats.full_builds == 1
+
+
+def test_plane_splice_parity_after_write():
+    from repro.core.analytics import pagerank_view, wcc_view
+
+    e = _edges()
+    oracle = _mk_store(e)
+    s = _mk_store(e, plane=True)
+    with oracle.read_view() as v:
+        pagerank_view(v)  # warm both delta planes
+    with s.read_view() as v:
+        pagerank_view(v)
+    # interleave writes with reads so every lineage window stays under the
+    # splice threshold: insert, delete (back to the original edge set
+    # data-wise but through fresh snapshot versions), then insert elsewhere
+    for batch in (
+        np.array([[3, 70], [70, 3]], np.int64),
+        np.array([[11, 50], [50, 11]], np.int64),
+    ):
+        oracle.insert_edges(batch)
+        s.insert_edges(batch)
+        with oracle.read_view() as vo, s.read_view() as vp:
+            assert np.array_equal(_bits(pagerank_view(vp)), _bits(pagerank_view(vo)))
+            assert np.array_equal(_bits(wcc_view(vp)), _bits(wcc_view(vo)))
+    assert s.shard_plane.stats.splices >= 2
+
+
+def test_plane_capacity_growth_repad():
+    """Outgrowing the power-of-two capacity regrows the shard arrays but
+    keeps results correct (device-local repad, no silent truncation)."""
+    from repro.core.analytics import pagerank_view
+
+    e = _edges(m=120)  # small: low initial capacity
+    oracle = _mk_store(e)
+    s = _mk_store(e, plane=True)
+    with s.read_view() as v:
+        pagerank_view(v)
+    cap0 = v.assembly.sharded.coo.cap
+    # bulk insert enough symmetric edges to exceed the capacity
+    rng = np.random.default_rng(7)
+    extra = rng.integers(0, N, size=(cap0 * 2, 2), dtype=np.int64)
+    extra = extra[extra[:, 0] != extra[:, 1]]
+    both = np.concatenate([extra, extra[:, ::-1]])
+    oracle.insert_edges(both)
+    s.insert_edges(both)
+    with oracle.read_view() as vo, s.read_view() as vp:
+        assert np.array_equal(_bits(pagerank_view(vp)), _bits(pagerank_view(vo)))
+        assert vp.assembly.sharded.coo.cap > cap0
+
+
+def test_plane_vertex_append_extends_placement():
+    from repro.core.analytics import pagerank_view
+
+    e = _edges(m=300)
+    oracle = _mk_store(e)
+    s = _mk_store(e, plane=True)
+    with s.read_view() as v:
+        pagerank_view(v)
+    S0 = s.n_subgraphs
+    # grow the id space past the last subgraph boundary
+    for store in (oracle, s):
+        vids = [store.insert_vertex() for _ in range(P + 1)]
+        u = vids[-1]
+        store.insert_edges(np.array([[u, 0], [0, u]], np.int64))
+    assert s.n_subgraphs > S0
+    with oracle.read_view() as vo, s.read_view() as vp:
+        assert np.array_equal(_bits(pagerank_view(vp)), _bits(pagerank_view(vo)))
+    assert len(s.shard_plane.placement_for(s.n_subgraphs)) == s.n_subgraphs
+
+
+def test_plane_env_disable_and_detach(monkeypatch):
+    from repro.core import shard_plane
+    from repro.core.analytics import pagerank_view
+
+    e = _edges(m=300)
+    s = _mk_store(e, plane=True)
+    plane = s.shard_plane
+    monkeypatch.setenv("REPRO_DISABLE_SHARD_PLANE", "1")
+    with s.read_view() as v:
+        assert shard_plane.active_plane(v) is None
+        pagerank_view(v)  # single-device path
+    assert plane.stats.collective_calls == 0
+    monkeypatch.delenv("REPRO_DISABLE_SHARD_PLANE")
+    with s.read_view() as v:
+        pagerank_view(v)
+    assert plane.stats.collective_calls == 1
+    s.detach_shard_plane()
+    assert s.shard_plane is None
+    with s.read_view() as v:
+        assert shard_plane.active_plane(v) is None
+        pagerank_view(v)
+    assert plane.stats.collective_calls == 1
+
+
+def test_plane_device_false_routes_host():
+    from repro.core import shard_plane
+    from repro.core.analytics import pagerank_view
+
+    e = _edges(m=300)
+    s = _mk_store(e, plane=True)
+    with s.read_view() as v:
+        assert shard_plane.active_plane(v, device=False) is None
+        out = pagerank_view(v, device=False)
+    assert s.shard_plane.stats.collective_calls == 0
+    assert np.asarray(out).shape == (N,)
+
+
+def test_plane_memory_accounted():
+    from repro.core.analytics import pagerank_view
+
+    e = _edges()
+    s = _mk_store(e, plane=True)
+    base = s.memory_bytes()
+    with s.read_view() as v:
+        pagerank_view(v)
+        grown = s.memory_bytes()
+        assert v.assembly.sharded.device_bytes() > 0
+    # the retired bundle keeps the shard arrays accounted after end_read
+    assert s.memory_bytes() >= base + v.assembly.sharded.coo.nbytes()
+    assert grown > base
+
+
+def test_plane_gc_releases_shard_tiles():
+    """Writer-driven GC drops per-device shard tiles with the snapshot."""
+    from repro.core.analytics import pagerank_view
+
+    e = _edges(m=300)
+    s = _mk_store(e, plane=True)
+    with s.read_view() as v:
+        pagerank_view(v)
+        snap0 = v.snaps[0]
+        assert snap0._shard_dev_cache  # resident
+    # overwrite subgraph 0 twice with no readers pinning the old versions
+    s.insert_edges(np.array([[1, 90], [2, 91]], np.int64))
+    s.insert_edges(np.array([[1, 92], [2, 93]], np.int64))
+    assert snap0._released and snap0._shard_dev_cache is None
+
+
+def test_plane_parity_all_visible_devices():
+    """Adaptive in-process coverage: on the tier-1 ``host-mesh-4`` CI leg
+    (XLA_FLAGS forces 4 host devices) this runs a real in-process
+    multi-device plane; on a single-device session it degenerates to the
+    1-device case."""
+    import jax
+
+    from repro.core.analytics import pagerank_view, wcc_view
+    from repro.kernels.spmm import spmm_view
+
+    K = len(jax.devices())
+    e = _edges(m=400)
+    oracle = _mk_store(e)
+    s = RapidStore.from_edges(
+        N, e, undirected=True, partition_size=P, B=16, high_threshold=8
+    )
+    plane = s.attach_shard_plane(n_devices=K, symmetric=True)
+    assert plane.n_shards == K
+    h = np.random.default_rng(2).normal(size=(N, 8)).astype(np.float32)
+    with oracle.read_view() as vo, s.read_view() as vp:
+        assert np.array_equal(_bits(pagerank_view(vp)), _bits(pagerank_view(vo)))
+        assert np.array_equal(_bits(wcc_view(vp)), _bits(wcc_view(vo)))
+        assert np.array_equal(_bits(spmm_view(vp, h)), _bits(spmm_view(vo, h)))
+
+
+# ---------------------------------------------------------------------------
+# Forced 4-host-device mesh (subprocesses; shared launcher in _subproc.py)
+# ---------------------------------------------------------------------------
+def run_sub(code: str) -> str:
+    from _subproc import run_sub as _run
+
+    return _run(code, devices=4)
+
+
+def test_sharded_parity_and_one_shard_isolation_4dev():
+    """The acceptance contract on a real 4-device mesh: bitwise parity of
+    every collective vs the single-device oracles, then a writer dirtying
+    subgraphs resident on exactly one shard — the other three shards
+    perform zero uploads and reuse their bundles by object identity."""
+    run_sub("""
+    import numpy as np
+    from repro.core import RapidStore
+    from repro.core.analytics import bfs_view, pagerank_view, sssp_view, wcc_view
+    from repro.kernels.spmm import spmm_view
+
+    n, p = 96, 8
+    rng = np.random.default_rng(0)
+    e = rng.integers(0, n, size=(900, 2), dtype=np.int64)
+    e = e[e[:, 0] != e[:, 1]]
+    kw = dict(undirected=True, partition_size=p, B=16, high_threshold=8)
+    oracle = RapidStore.from_edges(n, e, **kw)
+    s = RapidStore.from_edges(n, e, **kw)
+    plane = s.attach_shard_plane(n_devices=4, symmetric=True)
+    assert plane.n_shards == 4
+
+    def bits(a):
+        a = np.asarray(a)
+        return a.view(np.uint32) if a.dtype == np.float32 else a
+
+    h = rng.normal(size=(n, 12)).astype(np.float32)
+    ho = oracle.begin_read(); hp = s.begin_read()
+    vo, vp = ho.view, hp.view
+    w = (rng.random(vo.n_edges) + 0.1).astype(np.float32)
+    assert np.array_equal(bits(pagerank_view(vp)), bits(pagerank_view(vo)))
+    assert np.array_equal(bits(bfs_view(vp, 0)), bits(bfs_view(vo, 0)))
+    assert np.array_equal(bits(sssp_view(vp, w, 0)), bits(sssp_view(vo, w, 0)))
+    assert np.array_equal(bits(wcc_view(vp)), bits(wcc_view(vo)))
+    assert np.array_equal(bits(spmm_view(vp, h)), bits(spmm_view(vo, h)))
+    oracle.end_read(ho); s.end_read(hp)
+    print("parity 4dev OK")
+
+    # --- one-shard writer isolation ---------------------------------------
+    # modulo placement: shard 1 owns sids {1, 5, 9} = vertex blocks
+    # [8,16) [40,48) [72,80).  A symmetric edge inside those blocks dirties
+    # subgraphs on shard 1 only.
+    placement = plane.placement_for(s.n_subgraphs)
+    batch = np.array([[9, 44], [44, 9], [10, 75], [75, 10]], np.int64)
+    dirty_sids = set(int(u) // p for u in batch[:, 0])
+    assert set(int(placement[sid]) for sid in dirty_sids) == {1}
+    for store in (oracle, s):
+        store.insert_edges(batch)
+
+    u0 = list(plane.stats.uploads)
+    ho = oracle.begin_read(); hp2 = s.begin_read()
+    assert np.array_equal(bits(pagerank_view(hp2.view)), bits(pagerank_view(ho.view)))
+    delta = [a - b for a, b in zip(plane.stats.uploads, u0)]
+    assert delta[0] == 0 and delta[2] == 0 and delta[3] == 0, delta
+    assert delta[1] == len(dirty_sids), delta
+    # clean shards reuse the predecessor bundles by identity
+    pred = vp.assembly.sharded.coo
+    succ = hp2.view.assembly.sharded.coo
+    for k in (0, 2, 3):
+        assert succ.shards[k] is pred.shards[k], k
+    assert succ.shards[1] is not pred.shards[1]
+    assert plane.stats.splices == 1
+    oracle.end_read(ho); s.end_read(hp2)
+    print("one-shard isolation OK")
+    """)
+
+
+def test_sharded_degree_balanced_and_spmm_splice_4dev():
+    run_sub("""
+    import numpy as np
+    from repro.core import RapidStore
+    from repro.core.analytics import pagerank_view
+    from repro.kernels.spmm import spmm_view
+
+    n, p = 96, 8
+    rng = np.random.default_rng(5)
+    # skewed: hub vertex 0 connects widely -> subgraph 0 is heavy
+    hub = np.stack([np.zeros(60, np.int64), rng.integers(1, n, 60)], 1)
+    e = np.concatenate([hub, rng.integers(0, n, size=(300, 2), dtype=np.int64)])
+    e = e[e[:, 0] != e[:, 1]]
+    kw = dict(undirected=True, partition_size=p, B=16, high_threshold=8)
+    oracle = RapidStore.from_edges(n, e, **kw)
+    s = RapidStore.from_edges(n, e, **kw)
+    plane = s.attach_shard_plane(n_devices=4, policy="degree_balanced", symmetric=True)
+    placement = plane.placement_for(s.n_subgraphs)
+    assert len(np.unique(placement)) == 4  # all shards used
+
+    def bits(a):
+        a = np.asarray(a)
+        return a.view(np.uint32) if a.dtype == np.float32 else a
+
+    h = rng.normal(size=(n, 12)).astype(np.float32)
+    with oracle.read_view() as vo, s.read_view() as vp:
+        assert np.array_equal(bits(pagerank_view(vp)), bits(pagerank_view(vo)))
+        assert np.array_equal(bits(spmm_view(vp, h)), bits(spmm_view(vo, h)))
+
+    # leaf-tile (blocks) splice after a write: spmm stays bitwise-equal and
+    # only the written subgraph's shard uploads
+    batch = np.array([[17, 20], [20, 17]], np.int64)
+    sidk = int(placement[17 // p])
+    for store in (oracle, s):
+        store.insert_edges(batch)
+    u0 = list(plane.stats.uploads)
+    with oracle.read_view() as vo, s.read_view() as vp:
+        assert np.array_equal(bits(spmm_view(vp, h)), bits(spmm_view(vo, h)))
+    delta = [a - b for a, b in zip(plane.stats.uploads, u0)]
+    for k in range(4):
+        if k != sidk:
+            assert delta[k] == 0, (k, delta)
+    assert delta[sidk] >= 1
+    print("degree-balanced + spmm splice OK")
+
+    # re-attach with a DIFFERENT shard count: the retired 4-shard bundle
+    # must not be spliced/reused by the 2-shard plane (full rebuild instead)
+    plane2 = s.attach_shard_plane(n_devices=2, policy="degree_balanced", symmetric=True)
+    with oracle.read_view() as vo, s.read_view() as vp:
+        assert np.array_equal(bits(pagerank_view(vp)), bits(pagerank_view(vo)))
+    assert plane2.stats.full_builds >= 1 and plane2.stats.splices == 0
+
+    # appended subgraphs spread across shards (loads charged per append)
+    base_S = s.n_subgraphs
+    for _ in range(4 * p):
+        s.insert_vertex()
+    pl2 = plane2.placement_for(s.n_subgraphs)
+    assert s.n_subgraphs - base_S >= 4
+    assert len(set(int(x) for x in pl2[base_S:])) > 1, pl2[base_S:]
+    print("re-attach + append spreading OK")
+    """)
