@@ -90,6 +90,7 @@ def bench_delta_plane(name: str, n: int, edges: np.ndarray) -> None:
 
     LAYOUTS = {
         "csr": lambda v: v.to_csr(),
+        "stream": lambda v: v.to_leaf_stream(),
         "blocks": lambda v: v.to_leaf_blocks(),
     }
 
@@ -105,6 +106,7 @@ def bench_delta_plane(name: str, n: int, edges: np.ndarray) -> None:
         with store.read_view() as v:
             v.to_coo()
             v.to_csr()
+            v.to_leaf_stream()
             v.to_leaf_blocks()
 
     def one_subgraph_write(store, rng):
@@ -171,6 +173,99 @@ def bench_delta_plane(name: str, n: int, edges: np.ndarray) -> None:
                 t_concat * 1e6,
                 f"splice_speedup={t_concat / max(t_splice, 1e-9):.2f}x",
             )
+
+
+def bench_compacted_stream(name: str, n: int, edges: np.ndarray) -> None:
+    """Compacted host leaf stream vs the padded full-concat path.
+
+    The memcpy-bound claim, measured: at B=512 the padded ``[n_blocks, B]``
+    layout is dominated by SENTINEL tail bytes, so splicing the compacted
+    stream (O(dirty live bytes)) beats re-concatenating padded tiles by a
+    wide margin.  Regimes: cold (full concat, both layouts), warm (pure
+    reuse), post-1-subgraph write and post-50%-dirty write (splice vs the
+    ``REPRO_DISABLE_DELTA_SPLICE``-forced padded full concat).  Also
+    records the host-resident byte ratio — the padding the stream stopped
+    paying for.  Touches are counter-asserted O(dirty) on every splice
+    trial (acceptance criterion for the compacted-layout PR).
+    """
+    import os
+    import time
+
+    from repro.core import view_assembler
+
+    store = RapidStore.from_edges(n, edges, **store_defaults())
+    S = store.n_subgraphs
+
+    def timed_fresh(store, mat):
+        h = store.begin_read()
+        t0 = time.perf_counter()
+        out = mat(h.view)
+        dt = time.perf_counter() - t0
+        store.end_read(h)
+        return dt, out
+
+    # cold: full concat of the compacted stream vs deriving the padded view
+    t_stream_cold, stream = timed_fresh(store, lambda v: v.to_leaf_stream())
+    t_padded_cold, blocks = timed_fresh(store, lambda v: v.to_leaf_blocks())
+    stream_bytes = stream.nbytes()
+    padded_bytes = blocks.src.nbytes + blocks.rows.nbytes + blocks.length.nbytes
+    record(f"analytics/{name}/compacted_stream_cold", t_stream_cold * 1e6,
+           f"S={S} B={store.B}")
+    record(f"analytics/{name}/compacted_stream_host_bytes", float(stream_bytes),
+           f"padded={padded_bytes} ratio={padded_bytes / max(stream_bytes, 1):.1f}x")
+
+    view_assembler.stats.reset()
+    t_warm = timeit(lambda: timed_fresh(store, lambda v: v.to_leaf_stream()),
+                    repeat=3, number=5)
+    assert view_assembler.stats.snapshot_touches == 0
+    record(f"analytics/{name}/compacted_stream_warm_reuse", t_warm * 1e6,
+           f"vs_cold={t_stream_cold / max(t_warm, 1e-9):.0f}x touches=0")
+
+    rng = np.random.default_rng(13)
+
+    def one_subgraph_write(store):
+        u = int(rng.integers(0, store.p))  # stays inside subgraph 0
+        store.insert_edge(u, int(rng.integers(store.p, n)))
+
+    def half_dirty_write(store):
+        sids = rng.choice(S, S // 2, replace=False)
+        us = (sids * store.p + rng.integers(0, store.p, len(sids))).astype(np.int64)
+        us = np.minimum(us, n - 1)
+        vs = rng.integers(0, n, len(sids)).astype(np.int64)
+        store.insert_edges(np.stack([us, vs], 1))
+
+    for wlabel, write, n_dirty, frac in (
+        ("post_1subgraph_write", one_subgraph_write, 1, None),
+        ("post_50pct_dirty_write", half_dirty_write, S // 2, "1.0"),
+    ):
+        splice_trials, concat_trials = [], []
+        for _ in range(7):
+            write(store)
+            if frac is not None:
+                os.environ["REPRO_SPLICE_MAX_DIRTY_FRAC"] = frac
+            view_assembler.stats.reset()
+            splice_trials.append(timed_fresh(store, lambda v: v.to_leaf_stream())[0])
+            s = view_assembler.stats
+            assert s.full_concats == 0, \
+                f"{wlabel}: compacted splice fell back to full concat"
+            assert s.snapshot_touches <= n_dirty, (
+                f"{wlabel}: compacted splice touched {s.snapshot_touches} "
+                f"subgraphs for {n_dirty} dirty"
+            )
+            os.environ.pop("REPRO_SPLICE_MAX_DIRTY_FRAC", None)
+
+            # padded full-concat reference: splice disabled, padded layout
+            write(store)
+            os.environ["REPRO_DISABLE_DELTA_SPLICE"] = "1"
+            concat_trials.append(timed_fresh(store, lambda v: v.to_leaf_blocks())[0])
+            os.environ.pop("REPRO_DISABLE_DELTA_SPLICE", None)
+        t_splice = float(np.median(splice_trials))
+        t_concat = float(np.median(concat_trials))
+        record(f"analytics/{name}/compacted_{wlabel}_stream_splice",
+               t_splice * 1e6, f"dirty={n_dirty}")
+        record(f"analytics/{name}/compacted_{wlabel}_padded_full_concat",
+               t_concat * 1e6,
+               f"splice_speedup={t_concat / max(t_splice, 1e-9):.1f}x")
 
 
 _SHARD_SUB_BODY = """
@@ -295,6 +390,7 @@ def run(quick: bool = False) -> None:
         if name == "lj":
             bench_incremental_materialize(name, n, edges)
             bench_delta_plane(name, n, edges)
+            bench_compacted_stream(name, n, edges)
             bench_shard_plane(name, (1, 2) if quick else (1, 2, 4))
 
         algos = {

@@ -107,7 +107,10 @@ n, edges = dataset("lj")
 store = RapidStore.from_edges(n, edges, undirected=True, **store_defaults())
 plane = store.attach_shard_plane(n_devices=K, symmetric=True)
 with store.read_view() as v:
-    pagerank_view(v).block_until_ready()  # compile + warm tiles
+    # warm with the SAME iters the readers measure: the plane's jit cache
+    # keys on iters, so warming iters=10 would leave the iters=2 program
+    # to compile inside the first timed sample
+    pagerank_view(v, iters=2).block_until_ready()  # compile + warm tiles
 
 stop = threading.Event()
 lat, errors = [], []

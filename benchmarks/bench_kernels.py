@@ -46,6 +46,14 @@ def bench_device_tile_cache(quick: bool = False) -> None:
         cold_bytes = device_cache.stats.bytes_uploaded
         record("kernels/device_tiles_cold_upload", t_cold * 1e6,
                f"uploads={cold_uploads} bytes={cold_bytes}")
+        # host->device transfer is the COMPACTED stream; the fixed-B padding
+        # is synthesized device-side — record the bytes the bus stopped
+        # carrying vs the padded-equivalent resident tile size
+        dev = view.to_leaf_blocks_device()
+        padded_bytes = int(dev.src.nbytes) + int(dev.rows.nbytes) + int(dev.length.nbytes)
+        record("kernels/device_tiles_upload_bytes_packed", float(cold_bytes),
+               f"padded_equiv={padded_bytes} "
+               f"reduction={padded_bytes / max(cold_bytes, 1):.1f}x")
         t_warm = timeit(lambda: view.to_leaf_blocks_device(), repeat=3, number=10)
         assert device_cache.stats.uploads == cold_uploads, \
             "warm repeat must not re-upload leaf tiles"

@@ -4,7 +4,7 @@ from .clock import LogicalClock
 from .device_cache import DeviceCSRView, DeviceLeafBlockView
 from .leaf_pool import LeafPool, SENTINEL
 from .reader_tracer import ReaderTracer, FREE_TS
-from .snapshot import CSRView, LeafBlockView, SnapshotView
+from .snapshot import CompactLeafStream, CSRView, LeafBlockView, SnapshotView
 from .shard_plane import ShardPlane, ShardedViewAssembly
 from .store import RapidStore, ReadHandle
 from .subgraph import SubgraphSnapshot, build_subgraph
@@ -21,6 +21,7 @@ __all__ = [
     "SENTINEL",
     "ReaderTracer",
     "FREE_TS",
+    "CompactLeafStream",
     "CSRView",
     "DeviceCSRView",
     "DeviceLeafBlockView",

@@ -242,11 +242,12 @@ def _triangle_count_device(view, batch: int = 8192) -> int:
     """
     from repro.kernels.intersect import sum_intersect_tiles_view
 
-    blocks = view.to_leaf_blocks()
     from . import view_assembler
 
     src, order = view_assembler.block_src_index(view)
-    lens = np.asarray(blocks.length, np.int64)
+    # the host side only needs per-leaf lengths: read the compacted stream's
+    # sidecar natively — no padded [n, B] host materialization
+    lens = np.asarray(view.to_leaf_stream().leaf_lens, np.int64)
     s_sorted = src[order]
 
     csr = view.to_csr()

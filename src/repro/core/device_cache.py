@@ -5,13 +5,16 @@ View materialization is memoized at three layers, each exploiting snapshot
 immutability:
 
 1. **Per-subgraph host** (:meth:`SubgraphSnapshot.to_coo_global` /
-   ``to_leaf_blocks_global``): each immutable snapshot computes its
-   vectorized arrays once; a commit creates new (cold) snapshots only for
-   the subgraphs it touches.
-2. **Per-subgraph device** (this module): each snapshot's host arrays are
-   uploaded once (``jax.device_put``) and pinned as ``jax.Array`` tiles —
-   one transfer per snapshot version, ever.  A warm repeat query performs
-   **zero** host->device leaf-block transfers.
+   ``to_leaf_stream_global``): each immutable snapshot computes its
+   vectorized arrays once — the leaf layout is the *compacted* stream
+   (packed values + lens/keys sidecars, no SENTINEL padding); a commit
+   creates new (cold) snapshots only for the subgraphs it touches.
+2. **Per-subgraph device** (this module): each snapshot's compacted stream
+   is uploaded once (``jax.device_put``) and re-padded to the fixed-B
+   ``[n, B]`` tile shape *on the device* (:func:`_pad_tiles_on_device`) —
+   the Pallas kernels still see dense tiles, but the bus only ever carries
+   live bytes, and only one transfer per snapshot version.  A warm repeat
+   query performs **zero** host->device leaf-block transfers.
 3. **Per-view delta plane** (:mod:`repro.core.view_assembler`): the global
    concatenated arrays of a view.  A fresh view splices only the dirty
    subgraphs' tiles into its *predecessor view's* concatenated device
@@ -164,12 +167,42 @@ def tiles_fresh(snap) -> bool:
     return bool(np.array_equal(snap.pool.generation[ids], gens))
 
 
+def _pad_tiles_on_device(data, lens, B: int):
+    """Re-pad packed leaf values to the fixed-B ``[n, B]`` tiles on device.
+
+    The device twin of :func:`repro.core.subgraph.pad_leaf_stream`: the
+    host->device transfer carries only the compacted stream (live values +
+    sidecars); the SENTINEL tail the Pallas kernels expect is synthesized
+    where the tiles live.  Runs on whatever device ``data``/``lens`` are
+    committed to.
+    """
+    import jax.numpy as jnp
+
+    from .leaf_pool import SENTINEL
+
+    n = int(lens.shape[0])
+    if int(data.shape[0]) == 0:
+        # no live values (possibly no tiles at all): pure-SENTINEL tiles,
+        # derived from ``lens`` so the result stays on its device
+        return jnp.broadcast_to(lens[:, None] * 0 + jnp.int32(SENTINEL), (n, B))
+    off = jnp.cumsum(lens) - lens
+    col = jnp.arange(B, dtype=lens.dtype)
+    mask = col[None, :] < lens[:, None]
+    safe = jnp.where(mask, off[:, None] + col[None, :], 0)
+    return jnp.where(
+        mask, jnp.take(data, safe.reshape(-1)).reshape(n, B), jnp.int32(SENTINEL)
+    )
+
+
 def leaf_block_tiles(snap, wait: bool = True) -> tuple:
     """Device-resident ``(src, rows, length)`` tiles of one snapshot.
 
     Memoized on the snapshot: the first call uploads the host-memoized
-    arrays (one transfer per snapshot version, ever); repeats return the
-    pinned ``jax.Array`` tuple.  Raises RuntimeError on released snapshots.
+    *compacted* stream — packed values, lens, keys; no SENTINEL padding
+    crosses the bus — then re-pads to the fixed-B ``[n, B]`` tile shape
+    device-side (one transfer per snapshot version, ever); repeats return
+    the pinned ``jax.Array`` tuple.  Raises RuntimeError on released
+    snapshots.
 
     ``wait=False`` skips the post-upload ``block_until_ready`` — the delta
     plane's async prefetch path issues one non-blocking ``jax.device_put``
@@ -186,8 +219,11 @@ def leaf_block_tiles(snap, wait: bool = True) -> tuple:
             _hit()
             return cached
         _miss()
-        host = snap.to_leaf_blocks_global()  # raises if released; copies pool rows
-        tiles = _device_put(host, wait=wait)
+        # raises if released; the stream is a copy of the pool rows
+        data, _offsets, lens, keys = snap.to_leaf_stream_global()
+        up_data, up_lens, up_keys = _device_put((data, lens, keys), wait=wait)
+        rows = _pad_tiles_on_device(up_data, up_lens, snap.pool.B)
+        tiles = (up_keys, rows, up_lens)
         snap._dev_gen_stamp = _gen_stamp(snap)
         snap._dev_blocks_cache = tiles
         return tiles
@@ -239,17 +275,24 @@ def note_release(snap) -> None:
 # ``(tiles, uploaded_bytes)`` — 0 bytes on a hit — so the plane can keep
 # per-shard upload counters on top of the process-wide ``stats``.
 # ---------------------------------------------------------------------------
-def _shard_cache_put(snap, key, host_arrays, device, wait):
+def _shard_cache_put(snap, key, host_arrays, device, wait, finish=None):
+    """Upload ``host_arrays`` to ``device``, account, stamp, and cache.
+
+    ``finish``, when given, maps the uploaded tuple to the cached tile
+    tuple (e.g. the leaf path's device-side re-pad) — the transfer byte
+    count always reflects only what actually crossed the bus.
+    """
     import jax
 
-    tiles = tuple(jax.device_put(a, device) for a in host_arrays)
+    up = tuple(jax.device_put(a, device) for a in host_arrays)
     if wait:
-        for t in tiles:
+        for t in up:
             t.block_until_ready()
-    nbytes = int(sum(int(t.nbytes) for t in tiles))
+    nbytes = int(sum(int(t.nbytes) for t in up))
     with _lock:
         stats.uploads += len(host_arrays)
         stats.bytes_uploaded += nbytes
+    tiles = up if finish is None else finish(up)
     if snap._shard_dev_cache is None:
         snap._shard_dev_cache = {}
     if snap._dev_gen_stamp is None:
@@ -283,7 +326,10 @@ def shard_coo_tiles(snap, device, wait: bool = True) -> Tuple[tuple, int]:
 def shard_leaf_tiles(snap, device, wait: bool = True) -> Tuple[tuple, int]:
     """``(src, rows, length)`` leaf-block tiles pinned on ``device``.
 
-    Same contract as :func:`shard_coo_tiles`.
+    Same contract as :func:`shard_coo_tiles`; like the default-device path,
+    only the snapshot's *compacted* stream crosses the bus — the fixed-B
+    padding is synthesized on the shard device after the upload, so the
+    returned ``uploaded_bytes`` counts packed bytes only.
     """
     key = ("blocks", device.id)
     cache = snap._shard_dev_cache
@@ -296,8 +342,13 @@ def shard_leaf_tiles(snap, device, wait: bool = True) -> Tuple[tuple, int]:
             _hit()
             return cache[key], 0
         _miss()
-        host = snap.to_leaf_blocks_global()
-        return _shard_cache_put(snap, key, host, device, wait)
+        data, _offsets, lens, keys = snap.to_leaf_stream_global()
+        return _shard_cache_put(
+            snap, key, (data, lens, keys), device, wait,
+            finish=lambda up: (
+                up[2], _pad_tiles_on_device(up[0], up[1], snap.pool.B), up[1]
+            ),
+        )
 
 
 # ---------------------------------------------------------------------------

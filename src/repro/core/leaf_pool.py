@@ -11,16 +11,26 @@ directories referencing it.  The COW path increments the new row's count;
 when concurrency control reclaims a snapshot version, its directory decrements
 every referenced row and zero-count rows return to the free list.
 
-This pooled layout is also exactly the device *scan format*: a snapshot view
-is a gather of directory-selected rows, which feeds the Pallas scan/intersect
-kernels as dense ``[n, B]`` tiles (the TPU analogue of the paper's AVX2 leaf
-scans).
+Host materialization contract — the compacted stream
+----------------------------------------------------
+
+The pooled ``[capacity, B]`` matrix is a *write-side* format: it exists so
+copy-on-write can allocate and recycle fixed-size rows in O(1).  Snapshot
+materialization does NOT keep that padding: :func:`gather_packed` emits the
+directory-selected rows as one packed 1-D value stream plus per-leaf lengths,
+and every host cache downstream (``SubgraphSnapshot.to_leaf_stream_global``,
+the view assembler's spliced global stream) stores leaves in that compacted
+variable-width form — host memory and host->device transfers never pay for
+the ``B - length`` SENTINEL tail.  The fixed-width ``[n, B]`` tile shape the
+Pallas scan/intersect/spmm kernels require is reconstructed *device-side*
+after the packed upload (see :mod:`repro.core.device_cache`), or on host
+only for the explicit ``to_leaf_blocks`` compatibility path.
 """
 
 from __future__ import annotations
 
 import threading
-from typing import List
+from typing import List, Tuple
 
 import numpy as np
 
@@ -118,6 +128,22 @@ class LeafPool:
     def row_values(self, row: int) -> np.ndarray:
         """The live (unpadded) values of a row — zero-copy slice."""
         return self.data[row, : self.length[row]]
+
+    def gather_packed(self, rows: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+        """Packed ``(values, lens)`` of the given rows, in row order.
+
+        ``values`` concatenates each row's live (unpadded) contents —
+        ``lens[i]`` values for ``rows[i]`` — with no SENTINEL padding; this
+        is the compacted emission the host snapshot caches are built from.
+        Both arrays are fresh copies (fancy indexing), so callers never
+        alias recyclable pool memory.
+        """
+        rows = np.asarray(rows, np.int64)
+        lens = self.length[rows].astype(np.int64)
+        if len(rows) == 0:
+            return np.empty(0, np.int32), lens
+        tiles = self.data[rows]  # [k, B] copy
+        return tiles[np.arange(self.B)[None, :] < lens[:, None]], lens
 
     # -- invariants / stats -----------------------------------------------------
     def n_live_rows(self) -> int:

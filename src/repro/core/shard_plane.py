@@ -36,6 +36,10 @@ to the device the placement chose, generation-stamped against recycled
 :class:`~repro.core.leaf_pool.LeafPool` rows (the plane re-verifies the
 stamp after every fetch and refuses to splice a stale tile), and dropped by
 ``SubgraphSnapshot.release()`` when writer-driven GC reclaims the version.
+Leaf tiles cross the bus *compacted*: only the snapshot's packed stream
+(values + lens/keys sidecars) is transferred, and the fixed-B SENTINEL
+padding the collectives' Pallas kernels expect is synthesized on the shard
+device after the upload — so the per-shard byte counters count live bytes.
 Per-shard upload/byte counters in :class:`ShardPlaneStats` make the
 transfer contract observable: after a commit dirtying subgraphs resident on
 one shard, every other shard's upload counter stays flat (counter-asserted
@@ -544,10 +548,13 @@ class ShardPlane:
             tiles = self._fetch(view.snaps[sid], k, fetch_fn)
             fresh.setdefault(k, {})[sid] = tiles
             seg_counts[sid] = int(tiles[0].shape[0])
-        # new live sizes per shard
-        pred_pos_all = [
-            {int(s): i for i, s in enumerate(ps.sids)} for ps in pred_kind.shards
-        ]
+        # sid -> index maps, built only for shards with fresh segments:
+        # clean shards never consult them, and building all K would cost
+        # O(S) host work per splice regardless of the dirty count
+        pred_pos_all = {
+            k: {int(s): i for i, s in enumerate(pred_kind.shards[k].sids)}
+            for k in fresh
+        }
         lives = []
         for k in range(self.n_shards):
             pred_shard = pred_kind.shards[k]

@@ -8,9 +8,16 @@ checks — the decoupling the paper's design buys.
 Materializers produce device-ready layouts:
 
 - ``to_coo`` / ``to_csr`` — global COO/CSR arrays for jitted analytics;
-- ``to_leaf_blocks`` — the padded ``[n_blocks, B]`` leaf-tile stream consumed
-  by the Pallas scan/intersect/spmm kernels (the TPU analogue of the paper's
-  AVX2 leaf scans).
+- ``to_leaf_stream`` — the compacted variable-width leaf-tile stream: one
+  packed ``data`` array plus ``(leaf_offsets, leaf_lens, leaf_keys)``
+  sidecars, no SENTINEL padding.  This is the *host* leaf format: what the
+  per-subgraph snapshots cache, what the delta plane splices in
+  O(dirty-bytes), and what crosses the host->device boundary;
+- ``to_leaf_blocks`` — the padded ``[n_blocks, B]`` compatibility view,
+  re-padded from the stream on demand.  The Pallas scan/intersect/spmm
+  kernels consume fixed-B tiles, but those are reconstructed *device-side*
+  after the packed upload (:mod:`repro.core.device_cache`) — host memory
+  only pays for padding when a caller explicitly asks for this layout.
 
 Cache lifecycle — the three-layer memo + delta plane
 ----------------------------------------------------
@@ -19,14 +26,17 @@ Materialization is memoized at three layers, each exploiting snapshot
 immutability:
 
 1. **Per-subgraph host** (:meth:`SubgraphSnapshot.to_coo_global` /
-   ``to_leaf_blocks_global``): each immutable snapshot computes its own
-   vectorized COO / leaf-block arrays once (global src ids baked in) and
-   caches them for every view that resolves it.  A write produces a *new*
-   snapshot object only for the subgraphs it touches, so only dirty
+   ``to_leaf_stream_global``): each immutable snapshot computes its own
+   vectorized COO / compacted leaf-stream arrays once (global src ids baked
+   in) and caches them for every view that resolves it.  A write produces a
+   *new* snapshot object only for the subgraphs it touches, so only dirty
    subgraphs ever rebuild.  The caches are dropped in
    :meth:`SubgraphSnapshot.release` — GC recycles the version's pool rows,
    so invalidation there is a correctness requirement, not just a leak fix —
-   and are charged to :meth:`RapidStore.memory_bytes`.
+   and are charged to :meth:`RapidStore.memory_bytes`.  Each stream cache
+   carries a pool-row *generation stamp* (``stream_fresh``), the host twin
+   of the device-tile stamp, so a recycled row serving a stale span is
+   detectable.
 2. **Per-subgraph device** (:mod:`repro.core.device_cache`): each
    snapshot's arrays are uploaded once and pinned on the accelerator as
    ``jax.Array`` tiles; a warm repeat performs zero host->device transfers.
@@ -78,18 +88,107 @@ class CSRView:
 
 @dataclass(frozen=True)
 class LeafBlockView:
-    """Padded leaf-tile stream: the device scan format.
+    """Padded leaf-tile stream: the fixed-B scan format.
 
     ``rows[i]`` holds up to B sorted neighbor ids of vertex ``src[i]``,
     padded with SENTINEL; ``length[i]`` is the live count.  High-degree
     vertices contribute one entry per C-ART leaf; low-degree vertices'
     clustered-index segments are chunked to the same width, so the whole
     graph scan is a single dense [n, B] pass.
+
+    This is a *compatibility/kernel-input* layout: the host of record is
+    the compacted :class:`CompactLeafStream`; these padded tiles are
+    re-derived from it on demand (host) or device-side after upload.
     """
 
     src: np.ndarray  # int32 [n_blocks]
     rows: np.ndarray  # int32 [n_blocks, B]
     length: np.ndarray  # int32 [n_blocks]
+
+
+@dataclass(frozen=True)
+class CompactLeafStream:
+    """Compacted variable-width leaf-tile stream: the host leaf format.
+
+    ``data`` packs every leaf's live neighbor ids back to back (no SENTINEL
+    padding); leaf ``i`` spans ``data[leaf_offsets[i] : leaf_offsets[i+1]]``,
+    holds ``leaf_lens[i]`` sorted values, and belongs to source vertex
+    ``leaf_keys[i]``.  Leaf order is identical to the padded layout
+    (:class:`LeafBlockView`), so re-padding reproduces it bitwise.
+
+    Host-only consumers (scan/search fallbacks, baselines, edge search
+    candidate gathers) read this stream natively; the fixed-B tile shape
+    the Pallas kernels need is reconstructed device-side after the packed
+    upload (:mod:`repro.core.device_cache`) or via :meth:`to_padded` /
+    :meth:`gather_padded` on host.
+    """
+
+    data: np.ndarray  # int32 [total_values]
+    leaf_offsets: np.ndarray  # int64 [n_leaves + 1]
+    leaf_lens: np.ndarray  # int32 [n_leaves]
+    leaf_keys: np.ndarray  # int32 [n_leaves] — source vertex per leaf
+
+    @property
+    def n_leaves(self) -> int:
+        return len(self.leaf_lens)
+
+    @property
+    def n_values(self) -> int:
+        return int(self.leaf_offsets[-1]) if len(self.leaf_offsets) else 0
+
+    def leaf_values(self, i: int) -> np.ndarray:
+        """Leaf ``i``'s live values — zero-copy slice of the packed data."""
+        return self.data[self.leaf_offsets[i] : self.leaf_offsets[i + 1]]
+
+    def nbytes(self) -> int:
+        return (
+            self.data.nbytes
+            + self.leaf_offsets.nbytes
+            + self.leaf_lens.nbytes
+            + self.leaf_keys.nbytes
+        )
+
+    def gather_padded(self, idx: np.ndarray, B: int) -> np.ndarray:
+        """Padded ``[len(idx), B]`` tiles of the selected leaves only.
+
+        The host fallbacks pad just the leaves a query touches instead of
+        materializing the full padded stream.  Gathers the selected leaves
+        into a small packed sub-stream, then delegates the padding to the
+        one canonical scatter (:func:`repro.core.subgraph.pad_leaf_stream`).
+        Out-of-range indices clamp to the valid range, mirroring the jnp
+        gather semantics of the device-resident tile path — both legs
+        behave identically on boundary input.
+        """
+        from .subgraph import pad_leaf_stream
+
+        idx = np.asarray(idx, np.int64)
+        if self.n_leaves:
+            idx = np.clip(idx, 0, self.n_leaves - 1)
+            lens32 = self.leaf_lens[idx]
+        else:
+            lens32 = np.zeros(len(idx), np.int32)
+        lens = lens32.astype(np.int64)
+        offsets = np.zeros(len(idx) + 1, np.int64)
+        np.cumsum(lens, out=offsets[1:])
+        total = int(offsets[-1])
+        if total:
+            # pos: each gathered value's offset within its own leaf
+            pos = np.arange(total, dtype=np.int64) - np.repeat(offsets[:-1], lens)
+            flat = np.repeat(self.leaf_offsets[idx].astype(np.int64), lens) + pos
+            data = self.data[flat]
+        else:
+            data = np.empty(0, np.int32)
+        return pad_leaf_stream(data, offsets, lens32, B)
+
+    def to_padded(self, B: int) -> LeafBlockView:
+        """The full padded twin (``LeafBlockView``), rebuilt in one pass."""
+        from .subgraph import pad_leaf_stream
+
+        return LeafBlockView(
+            self.leaf_keys,
+            pad_leaf_stream(self.data, self.leaf_offsets, self.leaf_lens, B),
+            self.leaf_lens,
+        )
 
 
 class SnapshotView:
@@ -184,8 +283,38 @@ class SnapshotView:
 
         return view_assembler.host_csr(self)
 
+    def to_leaf_stream(self) -> CompactLeafStream:
+        """Global compacted leaf-tile stream — delta-plane assembled.
+
+        The primary host blocks materialization: packed ``data`` +
+        ``(leaf_offsets, leaf_lens, leaf_keys)`` sidecars, spliced from the
+        predecessor view in O(dirty-bytes) (copy+patch when every dirty
+        subgraph's packed span keeps its size, O(d)-run concat otherwise).
+        """
+        from . import view_assembler
+
+        return view_assembler.host_stream(self)
+
+    def to_leaf_stream_uncached(self) -> CompactLeafStream:
+        """Full-rebuild packed-stream oracle (derived from the per-vertex
+        loop padded oracle — never touches any cache layer)."""
+        ob = self.to_leaf_blocks_uncached()
+        B = ob.rows.shape[1] if ob.rows.ndim == 2 else self.B
+        lens = ob.length.astype(np.int64)
+        mask = np.arange(B)[None, :] < lens[:, None]
+        offsets = np.zeros(len(lens) + 1, np.int64)
+        np.cumsum(lens, out=offsets[1:])
+        return CompactLeafStream(ob.rows[mask], offsets, ob.length, ob.src)
+
     def to_leaf_blocks(self) -> LeafBlockView:
-        """Global padded leaf-tile stream — delta-plane assembled."""
+        """Global padded leaf-tile stream (compatibility layout).
+
+        Assembled via the compacted stream: dirty subgraphs are spliced
+        into the predecessor's padded arrays when one exists, otherwise the
+        whole padded view is re-derived from :meth:`to_leaf_stream`.
+        Prefer the stream for host-side work — this layout re-inflates the
+        SENTINEL padding the compacted host format eliminates.
+        """
         from . import view_assembler
 
         return view_assembler.host_blocks(self)

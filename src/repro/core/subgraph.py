@@ -27,7 +27,30 @@ import numpy as np
 from . import cart, clustered_index as cidx
 from .cart import CartDir
 from .clustered_index import ClusteredIndex
-from .leaf_pool import LeafPool
+from .leaf_pool import SENTINEL, LeafPool
+
+
+def pad_leaf_stream(
+    data: np.ndarray, offsets: np.ndarray, lens: np.ndarray, B: int
+) -> np.ndarray:
+    """Re-pad a compacted leaf stream to the fixed-B ``[n_leaves, B]`` tiles.
+
+    The inverse of packing: leaf ``i``'s ``lens[i]`` values land in
+    ``rows[i, :lens[i]]`` and the tail is SENTINEL — bitwise identical to
+    the historical padded host layout (pool rows are SENTINEL-filled past
+    their live count).  One vectorized scatter; used by the host
+    ``to_leaf_blocks`` compatibility paths (the device twin re-pads after
+    the packed upload, see :mod:`repro.core.device_cache`).
+    """
+    n = len(lens)
+    rows = np.full((n, B), SENTINEL, np.int32)
+    if len(data):
+        lens64 = lens.astype(np.int64)
+        pos = np.arange(len(data), dtype=np.int64) - np.repeat(
+            offsets[:-1].astype(np.int64), lens64
+        )
+        rows[np.repeat(np.arange(n, dtype=np.int64), lens64), pos] = data
+    return rows
 
 
 @dataclass
@@ -48,7 +71,18 @@ class SubgraphSnapshot:
     _coo_cache: Optional[Tuple[np.ndarray, np.ndarray]] = field(
         default=None, init=False, repr=False, compare=False
     )
-    _blocks_cache: Optional[Tuple[np.ndarray, np.ndarray, np.ndarray]] = field(
+    # Compacted leaf-tile stream (data, leaf_offsets, leaf_lens, leaf_keys):
+    # the ONLY host leaf materialization cached per snapshot.  No SENTINEL
+    # padding — padded [n, B] tiles are derived on demand (device-side after
+    # upload, or host-side for the to_leaf_blocks compatibility path).
+    _blocks_cache: Optional[
+        Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]
+    ] = field(default=None, init=False, repr=False, compare=False)
+    # (leaf row ids, pool generations) captured when the host stream was
+    # materialized — the host twin of the device-tile generation stamp (see
+    # core.device_cache): a live snapshot's refcounts pin its rows, so an
+    # advanced generation under a live stream cache is a stale-data bug.
+    _host_gen_stamp: Optional[Tuple[np.ndarray, np.ndarray]] = field(
         default=None, init=False, repr=False, compare=False
     )
     # Device-resident twins of the host caches (jax.Arrays, uploaded once per
@@ -250,6 +284,7 @@ class SubgraphSnapshot:
         self.dirs = {}
         self._coo_cache = None
         self._blocks_cache = None
+        self._host_gen_stamp = None
         self._dev_blocks_cache = None
         self._dev_coo_cache = None
         self._shard_dev_cache = None
@@ -265,6 +300,16 @@ class SubgraphSnapshot:
                 "serve stale tiles"
             )
 
+    def _dir_leaf_ids(self, dir_lus: np.ndarray):
+        """(leaves_per_dir, concatenated pool row ids) in (lu, leaf) order —
+        the one definition of C-ART leaf ordering every materializer (COO,
+        compacted stream, padded blocks) shares."""
+        leaves_per = np.array(
+            [self.dirs[int(lu)].n_leaves for lu in dir_lus], np.int64
+        )
+        all_ids = np.concatenate([self.dirs[int(lu)].leaf_ids for lu in dir_lus])
+        return leaves_per, all_ids
+
     def _dir_leaf_gather(self, dir_lus: np.ndarray):
         """Gather every C-ART leaf of this snapshot in (lu, leaf) order.
 
@@ -273,10 +318,7 @@ class SubgraphSnapshot:
         cache must never alias recyclable pool memory) and ``lens`` the live
         counts.
         """
-        leaves_per = np.array(
-            [self.dirs[int(lu)].n_leaves for lu in dir_lus], np.int64
-        )
-        all_ids = np.concatenate([self.dirs[int(lu)].leaf_ids for lu in dir_lus])
+        leaves_per, all_ids = self._dir_leaf_ids(dir_lus)
         return leaves_per, self.pool.data[all_ids], self.pool.length[all_ids]
 
     def to_coo_global(self) -> Tuple[np.ndarray, np.ndarray]:
@@ -337,58 +379,109 @@ class SubgraphSnapshot:
             return np.empty(0, np.int64), np.empty(0, np.int32)
         return np.concatenate(srcs), np.concatenate(dsts).astype(np.int32)
 
-    def to_leaf_blocks_global(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-        """Memoized ``(src, rows, length)`` leaf-tile blocks, GLOBAL src ids.
+    def to_leaf_stream_global(
+        self,
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        """Memoized compacted leaf-tile stream, GLOBAL src ids.
 
-        Same contract as :meth:`SnapshotView.to_leaf_blocks` restricted to
-        this subgraph: clustered-index segments chunked to width B, then one
-        row per live C-ART leaf.  Read-only, computed once per snapshot.
+        Returns ``(data, leaf_offsets, leaf_lens, leaf_keys)``: ``data`` is
+        the packed concatenation of every leaf's live values (no SENTINEL
+        padding), leaf ``i`` spanning ``data[leaf_offsets[i] :
+        leaf_offsets[i + 1]]`` with ``leaf_lens[i]`` values belonging to
+        source vertex ``leaf_keys[i]``.  Leaf order matches the padded
+        layout exactly: clustered-index segments chunked to width B (in
+        local-vertex order), then one leaf per live C-ART row (directories
+        in vertex order).  Read-only, computed once per snapshot; the pool
+        rows are copied, never aliased.
         """
         cached = self._blocks_cache
         if cached is None:
             self._check_not_released()
-            cached = self._materialize_leaf_blocks()
+            # stamp BEFORE gathering: if a row were recycled while we read
+            # it (a refcount bug — the exact hazard the stamp exists to
+            # catch), the post-materialization stream_fresh() audit sees the
+            # pre-read generations and trips; stamping after would compare
+            # new-vs-new and mask the corruption
+            self._host_gen_stamp = self._capture_gen_stamp()
+            cached = self._materialize_leaf_stream()
             for a in cached:
                 a.setflags(write=False)
             self._blocks_cache = cached
         return cached
 
-    def _materialize_leaf_blocks(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
-        from .leaf_pool import SENTINEL
-
+    def _materialize_leaf_stream(
+        self,
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
         p, B = self.p, self.pool.B
         base = self.sid * p
-        # clustered index: chunk each segment to width B, fully vectorized
+        # clustered index: the values array IS the packed stream; chunking a
+        # segment to width B only splits the sidecars, not the data
         degs = np.diff(self.ci.offsets).astype(np.int64)
         chunks_per = -(-degs // B)  # ceil; 0 for empty segments
         n_ci = int(chunks_per.sum())
         chunk_base = np.cumsum(chunks_per) - chunks_per
-        ci_src = np.repeat(np.arange(p, dtype=np.int64), chunks_per)
-        ci_rows = np.full((n_ci, B), SENTINEL, np.int32)
-        if len(self.ci.values):
-            lu_of_val = np.repeat(np.arange(p, dtype=np.int64), degs)
-            off_in_lu = np.arange(len(self.ci.values), dtype=np.int64) - np.repeat(
-                self.ci.offsets[:-1].astype(np.int64), degs
-            )
-            ci_rows[chunk_base[lu_of_val] + off_in_lu // B, off_in_lu % B] = self.ci.values
+        ci_keys = np.repeat(np.arange(p, dtype=np.int64), chunks_per)
         c_within = np.arange(n_ci, dtype=np.int64) - np.repeat(chunk_base, chunks_per)
         ci_lens = np.minimum(B, np.repeat(degs, chunks_per) - c_within * B)
         if not self.dirs:
-            return (
-                (ci_src + base).astype(np.int32),
-                ci_rows,
-                ci_lens.astype(np.int32),
-            )
-        # C-ART leaves are already the device shape — gather live pool rows
-        dir_lus = np.fromiter(sorted(self.dirs), np.int64, len(self.dirs))
-        leaves_per, data, lens = self._dir_leaf_gather(dir_lus)
-        keep = lens > 0
-        d_src = np.repeat(dir_lus, leaves_per)[keep]
+            # this branch returns the CI values directly: copy so the frozen
+            # cache never aliases the clustered index's array
+            data = self.ci.values.astype(np.int32, copy=True)
+            lens = ci_lens
+            keys = ci_keys
+        else:
+            dir_lus = np.fromiter(sorted(self.dirs), np.int64, len(self.dirs))
+            leaves_per, all_ids = self._dir_leaf_ids(dir_lus)
+            d_data, d_lens = self.pool.gather_packed(all_ids)
+            keep = d_lens > 0
+            # concatenate copies; no defensive astype copy needed first
+            data = np.concatenate([self.ci.values.astype(np.int32, copy=False), d_data])
+            lens = np.concatenate([ci_lens, d_lens[keep]])
+            keys = np.concatenate([ci_keys, np.repeat(dir_lus, leaves_per)[keep]])
+        offsets = np.zeros(len(lens) + 1, np.int64)
+        np.cumsum(lens, out=offsets[1:])
         return (
-            (np.concatenate([ci_src, d_src]) + base).astype(np.int32),
-            np.concatenate([ci_rows, data[keep].astype(np.int32)]),
-            np.concatenate([ci_lens, lens[keep].astype(np.int64)]).astype(np.int32),
+            data,
+            offsets,
+            lens.astype(np.int32),
+            (keys + base).astype(np.int32),
         )
+
+    def to_leaf_blocks_global(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Padded ``(src, rows, length)`` leaf-tile blocks, GLOBAL src ids.
+
+        Compatibility view over :meth:`to_leaf_stream_global`: the padded
+        ``[n_leaves, B]`` tiles are reconstructed from the compacted stream
+        on every call and NOT cached — host memory only pays for padding
+        while a caller explicitly holds the result.
+        """
+        data, offsets, lens, keys = self.to_leaf_stream_global()
+        return keys, pad_leaf_stream(data, offsets, lens, self.pool.B), lens
+
+    def _capture_gen_stamp(self) -> Tuple[np.ndarray, np.ndarray]:
+        """(leaf row ids, pool generations) backing this snapshot's dirs."""
+        if not self.dirs:
+            e = np.empty(0, np.int64)
+            return e, e
+        ids = np.concatenate([d.leaf_ids for d in self.dirs.values()]).astype(
+            np.int64
+        )
+        return ids, self.pool.generation[ids].copy()
+
+    def stream_fresh(self) -> bool:
+        """True iff the host stream cache still describes live pool rows.
+
+        Mirrors :func:`repro.core.device_cache.tiles_fresh` for the host
+        side: a live snapshot's refcounts pin its rows, so its stamp can
+        never change — a False return means a recycled row went stale under
+        a cached stream.  Snapshots without a stream cache are vacuously
+        fresh.
+        """
+        stamp = self._host_gen_stamp
+        if stamp is None:
+            return True
+        ids, gens = stamp
+        return bool(np.array_equal(self.pool.generation[ids], gens))
 
     def has_host_cache(self) -> bool:
         """True when a host materialization memo is already warm.

@@ -23,6 +23,11 @@ The delta plane removes that tax with three cooperating pieces:
    arrays by taking the predecessor's assembled arrays and replacing only the
    dirty subgraphs' segments — O(d) per-subgraph rebuild + one memmove-style
    pass over the output — instead of touching all S per-subgraph caches.
+   The host leaf layout is the *compacted* stream (:func:`host_stream`):
+   packed values + ``(leaf_offsets, leaf_lens, leaf_keys)`` sidecars, so the
+   splice moves O(dirty-bytes) of live data rather than O(dirty-tiles × B)
+   of SENTINEL padding; the padded ``[n, B]`` twin (:func:`host_blocks`) is
+   derived from it only on explicit request.
    On device the predecessor's concatenated ``jax.Array`` columns are reused
    wholesale: equal-sized dirty segments are patched in place with
    ``jax.lax.dynamic_update_slice``; resized segments fall back to an O(d)-run
@@ -74,6 +79,7 @@ class AssemblyStats:
     reuses: int = 0
     snapshot_touches: int = 0
     spliced_segments: int = 0
+    spliced_bytes: int = 0
     prefetch_uploads: int = 0
     fallback_no_pred: int = 0
     fallback_lineage: int = 0
@@ -85,6 +91,7 @@ class AssemblyStats:
         self.reuses = 0
         self.snapshot_touches = 0
         self.spliced_segments = 0
+        self.spliced_bytes = 0
         self.prefetch_uploads = 0
         self.fallback_no_pred = 0
         self.fallback_lineage = 0
@@ -132,8 +139,8 @@ class ViewAssembly:
 
     __slots__ = (
         "ts", "S", "n_vertices", "B",
-        "coo_offsets", "block_offsets",
-        "host_coo", "host_blocks", "host_csr",
+        "coo_offsets", "block_offsets", "data_offsets",
+        "host_coo", "host_stream", "host_blocks", "host_csr",
         "dev_coo", "dev_csr", "dev_blocks",
         "src_order",
         "sharded",
@@ -147,8 +154,12 @@ class ViewAssembly:
         self.B = B
         self.coo_offsets: Optional[np.ndarray] = None
         self.block_offsets: Optional[np.ndarray] = None
+        # per-subgraph spans inside the compacted stream's packed ``data``
+        # (block_offsets spans the leaf sidecars) — the dirty-bytes splice map
+        self.data_offsets: Optional[np.ndarray] = None
         self.host_coo: Optional[Tuple[np.ndarray, np.ndarray]] = None
-        self.host_blocks = None  # LeafBlockView
+        self.host_stream = None  # CompactLeafStream — the host blocks layout
+        self.host_blocks = None  # LeafBlockView (padded compatibility twin)
         self.host_csr = None  # CSRView
         self.dev_coo: Optional[tuple] = None
         self.dev_csr = None  # DeviceCSRView
@@ -163,8 +174,8 @@ class ViewAssembly:
         return any(
             x is not None
             for x in (
-                self.host_coo, self.host_blocks, self.host_csr,
-                self.dev_coo, self.dev_blocks, self.sharded,
+                self.host_coo, self.host_stream, self.host_blocks,
+                self.host_csr, self.dev_coo, self.dev_blocks, self.sharded,
             )
         )
 
@@ -172,9 +183,17 @@ class ViewAssembly:
         total = 0
         if self.host_coo is not None:
             total += sum(a.nbytes for a in self.host_coo)
+        if self.host_stream is not None:
+            total += self.host_stream.nbytes()
         if self.host_blocks is not None:
             b = self.host_blocks
-            total += b.src.nbytes + b.rows.nbytes + b.length.nbytes
+            total += b.rows.nbytes
+            # a stream-derived padded view shares src/length with the stream
+            s = self.host_stream
+            if s is None or b.src is not s.leaf_keys:
+                total += b.src.nbytes
+            if s is None or b.length is not s.leaf_lens:
+                total += b.length.nbytes
         if self.host_csr is not None:
             total += self.host_csr.offsets.nbytes
             # direct-spliced CSRs own a standalone indices array; when the
@@ -468,62 +487,164 @@ def host_csr(view):
 
 
 # ---------------------------------------------------------------------------
-# Host leaf blocks
+# Host leaf tiles: the compacted stream (primary) + padded compatibility twin
 # ---------------------------------------------------------------------------
+def _host_stream_segs(view, dirty) -> Dict[int, tuple]:
+    """Fetch the dirty subgraphs' compacted streams, freshness-audited.
+
+    Each fetch is counted as a snapshot touch; after materialization the
+    snapshot's pool-row generation stamp is re-verified — a recycled
+    :class:`~repro.core.leaf_pool.LeafPool` row under a live snapshot means
+    the spliced span would be stale, so we refuse (mirrors the device-tile
+    check in :func:`_device_segs`).
+    """
+    segs: Dict[int, tuple] = {}
+    for sid in dirty:
+        snap = view.snaps[sid]
+        _count(snapshot_touches=1)
+        segs[sid] = snap.to_leaf_stream_global()
+        if not snap.stream_fresh():
+            raise RuntimeError(
+                f"subgraph {sid} host stream went stale during splice "
+                "(pool-row generation advanced under a live snapshot)"
+            )
+    return segs
+
+
+def host_stream(view):
+    """Global compacted leaf-tile stream — the host blocks materialization.
+
+    Spliced from the predecessor's packed arrays in O(dirty-bytes): the
+    ``(leaf_keys, leaf_lens)`` sidecars splice over the per-subgraph *leaf*
+    segmentation (``block_offsets``) and the packed ``data`` column over the
+    per-subgraph *value* segmentation (``data_offsets``) — copy+patch when
+    every dirty subgraph's span keeps its size, O(d)-run concat otherwise.
+    ``leaf_offsets`` is an integer cumsum of the spliced lens (no B-wide
+    memcpy anywhere).  Falls back to a full per-subgraph concat exactly
+    like the other layout families.
+    """
+    from .snapshot import CompactLeafStream
+
+    a = _bundle(view)
+    if a.host_stream is not None:
+        return a.host_stream
+    plan = _plan(view)
+    if plan is not None and plan[0].host_stream is not None \
+            and plan[0].block_offsets is not None \
+            and plan[0].data_offsets is not None:
+        pred, dirty = plan
+        if not dirty and pred.S == a.S:
+            a.block_offsets = pred.block_offsets
+            a.data_offsets = pred.data_offsets
+            a.src_order = pred.src_order  # argsort carries over unchanged
+            a.host_stream = pred.host_stream
+            _count(reuses=1)
+            return a.host_stream
+        segs = _host_stream_segs(view, dirty)
+        ps = pred.host_stream
+        side_segs = {s: (t[3], t[2]) for s, t in segs.items()}  # (keys, lens)
+        data_segs = {s: (t[0],) for s, t in segs.items()}
+        (keys, lens), a.block_offsets = _splice_host_cols(
+            (ps.leaf_keys, ps.leaf_lens), pred.block_offsets, side_segs, a.S
+        )
+        (data,), a.data_offsets = _splice_host_cols(
+            (ps.data,), pred.data_offsets, data_segs, a.S
+        )
+        offsets = np.zeros(len(lens) + 1, np.int64)
+        np.cumsum(lens, out=offsets[1:])
+        _freeze((data, offsets, lens, keys))
+        a.host_stream = CompactLeafStream(data, offsets, lens, keys)
+        _count(
+            splices=1,
+            spliced_segments=len(dirty),
+            spliced_bytes=sum(t[0].nbytes for t in segs.values()),
+        )
+        return a.host_stream
+    segs_l = []
+    for s in view.snaps:
+        _count(snapshot_touches=1)
+        segs_l.append(s.to_leaf_stream_global())
+    if not segs_l:
+        data = np.zeros(0, np.int32)
+        lens = np.zeros(0, np.int32)
+        keys = np.zeros(0, np.int32)
+    else:
+        data = np.concatenate([t[0] for t in segs_l])
+        lens = np.concatenate([t[2] for t in segs_l])
+        keys = np.concatenate([t[3] for t in segs_l])
+    offsets = np.zeros(len(lens) + 1, np.int64)
+    np.cumsum(lens, out=offsets[1:])
+    _freeze((data, offsets, lens, keys))
+    a.block_offsets = _segment_offsets([len(t[2]) for t in segs_l])
+    a.data_offsets = _segment_offsets([len(t[0]) for t in segs_l])
+    a.host_stream = CompactLeafStream(data, offsets, lens, keys)
+    _count(full_concats=1)
+    return a.host_stream
+
+
 def host_blocks(view):
-    """Global padded leaf-tile stream — spliced or full-concat assembled."""
+    """Global padded leaf-tile stream — the fixed-B compatibility layout.
+
+    Always assembled *via the compacted stream*: the stream supplies the
+    splice map and the dirty data, so per-subgraph snapshots are touched
+    once (by :func:`host_stream`) no matter how many layouts a view
+    materializes.  With a padded predecessor the dirty subgraphs' spans are
+    re-padded and spliced into its arrays (O(dirty) tile work); without one
+    the whole padded view derives from the stream in a single pass.
+    """
     from .snapshot import LeafBlockView
+    from .subgraph import pad_leaf_stream
 
     a = _bundle(view)
     if a.host_blocks is not None:
         return a.host_blocks
+    stream = host_stream(view)  # fills block_offsets / data_offsets
     plan = _plan(view)
     if plan is not None and plan[0].host_blocks is not None \
             and plan[0].block_offsets is not None:
         pred, dirty = plan
         if not dirty and pred.S == a.S:
-            a.block_offsets = pred.block_offsets
-            a.src_order = pred.src_order  # argsort carries over unchanged
             a.host_blocks = pred.host_blocks
             _count(reuses=1)
             return a.host_blocks
+        # dirty padded segments re-padded from the view's OWN spliced
+        # stream spans — zero additional snapshot touches
         segs = {}
         for sid in dirty:
-            _count(snapshot_touches=1)
-            segs[sid] = view.snaps[sid].to_leaf_blocks_global()
+            lo_b = int(a.block_offsets[sid])
+            hi_b = int(a.block_offsets[sid + 1])
+            lo_d = int(stream.leaf_offsets[lo_b])
+            hi_d = int(stream.leaf_offsets[hi_b])
+            lens = stream.leaf_lens[lo_b:hi_b]
+            rows = pad_leaf_stream(
+                stream.data[lo_d:hi_d],
+                stream.leaf_offsets[lo_b : hi_b + 1] - lo_d,
+                lens,
+                view.B,
+            )
+            segs[sid] = (stream.leaf_keys[lo_b:hi_b], rows, lens)
         pb = pred.host_blocks
-        out, a.block_offsets = _splice_host_cols(
+        out, _ = _splice_host_cols(
             (pb.src, pb.rows, pb.length), pred.block_offsets, segs, a.S
         )
         _freeze(out)
         a.host_blocks = LeafBlockView(*out)
         _count(splices=1, spliced_segments=len(dirty))
         return a.host_blocks
-    segs = []
-    for s in view.snaps:
-        _count(snapshot_touches=1)
-        segs.append(s.to_leaf_blocks_global())
-    if not segs:
-        B = view.B
-        cols = (
-            np.zeros(0, np.int32), np.zeros((0, B), np.int32), np.zeros(0, np.int32)
-        )
-    else:
-        cols = tuple(np.concatenate([p[i] for p in segs]) for i in range(3))
-    _freeze(cols)
-    a.block_offsets = _segment_offsets([len(p[0]) for p in segs])
-    a.host_blocks = LeafBlockView(*cols)
-    _count(full_concats=1)
+    lb = stream.to_padded(view.B)
+    _freeze((lb.src, lb.rows, lb.length))
+    a.host_blocks = lb
     return a.host_blocks
 
 
 def block_src_index(view) -> Tuple[np.ndarray, np.ndarray]:
-    """(int64 src, stable argsort of src) for the view's host leaf blocks,
-    both memoized so repeated batched edge searches are O(1) — no per-call
-    widening copy, no O(n_blocks log n_blocks) re-sort."""
+    """(int64 src, stable argsort of src) for the view's leaf tiles, both
+    memoized so repeated batched edge searches are O(1) — no per-call
+    widening copy, no O(n_leaves log n_leaves) re-sort.  Reads the
+    compacted stream's ``leaf_keys`` natively (no padded materialization)."""
     a = _bundle(view)
     if a.src_order is None:
-        src = host_blocks(view).src.astype(np.int64)
+        src = host_stream(view).leaf_keys.astype(np.int64)
         order = np.argsort(src, kind="stable")
         src.setflags(write=False)
         order.setflags(write=False)
@@ -699,6 +820,7 @@ __all__ = [
     "host_blocks",
     "host_coo",
     "host_csr",
+    "host_stream",
     "max_dirty_frac",
     "splice_enabled",
     "stats",

@@ -61,10 +61,14 @@ def intersect_tiles_view(view, idx_a, idx_b, q_block: int = 64, chunk: int = 128
     """
     if device_cache_enabled():
         rows = view.to_leaf_blocks_device().rows
+        a = rows[jnp.asarray(idx_a, jnp.int32)]
+        b = rows[jnp.asarray(idx_b, jnp.int32)]
     else:
-        rows = jnp.asarray(view.to_leaf_blocks().rows)
-    a = rows[jnp.asarray(idx_a, jnp.int32)]
-    b = rows[jnp.asarray(idx_b, jnp.int32)]
+        # host fallback reads the compacted stream natively and pads only
+        # the requested tile pairs
+        stream = view.to_leaf_stream()
+        a = jnp.asarray(stream.gather_padded(np.asarray(idx_a, np.int64), view.B))
+        b = jnp.asarray(stream.gather_padded(np.asarray(idx_b, np.int64), view.B))
     return intersect_count(a, b, q_block=q_block, chunk=chunk)
 
 

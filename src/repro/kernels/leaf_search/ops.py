@@ -48,10 +48,6 @@ def edge_search_view(view, us, vs, q_block: int = 256) -> np.ndarray:
     vs = np.asarray(vs, np.int64).reshape(-1)
     if us.shape != vs.shape:
         raise ValueError("us and vs must have matching shapes")
-    if device_cache_enabled():
-        dev_rows = view.to_leaf_blocks_device().rows
-    else:
-        dev_rows = jnp.asarray(view.to_leaf_blocks().rows)
     src, order = view_assembler.block_src_index(view)
     lo = np.searchsorted(src[order], us, "left")
     hi = np.searchsorted(src[order], us, "right")
@@ -61,7 +57,12 @@ def edge_search_view(view, us, vs, q_block: int = 256) -> np.ndarray:
         return out
     qidx = np.repeat(np.arange(len(us)), counts)
     flat = np.concatenate([order[l:h] for l, h in zip(lo, hi) if h > l])
-    rows_sel = dev_rows[jnp.asarray(flat, jnp.int32)]
+    if device_cache_enabled():
+        rows_sel = view.to_leaf_blocks_device().rows[jnp.asarray(flat, jnp.int32)]
+    else:
+        # host fallback reads the compacted stream natively: only the
+        # candidate leaves are padded, never the full [n_leaves, B] matrix
+        rows_sel = jnp.asarray(view.to_leaf_stream().gather_padded(flat, view.B))
     found, _ = leaf_search(rows_sel, jnp.asarray(vs[qidx], jnp.int32), q_block=q_block)
     np.logical_or.at(out, qidx, np.asarray(found))
     return out

@@ -14,6 +14,11 @@ def _view_blocks(view):
     """The view's leaf tiles — device-resident unless the cache is disabled
     (REPRO_DISABLE_DEVICE_CACHE); the host LeafBlockView has the same fields.
 
+    Both sides are backed by the compacted host stream: the device tiles
+    are re-padded on device after a packed upload, and the host fallback
+    re-pads via ``view.to_leaf_blocks()`` (the full [n, B] tile matrix is
+    genuinely needed here — the kernel scans every tile).
+
     Both variants come from the delta-plane assembler
     (:mod:`repro.core.view_assembler`): after a commit dirtying d of S
     subgraphs, a fresh view's tile stream is spliced from its predecessor

@@ -14,6 +14,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
+from _parity import make_store, rand_edges
 from repro.core import RapidStore, device_cache
 from repro.core.analytics import (
     bfs_coo, bfs_view, pagerank_coo, pagerank_view, sssp_coo, sssp_view,
@@ -26,18 +27,6 @@ from repro.kernels.leaf_search import edge_search_view
 from repro.kernels.spmm import (
     leaf_scan_reduce, leaf_scan_reduce_view, leaf_spmm, leaf_spmm_view, spmm_view,
 )
-
-
-def rand_edges(n, m, seed=0):
-    rng = np.random.default_rng(seed)
-    e = rng.integers(0, n, size=(m, 2), dtype=np.int64)
-    return e[e[:, 0] != e[:, 1]]
-
-
-def make_store(n=96, m=900, seed=1, p=16, B=16, ht=8):
-    return RapidStore.from_edges(
-        n, rand_edges(n, m, seed), partition_size=p, B=B, high_threshold=ht
-    )
 
 
 @pytest.fixture(autouse=True)

@@ -1,0 +1,105 @@
+"""The cross-layout parity matrix (tests/_parity.py).
+
+Every ``*_view`` entry point — materializers, kernel wrappers, analytics —
+is asserted bitwise against oracles derived from the ``*_uncached``
+per-vertex-loop paths, across:
+
+- **routes**: host (``REPRO_DISABLE_DEVICE_CACHE``), device (default
+  tile-cache paths), sharded (an attached shard plane over every visible
+  device — a real multi-device plane on the CI ``host-mesh-4`` leg);
+- **splice legs**: delta-splice enabled vs ``REPRO_DISABLE_DELTA_SPLICE``
+  (forced full concatenation);
+- **store states**: freshly bulk-loaded, and after a small commit on a warm
+  predecessor chain (the state where splicing actually happens).
+
+This is the consolidated harness the compacted leaf-stream layout is
+verified under: ``to_leaf_stream`` parity is part of
+``assert_view_matches_oracles`` and every kernel case reads tiles that are
+re-padded from the packed stream (device-side or on host).
+"""
+
+import numpy as np
+import pytest
+
+from _parity import (
+    ENTRY_CASES,
+    assert_view_matches_oracles,
+    make_entry_ctx,
+    make_store,
+    rand_edges,
+)
+from repro.core import view_assembler
+
+N, P = 96, 8
+
+
+def _route_store(route):
+    store = make_store(n=N, m=900, seed=3, p=P, B=16, ht=8, undirected=True)
+    if route == "sharded":
+        import jax
+
+        store.attach_shard_plane(n_devices=len(jax.devices()), symmetric=True)
+    return store
+
+
+@pytest.fixture(autouse=True)
+def _fresh_stats():
+    view_assembler.stats.reset()
+    yield
+
+
+@pytest.mark.parametrize("leg", ["splice", "no_splice"])
+@pytest.mark.parametrize("route", ["host", "device", "sharded"])
+def test_view_entry_matrix(route, leg, monkeypatch):
+    if route == "host":
+        monkeypatch.setenv("REPRO_DISABLE_DEVICE_CACHE", "1")
+    if leg == "no_splice":
+        monkeypatch.setenv("REPRO_DISABLE_DELTA_SPLICE", "1")
+    store = _route_store(route)
+
+    # state 1: fresh bulk-loaded store (no predecessor bundle)
+    with store.read_view() as view:
+        assert_view_matches_oracles(view)
+        ctx = make_entry_ctx(view, seed=7)
+        for name, case in ENTRY_CASES.items():
+            assert case(view, ctx), f"{route}/{leg}/fresh: {name} diverged"
+
+    # state 2: small symmetric write on a warm chain -> splice territory
+    e = np.array([[3, 70], [70, 3]], np.int64)
+    store.insert_edges(e)
+    view_assembler.stats.reset()
+    with store.read_view() as view:
+        assert_view_matches_oracles(view)
+        ctx = make_entry_ctx(view, seed=8)
+        for name, case in ENTRY_CASES.items():
+            assert case(view, ctx), f"{route}/{leg}/post-write: {name} diverged"
+        s = view_assembler.stats
+        if leg == "splice":
+            assert s.splices >= 1
+            assert s.full_concats == 0
+            # the compacted-stream splice touched only the dirty subgraphs
+            dirty = {int(u) // P for u in e[:, 0]}
+            assert s.snapshot_touches <= len(dirty) * 6  # <= dirty per layout
+        else:
+            assert s.splices == 0
+            assert s.full_concats >= 1
+
+
+@pytest.mark.parametrize("leg", ["splice", "no_splice"])
+def test_materializer_matrix_across_store_shapes(leg, monkeypatch):
+    """Layout parity over heterogeneous stores: partial last subgraph,
+    B-crossing degrees, pure-CI and CART-heavy mixes."""
+    if leg == "no_splice":
+        monkeypatch.setenv("REPRO_DISABLE_DELTA_SPLICE", "1")
+    for n, m, p, B, ht, seed in [
+        (40, 60, 8, 32, 16, 0),      # sparse, mostly CI
+        (96, 2000, 16, 8, 4, 1),     # dense, CART-heavy, multi-leaf
+        (50, 400, 16, 8, 4, 2),      # partial last subgraph
+    ]:
+        store = make_store(n=n, m=m, seed=seed, p=p, B=B, ht=ht)
+        with store.read_view() as v:
+            assert_view_matches_oracles(v)
+        store.insert_edges(rand_edges(n, 5, seed=seed + 100))
+        store.delete_edges(rand_edges(n, 5, seed=seed + 200))
+        with store.read_view() as v:
+            assert_view_matches_oracles(v)

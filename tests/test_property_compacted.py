@@ -1,0 +1,160 @@
+"""Hypothesis property tests for the compacted leaf-tile stream.
+
+Random write/read/delete interleavings — including vertex deletion (which
+frees C-ART pool rows mid-run) and predecessor-assembly GC mid-chain — must
+keep the compacted-stream views (``to_leaf_stream`` and everything derived
+from it: padded blocks, device tiles) bitwise equal to the padded
+``*_uncached`` oracles, and the blocks-splice touch counters must stay
+O(dirty): a spliced assembly may touch at most the subgraphs the lineage
+says were dirtied since the predecessor view.
+"""
+
+import gc
+import os
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from _parity import (
+    assert_view_matches_oracles,
+    hypothesis_examples as _examples,
+    pack_padded,
+)
+from repro.core import RapidStore, view_assembler
+
+N_VERTICES = 64
+P = 8  # S = 8 subgraphs
+B = 8
+
+
+edge = st.tuples(
+    st.integers(0, N_VERTICES - 1), st.integers(0, N_VERTICES - 1)
+).filter(lambda e: e[0] != e[1])
+
+step = st.one_of(
+    # small/local mixed write (splice territory)
+    st.tuples(st.just("write"), st.lists(edge, min_size=1, max_size=6),
+              st.lists(edge, min_size=0, max_size=4)),
+    # wide write: dirty fraction above the splice threshold
+    st.tuples(st.just("bigwrite"), st.lists(edge, min_size=12, max_size=40)),
+    # vertex delete: frees that vertex's pool rows -> recycling pressure
+    st.tuples(st.just("delvertex"), st.integers(0, N_VERTICES - 1)),
+    # drop the retired predecessor bundle (GC mid-chain)
+    st.tuples(st.just("drop_pred")),
+    st.tuples(st.just("read")),
+)
+
+
+def _check_stream_and_touches(store, view, prev_read_ts):
+    """Stream layouts vs oracles + the O(dirty) touch contract."""
+    view_assembler.stats.reset()
+    stream = view.to_leaf_stream()
+    s = view_assembler.stats
+    if s.splices:
+        # a spliced blocks assembly touches at most the lineage dirty set
+        dirty = store.lineage.dirty_between(prev_read_ts, view.ts)
+        assert dirty is not None  # splice requires a knowable window
+        assert s.snapshot_touches <= max(1, len(dirty)), (
+            f"stream splice touched {s.snapshot_touches} subgraphs for "
+            f"{len(dirty)} dirty"
+        )
+    ob = view.to_leaf_blocks_uncached()
+    odata, ooffsets, olens, okeys = pack_padded(ob)
+    assert np.array_equal(stream.data, odata)
+    assert np.array_equal(stream.leaf_offsets, ooffsets)
+    assert np.array_equal(stream.leaf_lens, olens)
+    assert np.array_equal(stream.leaf_keys, okeys)
+    # host generation stamps are intact on every resolved snapshot
+    assert all(s.stream_fresh() for s in view.snaps)
+
+
+@settings(max_examples=_examples(25), deadline=None)
+@given(steps=st.lists(step, min_size=3, max_size=18))
+def test_compacted_interleavings_bitmatch_padded_oracles(steps):
+    store = RapidStore(N_VERTICES, partition_size=P, B=B, high_threshold=4)
+    oracle = set()
+    deleted = set()
+    prev_read_ts = 0
+    for s in steps:
+        if s[0] == "write":
+            _, ins, dels = s
+            ins = [e for e in ins if e[0] not in deleted and e[1] not in deleted]
+            store.apply(
+                np.array(ins, np.int64) if ins else np.empty((0, 2), np.int64),
+                np.array(dels, np.int64) if dels else np.empty((0, 2), np.int64),
+            )
+            oracle |= {tuple(map(int, e)) for e in ins}
+            oracle -= {tuple(map(int, e)) for e in dels}
+        elif s[0] == "bigwrite":
+            _, ins = s
+            ins = [e for e in ins if e[0] not in deleted and e[1] not in deleted]
+            if ins:
+                store.insert_edges(np.array(ins, np.int64))
+                oracle |= {tuple(map(int, e)) for e in ins}
+        elif s[0] == "delvertex":
+            _, u = s
+            if u in deleted:
+                continue
+            store.delete_vertex(u)
+            deleted.add(u)
+            oracle -= {e for e in oracle if e[0] == u}
+            # directed store: in-edges e(w, u) stay, matching delete_vertex
+        elif s[0] == "drop_pred":
+            store._retired_assembly = None
+            gc.collect()
+        else:  # read
+            with store.read_view() as view:
+                _check_stream_and_touches(store, view, prev_read_ts)
+                assert_view_matches_oracles(view)
+                prev_read_ts = view.ts
+    with store.read_view() as view:
+        _check_stream_and_touches(store, view, prev_read_ts)
+        assert_view_matches_oracles(view)
+    store.check_invariants()
+
+
+@settings(max_examples=_examples(15), deadline=None)
+@given(
+    seed=st.integers(0, 2**16),
+    disable_splice=st.booleans(),
+)
+def test_compacted_stream_equals_padded_under_gc_churn(seed, disable_splice):
+    """Writer-driven GC recycles pool rows between reads; the compacted
+    views must stay bitwise equal to the padded oracles on both splice
+    legs, and recycled rows must never leak into a live stream (generation
+    stamps intact)."""
+    rng = np.random.default_rng(seed)
+    store = RapidStore(N_VERTICES, partition_size=P, B=B, high_threshold=4)
+    old = os.environ.get("REPRO_DISABLE_DELTA_SPLICE")
+    if disable_splice:
+        os.environ["REPRO_DISABLE_DELTA_SPLICE"] = "1"
+    try:
+        for _ in range(6):
+            k = int(rng.integers(1, 12))
+            e = rng.integers(0, N_VERTICES, size=(k, 2), dtype=np.int64)
+            e = e[e[:, 0] != e[:, 1]]
+            if len(e):
+                if rng.random() < 0.7:
+                    store.insert_edges(e)
+                else:
+                    store.delete_edges(e)
+            with store.read_view() as view:
+                stream = view.to_leaf_stream()
+                ob = view.to_leaf_blocks_uncached()
+                odata, ooffsets, olens, okeys = pack_padded(ob)
+                assert np.array_equal(stream.data, odata)
+                assert np.array_equal(stream.leaf_lens, olens)
+                assert np.array_equal(stream.leaf_keys, okeys)
+                assert np.array_equal(stream.leaf_offsets, ooffsets)
+                lb = view.to_leaf_blocks()
+                assert np.array_equal(lb.rows, ob.rows)
+                assert all(s.stream_fresh() for s in view.snaps)
+    finally:
+        if old is None:
+            os.environ.pop("REPRO_DISABLE_DELTA_SPLICE", None)
+        else:
+            os.environ["REPRO_DISABLE_DELTA_SPLICE"] = old
+    store.check_invariants()

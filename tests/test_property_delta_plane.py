@@ -21,6 +21,7 @@ import pytest
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
+from _parity import assert_view_matches_oracles, hypothesis_examples as _examples
 from repro.core import RapidStore, view_assembler
 
 N_VERTICES = 64
@@ -43,32 +44,11 @@ step = st.one_of(
 )
 
 
-def check_view(view):
-    src, dst = view.to_coo()
-    osrc, odst = view.to_coo_uncached()
-    assert np.array_equal(src, osrc)
-    assert np.array_equal(dst, odst)
-    csr = view.to_csr()
-    degs = np.bincount(osrc, minlength=view.n_vertices)
-    off = np.zeros(view.n_vertices + 1, np.int64)
-    np.cumsum(degs, out=off[1:])
-    assert np.array_equal(csr.offsets, off)
-    assert np.array_equal(csr.indices, odst)
-    lb = view.to_leaf_blocks()
-    ob = view.to_leaf_blocks_uncached()
-    assert np.array_equal(lb.src, ob.src)
-    assert np.array_equal(lb.rows, ob.rows)
-    assert np.array_equal(lb.length, ob.length)
-    db = view.to_leaf_blocks_device()
-    assert np.array_equal(np.asarray(db.src), ob.src)
-    assert np.array_equal(np.asarray(db.rows), ob.rows)
-    assert np.array_equal(np.asarray(db.length), ob.length)
-    dsrc, ddst = view.to_coo_device()
-    assert np.array_equal(np.asarray(dsrc), osrc)
-    assert np.array_equal(np.asarray(ddst), odst)
+# every layout — incl. the compacted stream — vs the *_uncached oracles
+check_view = assert_view_matches_oracles
 
 
-@settings(max_examples=25, deadline=None)
+@settings(max_examples=_examples(25), deadline=None)
 @given(steps=st.lists(step, min_size=3, max_size=18))
 def test_random_interleavings_bitmatch_oracles(steps):
     store = RapidStore(N_VERTICES, partition_size=P, B=B, high_threshold=4)
@@ -100,7 +80,7 @@ def test_random_interleavings_bitmatch_oracles(steps):
     store.check_invariants()
 
 
-@settings(max_examples=10, deadline=None)
+@settings(max_examples=_examples(10), deadline=None)
 @given(
     seed=st.integers(0, 2**16),
     frac=st.sampled_from(["0.0", "0.25", "1.0"]),

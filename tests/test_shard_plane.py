@@ -19,6 +19,8 @@ SRC = str(Path(__file__).resolve().parents[1] / "src")
 if SRC not in sys.path:
     sys.path.insert(0, SRC)
 
+from _parity import bits as _bits
+from _parity import rand_edges
 from repro.core import RapidStore
 from repro.core.shard_plane import (
     degree_balanced_placement,
@@ -62,9 +64,7 @@ N, P = 96, 8
 
 
 def _edges(seed=0, m=900):
-    rng = np.random.default_rng(seed)
-    e = rng.integers(0, N, size=(m, 2), dtype=np.int64)
-    return e[e[:, 0] != e[:, 1]]
+    return rand_edges(N, m, seed=seed)
 
 
 def _mk_store(e, plane=False, **plane_kw):
@@ -74,11 +74,6 @@ def _mk_store(e, plane=False, **plane_kw):
     if plane:
         s.attach_shard_plane(n_devices=1, symmetric=True, **plane_kw)
     return s
-
-
-def _bits(a):
-    a = np.asarray(a)
-    return a.view(np.uint32) if a.dtype == np.float32 else a
 
 
 def test_plane_parity_one_device():
