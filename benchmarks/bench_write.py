@@ -1,7 +1,10 @@
 """Paper Fig 8 + Fig 18: write throughput (insert, delete+reinsert update)
-and insertion with growing neighbor size."""
+and insertion with growing neighbor size; plus the decoupled write
+pipeline's group-commit matrix (writers x logical-batch size)."""
 
 from __future__ import annotations
+
+import threading
 
 import numpy as np
 
@@ -10,6 +13,71 @@ from repro.core.baselines import PerEdgeVersionedAdjacency, VecStore
 from repro.graph.generators import update_stream
 
 from .common import dataset, record, store_defaults, timeit
+
+
+def _bench_group_commit(n, edges, quick: bool) -> None:
+    """Group-commit matrix: submitters in {1,2,4,8} x logical batch in
+    {1,64,1024} edges per apply_async, on disjoint-shard streams.
+
+    Baseline: the serial single-edge-transaction path (one execute_write
+    per edge — full clock/lineage/snapshot cost each).  The pipeline rows
+    coalesce queued writes into group commits; the acceptance bar is >=3x
+    the single-edge baseline at batch >= 64, with submitter scaling from
+    deeper queues (larger drained batches), not Python-thread parallelism.
+    """
+    p = store_defaults()["partition_size"]
+    m = 4_000 if quick else 16_000
+    stream = edges[:m]
+
+    def serial_single_edge():
+        s = RapidStore(n, **store_defaults())
+        for e in stream:
+            s.insert_edges(e[None, :])
+        return s
+
+    t_serial = timeit(serial_single_edge, repeat=1)
+    base_meps = m / t_serial / 1e6
+    record("write/single_edge_txn/serial", t_serial / m * 1e6,
+           f"meps={base_meps:.3f}")
+
+    for n_writers in ([1, 4] if quick else [1, 2, 4, 8]):
+        # disjoint-shard streams: writer w owns subgraphs with sid % W == w,
+        # and the pipeline runs W shards, so writer w's whole stream lands
+        # in pipeline shard w — every logical write is single-shard (no
+        # fences) and no two submitters ever queue into the same shard
+        owner = (stream[:, 0] // p) % n_writers
+        streams = [stream[owner == w] for w in range(n_writers)]
+        for bs in ([1, 64] if quick else [1, 64, 1024]):
+            store = RapidStore(n, **store_defaults())
+            store.attach_write_pipeline(n_shards=n_writers)
+
+            def ingest(w):
+                part = streams[w]
+                for i in range(0, len(part), bs):
+                    store.apply_async(part[i : i + bs],
+                                      np.empty((0, 2), np.int64))
+
+            t0 = timeit(lambda: _run_threads(ingest, n_writers, store),
+                        repeat=1)
+            wp = store.write_pipeline
+            meps = m / t0 / 1e6
+            record(
+                f"write/group_commit/w{n_writers}/b{bs}",
+                t0 / m * 1e6,
+                f"meps={meps:.3f} vs_single_edge={meps / base_meps:.1f}x "
+                f"commits={store.stats['commits']} "
+                f"mean_group={wp.stats.writes / max(wp.stats.batches, 1):.1f}",
+            )
+            store.detach_write_pipeline()
+
+
+def _run_threads(fn, n_writers, store):
+    threads = [threading.Thread(target=fn, args=(w,)) for w in range(n_writers)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    store.flush()
 
 
 def run(quick: bool = False) -> None:
@@ -42,6 +110,9 @@ def run(quick: bool = False) -> None:
                       ("vec", insert_vec)):
         t = timeit(fn, repeat=1)
         record(f"write/insert/{label}", t / m * 1e6, f"meps={m / t / 1e6:.3f}")
+
+    # -- decoupled pipeline: group-commit matrix ------------------------------
+    _bench_group_commit(n, edges, quick)
 
     # -- update churn (Fig 8b): delete + re-insert 20% x rounds ----------------
     rounds = 1 if quick else 2

@@ -1,4 +1,10 @@
-"""Threaded writers + readers stress: verify snapshot consistency post-hoc."""
+"""Threaded writers + readers stress: verify snapshot consistency post-hoc.
+
+Two phases: the single-shot path (per-subgraph locks, one commit ts per
+write), then the decoupled write pipeline (sharded queues, group commit,
+commit pipelining) — same replay verification, but group commits share one
+timestamp per drained batch, so the replay key is (commit_ts, submission
+seq) instead of ts alone."""
 import threading
 import numpy as np
 
@@ -82,3 +88,99 @@ store.check_invariants()
 print(f"commits={len(history)} observations={len(observations)} "
       f"max_chain={store.chain_lengths().max()} reclaimed={store.stats['versions_reclaimed']}")
 print("CONCURRENT SMOKE PASSED")
+
+
+# ---------------------------------------------------------------------------
+# Phase 2: decoupled write pipeline — async submitters, group commits.
+# A drained batch commits at ONE timestamp, and within a timestamp the
+# pipeline's coalesced net write equals the sequential fold in submission
+# order, so replay sorts by (commit_ts, ticket.seq).  Whole-batch no-ops
+# (ts == 0) changed nothing at their serialization point and are skipped.
+# ---------------------------------------------------------------------------
+pstore = RapidStore(n, partition_size=16, B=32, tracer_k=16)
+wp = pstore.attach_write_pipeline(n_shards=4, max_batch=64)
+
+phistory = []  # (ticket, op, edges)
+pobservations = []
+perrors = []
+
+
+def submitter(seed):
+    # even seeds write within one random subgraph per batch (single-shard
+    # queue path: coalescing group commits); odd seeds span the full id
+    # range (multi-shard fence path)
+    r = np.random.default_rng(seed)
+    try:
+        for i in range(60):
+            if seed % 2 == 0:
+                sid = int(r.integers(0, n // 16))
+                u = r.integers(sid * 16, (sid + 1) * 16, size=(8, 1))
+                v = r.integers(0, n, size=(8, 1))
+                edges = np.concatenate([u, v], axis=1).astype(np.int64)
+            else:
+                edges = r.integers(0, n, size=(8, 2), dtype=np.int64)
+            edges = edges[edges[:, 0] != edges[:, 1]]
+            if len(edges) == 0:
+                continue
+            empty = np.empty((0, 2), np.int64)
+            if r.random() < 0.7:
+                ins, dels, op = edges, empty, "+"
+            else:
+                ins, dels, op = empty, edges, "-"
+            tk = pstore.apply_async(ins, dels)
+            with history_lock:
+                phistory.append((tk, op, edges.copy()))
+    except Exception as e:  # pragma: no cover
+        perrors.append(e)
+
+
+def preader(seed):
+    try:
+        for i in range(30):
+            with pstore.read_view() as view:
+                pobservations.append((view.ts, frozenset(view.edge_set())))
+    except Exception as e:  # pragma: no cover
+        perrors.append(e)
+
+
+threads = [threading.Thread(target=submitter, args=(i,)) for i in range(4)] + [
+    threading.Thread(target=preader, args=(100 + i,)) for i in range(6)
+]
+for t in threads:
+    t.start()
+for t in threads:
+    t.join()
+pstore.flush()
+
+assert not perrors, perrors
+
+resolved = []
+for tk, op, edges in phistory:
+    ts = tk.wait(timeout=30)
+    if ts > 0:
+        resolved.append((ts, tk.seq, op, edges))
+resolved.sort(key=lambda h: (h[0], h[1]))
+
+for obs_ts, obs_edges in pobservations:
+    state = set()
+    for t, _, op, edges in resolved:
+        if t > obs_ts:
+            break
+        for u, v in edges:
+            if op == "+":
+                state.add((int(u), int(v)))
+            else:
+                state.discard((int(u), int(v)))
+    assert state == set(obs_edges), (
+        f"pipelined reader at ts={obs_ts} inconsistent: "
+        f"{len(state)} vs {len(obs_edges)} diff={set(obs_edges) ^ state}"
+    )
+
+pstore.check_invariants()
+ws = wp.stats
+pstore.detach_write_pipeline()
+print(f"pipeline: writes={ws.writes} batches={ws.batches} fences={ws.fences} "
+      f"commits={pstore.stats['commits']} "
+      f"group_commits={pstore.stats.get('group_commits', 0)} "
+      f"observations={len(pobservations)}")
+print("PIPELINE SMOKE PASSED")

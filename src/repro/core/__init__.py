@@ -1,18 +1,23 @@
 """RapidStore core: subgraph-centric MVCC dynamic graph storage."""
 
-from .clock import LogicalClock
+from .clock import ClockStallError, LogicalClock
 from .device_cache import DeviceCSRView, DeviceLeafBlockView
 from .leaf_pool import LeafPool, SENTINEL
 from .reader_tracer import ReaderTracer, FREE_TS
 from .snapshot import CompactLeafStream, CSRView, LeafBlockView, SnapshotView
 from .shard_plane import ShardPlane, ShardedViewAssembly
-from .store import RapidStore, ReadHandle
+from .store import RapidStore, ReadHandle, StoreStats
 from .subgraph import SubgraphSnapshot, build_subgraph
 from .version_chain import CommitLineage, VersionChain
 from .view_assembler import ViewAssembly
+from .write_pipeline import WritePipeline, WriteTicket
 
 __all__ = [
+    "ClockStallError",
     "CommitLineage",
+    "StoreStats",
+    "WritePipeline",
+    "WriteTicket",
     "ShardPlane",
     "ShardedViewAssembly",
     "ViewAssembly",

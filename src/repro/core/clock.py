@@ -12,23 +12,66 @@ Two global timestamps coordinate queries:
 
 The initial graph ``G_0`` carries version 0, so a reader that starts before
 any write simply pins ``t = 0``.
+
+Group-commit extensions (write pipeline, see core.write_pipeline):
+
+- :meth:`LogicalClock.reserve` draws ``k`` *consecutive* commit timestamps
+  in one atomic step, so a committer that has several prepared batches in
+  hand pays the clock lock once for all of them;
+- :meth:`LogicalClock.publish_range` advances ``t_r`` across the whole
+  reserved run in ONE conditional increment (readers observe the run
+  atomically) — the batched publish;
+- a configurable *stall deadline*: a writer that dies between
+  ``next_commit_timestamp()`` and ``publish()`` would otherwise leave every
+  later committer spinning in the publish poll forever.  After
+  ``stall_timeout`` seconds the poll raises :class:`ClockStallError` naming
+  the missing timestamp instead of hanging the process; ``stall_events`` /
+  ``max_stall_wait`` record how often publishes had to wait at all.
 """
 
 from __future__ import annotations
 
 import threading
+import time
+
+
+class ClockStallError(RuntimeError):
+    """Publish poll exceeded the stall deadline: a predecessor never published.
+
+    Carries the first missing timestamp (``t_r + 1`` at raise time) — the
+    commit whose writer most likely died between ``next_commit_timestamp()``
+    and ``publish()`` — so the operator knows exactly which commit to hunt.
+    """
+
+    def __init__(self, waiting_for: int, missing: int, t_r: int, waited: float):
+        self.waiting_for = waiting_for
+        self.missing = missing
+        self.t_r = t_r
+        super().__init__(
+            f"publish({waiting_for}) stalled for {waited:.1f}s: timestamp "
+            f"{missing} was reserved but never published (t_r={t_r}); its "
+            f"writer likely died between next_commit_timestamp() and publish()"
+        )
 
 
 class LogicalClock:
     """Paper-faithful (t_w, t_r) pair with atomic advance semantics."""
 
-    __slots__ = ("_tw", "_tr", "_lock", "_tr_cond")
+    __slots__ = (
+        "_tw", "_tr", "_lock", "_tr_cond", "stall_timeout",
+        "stall_events", "max_stall_wait",
+    )
 
-    def __init__(self) -> None:
+    def __init__(self, stall_timeout: float = 60.0) -> None:
         self._tw = 0
         self._tr = 0
         self._lock = threading.Lock()
         self._tr_cond = threading.Condition(self._lock)
+        #: seconds a publish may poll for its predecessor before raising
+        #: ClockStallError; None disables the deadline (legacy hang-forever).
+        self.stall_timeout = stall_timeout
+        self.stall_events = 0  # publishes that had to wait at least once
+        self.max_stall_wait = 0.0  # longest successful publish wait (s)
 
     # -- write side ---------------------------------------------------------
     def next_commit_timestamp(self) -> int:
@@ -37,18 +80,71 @@ class LogicalClock:
             self._tw += 1
             return self._tw
 
+    def reserve(self, k: int) -> int:
+        """Atomically reserve ``k`` consecutive commit timestamps.
+
+        Returns the FIRST of the run ``[first, first + k)``.  The caller
+        must eventually publish every reserved timestamp (publish_range), in
+        order, or later committers will stall against the gap.
+        """
+        if k <= 0:
+            raise ValueError(f"reserve needs k >= 1, got {k}")
+        with self._lock:
+            first = self._tw + 1
+            self._tw += k
+            return first
+
     def publish(self, commit_ts: int) -> None:
         """Advance ``t_r`` to ``commit_ts`` once every earlier commit published.
 
         Implements the paper's *poll + conditional increment*: a writer with
         commit timestamp ``t`` may only move ``t_r`` from ``t - 1`` to ``t``.
-        Out-of-order committers wait (bounded, in practice instantaneous)
-        until their predecessor published.
+        Out-of-order committers wait until their predecessor published, or
+        raise :class:`ClockStallError` after ``stall_timeout`` seconds.
         """
+        self.publish_range(commit_ts, commit_ts)
+
+    def publish_range(self, first: int, last: int) -> None:
+        """Batched publish: advance ``t_r`` from ``first - 1`` to ``last``.
+
+        One conditional increment covers the whole contiguous run a batching
+        committer reserved — readers never observe a partially-published
+        run.  Semantically identical to publishing each timestamp in
+        ``[first, last]`` in order, minus the per-timestamp lock traffic.
+        """
+        if last < first:
+            raise ValueError(f"empty publish range [{first}, {last}]")
+        deadline = None
+        waited = False
         with self._tr_cond:
-            while self._tr != commit_ts - 1:
-                self._tr_cond.wait(timeout=1.0)
-            self._tr = commit_ts
+            while self._tr != first - 1:
+                if self._tr >= first:  # double publish — protocol bug
+                    raise RuntimeError(
+                        f"publish_range([{first}, {last}]) but t_r={self._tr} "
+                        f"already covers {first}"
+                    )
+                now = time.monotonic()
+                if deadline is None:
+                    waited = True
+                    self.stall_events += 1
+                    start = now
+                    deadline = (
+                        now + self.stall_timeout
+                        if self.stall_timeout is not None else float("inf")
+                    )
+                if now >= deadline:
+                    raise ClockStallError(
+                        waiting_for=first,
+                        missing=self._tr + 1,
+                        t_r=self._tr,
+                        waited=now - start,
+                    )
+                self._tr_cond.wait(timeout=min(1.0, max(deadline - now, 0.001)))
+            if waited:
+                self.max_stall_wait = max(
+                    self.max_stall_wait, time.monotonic() - start
+                )
+            self._tr = last
             self._tr_cond.notify_all()
 
     # -- read side ----------------------------------------------------------

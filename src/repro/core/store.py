@@ -13,6 +13,11 @@ Composition:
 Readers never lock: ``read_view()`` registers in the tracer, resolves one
 snapshot per subgraph at the pinned timestamp, and hands back an immutable
 :class:`~repro.core.snapshot.SnapshotView`.
+
+Writes run single-shot (``insert_edges`` = one route -> prepare -> commit
+transaction, :mod:`repro.core.txn`) or, after ``attach_write_pipeline()``,
+through the decoupled group-commit pipeline (``apply_async``/``flush``,
+:mod:`repro.core.write_pipeline`).
 """
 
 from __future__ import annotations
@@ -34,6 +39,27 @@ from .version_chain import CommitLineage, VersionChain
 from . import txn as _txn
 
 
+class StoreStats(dict):
+    """Thread-safe counter dict: all increments go through :meth:`add`.
+
+    A plain ``stats[key] += 1`` is a read-modify-write of two bytecodes —
+    two writers with disjoint subgraph sets hold no common lock, so
+    concurrent increments could interleave and lose updates.  ``add`` takes
+    one internal lock per increment; reads stay plain dict reads (benign:
+    single monotone int).
+    """
+
+    def __init__(self, *args, **kwargs) -> None:
+        super().__init__(*args, **kwargs)
+        self._lock = threading.Lock()
+
+    def add(self, key: str, delta: int = 1) -> int:
+        with self._lock:
+            value = self.get(key, 0) + delta
+            self[key] = value
+            return value
+
+
 @dataclass
 class ReadHandle:
     slot: int
@@ -52,6 +78,7 @@ class RapidStore:
         high_threshold: Optional[int] = None,
         tracer_k: int = 32,
         initial_pool_rows: int = 64,
+        clock_stall_timeout: float = 60.0,
     ) -> None:
         if n_vertices <= 0:
             raise ValueError("need at least one vertex")
@@ -61,7 +88,7 @@ class RapidStore:
         self.n_vertices = int(n_vertices)
         self.n_subgraphs = -(-self.n_vertices // self.p)
         self.pool = LeafPool(B=self.B, initial_capacity=initial_pool_rows)
-        self.clock = LogicalClock()
+        self.clock = LogicalClock(stall_timeout=clock_stall_timeout)
         self.tracer = ReaderTracer(k=tracer_k)
         self.chains: List[VersionChain] = []
         for sid in range(self.n_subgraphs):
@@ -74,7 +101,7 @@ class RapidStore:
         # vertex lifecycle (paper §6.5): reusable-id queue + atomic grow
         self._vid_lock = threading.Lock()
         self._free_vids: List[int] = []
-        self.stats: Dict[str, int] = {"commits": 0, "versions_reclaimed": 0}
+        self.stats: Dict[str, int] = StoreStats(commits=0, versions_reclaimed=0)
         # delta plane: commit lineage + the most recent retired view's
         # assembly bundle (strong here, weak in views — see begin_read)
         self.lineage = CommitLineage()
@@ -82,6 +109,8 @@ class RapidStore:
         self._retire_lock = threading.Lock()
         # mesh shard plane (attach_shard_plane); None = single-device paths
         self.shard_plane = None
+        # decoupled write pipeline (attach_write_pipeline); None = single-shot
+        self.write_pipeline = None
 
     # -- construction -------------------------------------------------------------
     @classmethod
@@ -105,16 +134,19 @@ class RapidStore:
         store.n_subgraphs = -(-store.n_vertices // store.p)
         est_rows = max(64, len(edges) // max(1, store.B) * 2)
         store.pool = LeafPool(B=store.B, initial_capacity=est_rows)
-        store.clock = LogicalClock()
+        store.clock = LogicalClock(
+            stall_timeout=kw.get("clock_stall_timeout", 60.0)
+        )
         store.tracer = ReaderTracer(k=int(kw.get("tracer_k", 32)))
         store.locks = [threading.Lock() for _ in range(store.n_subgraphs)]
         store._vid_lock = threading.Lock()
         store._free_vids = []
-        store.stats = {"commits": 0, "versions_reclaimed": 0}
+        store.stats = StoreStats(commits=0, versions_reclaimed=0)
         store.lineage = CommitLineage()
         store._retired_assembly = None
         store._retire_lock = threading.Lock()
         store.shard_plane = None
+        store.write_pipeline = None
 
         store.chains = []
         if len(edges):
@@ -150,22 +182,59 @@ class RapidStore:
         return store
 
     # -- write API -------------------------------------------------------------
+    def _write(self, ins, dels, vset=None) -> int:
+        """One logical write: single-shot txn, or routed through the pipeline.
+
+        With no pipeline attached this IS ``txn.execute_write`` (route ->
+        lock -> prepare -> commit -> reclaim).  With one attached, the
+        write is submitted to its shard queue and waited on — the same
+        logical write as a group commit of a batch of one (plus whatever
+        the scheduler coalesced alongside it).
+        """
+        wp = self.write_pipeline
+        if wp is not None:
+            return wp.submit(ins, dels, vset).wait()
+        return _txn.execute_write(self, ins=ins, dels=dels, vset=vset)
+
     def insert_edges(self, edges: np.ndarray) -> int:
         """Insert a batch of edges in ONE write transaction. Returns commit ts."""
         edges = np.atleast_2d(np.asarray(edges))
-        return _txn.execute_write(self, ins=edges, dels=np.empty((0, 2), np.int64))
+        return self._write(ins=edges, dels=np.empty((0, 2), np.int64))
 
     def delete_edges(self, edges: np.ndarray) -> int:
         edges = np.atleast_2d(np.asarray(edges))
-        return _txn.execute_write(self, ins=np.empty((0, 2), np.int64), dels=edges)
+        return self._write(ins=np.empty((0, 2), np.int64), dels=edges)
 
     def apply(self, ins: np.ndarray, dels: np.ndarray) -> int:
         """Mixed insert+delete transaction."""
-        return _txn.execute_write(
-            self,
+        return self._write(
             ins=np.atleast_2d(np.asarray(ins)) if len(ins) else np.empty((0, 2), np.int64),
             dels=np.atleast_2d(np.asarray(dels)) if len(dels) else np.empty((0, 2), np.int64),
         )
+
+    def apply_async(self, ins: np.ndarray, dels: np.ndarray, vset=None):
+        """Submit a logical write WITHOUT waiting for its commit.
+
+        Returns a :class:`~repro.core.write_pipeline.WriteTicket`; the write
+        becomes visible, atomically with the rest of its group-commit batch,
+        at ``ticket.wait()``'s timestamp.  Attaches a default write pipeline
+        on first use if none is attached.  Validation still runs on this
+        thread, so bad input raises here, not in the worker.
+        """
+        if self.write_pipeline is None:
+            self.attach_write_pipeline()
+        ins = np.atleast_2d(np.asarray(ins)) if len(ins) else np.empty((0, 2), np.int64)
+        dels = np.atleast_2d(np.asarray(dels)) if len(dels) else np.empty((0, 2), np.int64)
+        return self.write_pipeline.submit(ins, dels, vset)
+
+    def flush(self) -> None:
+        """Barrier: wait until every submitted async write is published.
+
+        A no-op without a pipeline (single-shot writes are synchronous).
+        """
+        wp = self.write_pipeline
+        if wp is not None:
+            wp.flush()
 
     def insert_edge(self, u: int, v: int) -> int:
         return self.insert_edges(np.array([[u, v]], np.int64))
@@ -191,8 +260,7 @@ class RapidStore:
                     self.chains.append(VersionChain(sid, empty))
                     self.locks.append(threading.Lock())
                     self.n_subgraphs += 1
-        _txn.execute_write(
-            self,
+        self._write(
             ins=np.empty((0, 2), np.int64),
             dels=np.empty((0, 2), np.int64),
             vset={vid: True},
@@ -205,12 +273,14 @@ class RapidStore:
         In-edges e(w, u) must be deleted by the caller if tracked (directed
         store semantics; undirected graphs store both directions anyway).
         """
+        # the incident-edge scan must see every earlier async write to u
+        self.flush()
         with self.read_view() as view:
             nbrs = view.scan(u).copy()
         dels = np.stack([np.full(len(nbrs), u, np.int64), nbrs.astype(np.int64)], 1) \
             if len(nbrs) else np.empty((0, 2), np.int64)
-        ts = _txn.execute_write(
-            self, ins=np.empty((0, 2), np.int64), dels=dels, vset={u: False}
+        ts = self._write(
+            ins=np.empty((0, 2), np.int64), dels=dels, vset={u: False}
         )
         with self._vid_lock:
             self._free_vids.append(int(u))
@@ -296,6 +366,36 @@ class RapidStore:
         )
         self.shard_plane = plane
         return plane
+
+    # -- decoupled write pipeline -----------------------------------------------
+    def attach_write_pipeline(self, n_shards: int = 4, max_batch: int = 1024):
+        """Attach a :class:`~repro.core.write_pipeline.WritePipeline`.
+
+        Subsequent writes — synchronous ``insert_edges``/``delete_edges``/
+        ``apply`` and async ``apply_async`` — route through per-shard
+        writer queues with group commit and commit pipelining (shard of a
+        subgraph = ``sid % n_shards``).  While attached, do NOT call
+        ``txn.execute_write`` directly: the pipeline replaces the
+        per-subgraph locks with exclusive shard ownership.
+        """
+        from .write_pipeline import WritePipeline
+
+        if self.write_pipeline is not None:
+            raise RuntimeError("a write pipeline is already attached")
+        self.write_pipeline = WritePipeline(
+            self, n_shards=n_shards, max_batch=max_batch
+        )
+        return self.write_pipeline
+
+    def detach_write_pipeline(self) -> None:
+        """Flush, stop the pipeline threads, restore single-shot writes."""
+        wp = self.write_pipeline
+        if wp is None:
+            return
+        try:
+            wp.stop()
+        finally:
+            self.write_pipeline = None
 
     def detach_shard_plane(self) -> None:
         """Drop the plane; new views take the single-device paths again.

@@ -31,32 +31,53 @@ class CommitLineage:
     already queryable — :meth:`dirty_between` can therefore answer exactly
     for any window bounded by published timestamps.
 
+    A *group commit* (core.write_pipeline) coalesces many queued logical
+    writes into one commit: it appends ONE record whose dirty set is the
+    union over the batch and whose ``n_writes`` counts the coalesced logical
+    writes.  Readers consume group records exactly like single-write
+    records — :meth:`dirty_between` is unchanged, so the delta-plane splice
+    sees a group commit as an ordinary lineage entry; ``n_writes`` exists
+    for diagnostics and amortization accounting (:meth:`writes_between`,
+    :attr:`total_writes`).
+
     The log is bounded at ``max_records``; trimming advances ``_base_ts``
     (every commit with ``ts > _base_ts`` is still recorded).  A query whose
     window reaches at or below the trimmed region returns ``None`` —
     "unknown", which the view assembler treats as a full-concat fallback.
     """
 
-    __slots__ = ("_lock", "_ts", "_sids", "_base_ts", "max_records")
+    __slots__ = (
+        "_lock", "_ts", "_sids", "_counts", "_base_ts", "max_records",
+        "total_writes",
+    )
 
     def __init__(self, max_records: int = 4096) -> None:
         self._lock = threading.Lock()
         self._ts: List[int] = []
         self._sids: List[FrozenSet[int]] = []
+        self._counts: List[int] = []  # logical writes coalesced per record
         self._base_ts = 0  # every commit with ts > _base_ts is recorded
         self.max_records = int(max_records)
+        self.total_writes = 0  # logical writes ever recorded (survives trim)
 
-    def record(self, ts: int, sids: Iterable[int]) -> None:
-        """Log one commit.  Called by the writer before publishing ``ts``."""
+    def record(self, ts: int, sids: Iterable[int], n_writes: int = 1) -> None:
+        """Log one commit.  Called by the writer before publishing ``ts``.
+
+        ``n_writes`` is the number of logical writes this commit coalesced
+        (1 for single-shot transactions, the batch size for group commits).
+        """
         dirty = frozenset(int(s) for s in sids)
         with self._lock:
             i = bisect.bisect_right(self._ts, ts)
             self._ts.insert(i, int(ts))
             self._sids.insert(i, dirty)
+            self._counts.insert(i, int(n_writes))
+            self.total_writes += int(n_writes)
             while len(self._ts) > self.max_records:
                 self._base_ts = self._ts[0]
                 del self._ts[0]
                 del self._sids[0]
+                del self._counts[0]
 
     def dirty_between(self, a: int, b: int) -> Optional[FrozenSet[int]]:
         """Union of dirty sets for commits in ``(min(a,b), max(a,b)]``.
@@ -78,6 +99,23 @@ class CommitLineage:
             for k in range(i, j):
                 out |= self._sids[k]
         return frozenset(out)
+
+    def writes_between(self, a: int, b: int) -> Optional[int]:
+        """Logical writes coalesced into commits in ``(min(a,b), max(a,b)]``.
+
+        The group-commit amortization counter: ``writes_between / records``
+        over a window is the mean batch size.  ``None`` when the window
+        reaches into the trimmed region (mirrors :meth:`dirty_between`).
+        """
+        lo, hi = (a, b) if a <= b else (b, a)
+        if lo == hi:
+            return 0
+        with self._lock:
+            if lo < self._base_ts:
+                return None
+            i = bisect.bisect_right(self._ts, lo)
+            j = bisect.bisect_right(self._ts, hi)
+            return sum(self._counts[i:j])
 
     def __len__(self) -> int:
         return len(self._ts)

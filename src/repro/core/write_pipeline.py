@@ -1,0 +1,407 @@
+"""Decoupled write pipeline: sharded writer queues + group commit + commit
+pipelining (paper's decoupled read/write management, ROADMAP item 1).
+
+The single-shot path (:func:`repro.core.txn.execute_write`) pays the full
+commit protocol — clock increment, lineage record, per-subgraph
+copy-on-write, publish poll — once per logical write.  Under a
+millions-of-users ingest stream that serialized cost is the first
+bottleneck.  This module decouples *submission* from *commit*:
+
+- **Sharded writer queues.**  Subgraph ``sid`` is owned by shard
+  ``sid % n_shards``; each shard has a FIFO queue drained by its own worker
+  thread.  ``submit()`` routes (validates + partitions, on the caller
+  thread, so bad input still raises synchronously) and enqueues; writes
+  whose subgraphs all live in one shard never contend with other shards.
+  A write spanning shards becomes a *fence*: it is enqueued to every
+  touched queue under the pipeline's enqueue lock (one consistent order,
+  no deadlock), and the last worker to reach it executes it while the
+  others are parked — preserving per-subgraph FIFO order across shards.
+
+- **Group commit.**  A worker drains its queue (up to ``max_batch``
+  logical writes) and coalesces the run into ONE net write
+  (:func:`repro.core.txn.coalesce`: per edge the last op wins, which by
+  construction yields exactly the serial-application state), builds ONE
+  copy-on-write snapshot per touched subgraph, and hands the prepared
+  batch to the committer.  The committer drains every prepared batch
+  available, reserves that many *consecutive* commit timestamps in one
+  clock operation, links + records ONE
+  :class:`~repro.core.version_chain.CommitLineage` entry per batch
+  (carrying ``n_writes``), and publishes the whole run with ONE
+  conditional increment (``clock.publish_range``) — clock, lineage, and
+  snapshot overhead are all amortized across the batch.
+
+- **Commit pipelining.**  After handing a prepared batch off, a worker
+  immediately begins preparing its next batch *on top of the
+  prepared-but-not-yet-linked snapshots* (the pipeline's pending heads),
+  so the prepare of batch N+1 overlaps the commit/reclaim of batch N.
+  Exclusive shard ownership replaces the per-subgraph locks: while a
+  pipeline is attached, every write MUST route through it
+  (``RapidStore.insert_edges``/``apply``/``apply_async`` all do); calling
+  ``txn.execute_write`` directly against a pipelined store is unsupported.
+
+Visibility contract (group commit)
+----------------------------------
+Every logical write in a drained batch becomes visible at ONE commit
+timestamp, atomically: a reader either observes the entire batch or none
+of it (readers pin ``t_r``, which ``publish_range`` only moves across
+fully-linked runs).  Writes on the same shard — and any writes touching a
+common subgraph, which the fence forces into every relevant queue — commit
+in submission order.  ``WriteTicket.wait()`` returns the batch's shared
+commit timestamp (0 when the write's whole batch was a no-op);
+``flush()`` is a full barrier: when it returns, every previously submitted
+write has been committed AND published (or the pipeline's failure is
+re-raised).  The one observable difference from the serial path: a
+logical write that is individually a no-op reports its batch's timestamp
+rather than 0 when other writes in the batch did commit.
+"""
+
+from __future__ import annotations
+
+import threading
+from collections import deque
+from typing import Dict, List, Optional
+
+import numpy as np
+
+from . import txn as _txn
+
+
+class WriteTicket:
+    """Handle for one submitted logical write; resolves at publish time."""
+
+    __slots__ = ("seq", "_event", "_ts", "_error")
+
+    def __init__(self, seq: int) -> None:
+        self.seq = seq  # global submission order (per-store monotone)
+        self._event = threading.Event()
+        self._ts: Optional[int] = None
+        self._error: Optional[BaseException] = None
+
+    def done(self) -> bool:
+        return self._event.is_set()
+
+    def wait(self, timeout: Optional[float] = None) -> int:
+        """Block until the write's batch is published; return its commit ts.
+
+        Returns 0 when the batch was a no-op.  Re-raises the worker-side
+        exception if the batch failed.
+        """
+        if not self._event.wait(timeout):
+            raise TimeoutError(f"write ticket seq={self.seq} not done")
+        if self._error is not None:
+            raise self._error
+        return self._ts  # type: ignore[return-value]
+
+
+class _ShardQueue:
+    __slots__ = ("items", "cond")
+
+    def __init__(self) -> None:
+        self.items: deque = deque()
+        self.cond = threading.Condition()
+
+
+class _Fence:
+    """A multi-shard logical write: a barrier entry in every touched queue."""
+
+    __slots__ = ("rw", "ticket", "shards", "lock", "arrived", "done")
+
+    def __init__(self, rw, ticket, shards) -> None:
+        self.rw = rw
+        self.ticket = ticket
+        self.shards = shards
+        self.lock = threading.Lock()
+        self.arrived = 0
+        self.done = threading.Event()
+
+
+class _PreparedBatch:
+    """Output of a worker's prepare phase, awaiting the committer."""
+
+    __slots__ = ("new_snaps", "tickets", "n_writes")
+
+    def __init__(self, new_snaps, tickets, n_writes) -> None:
+        self.new_snaps = new_snaps
+        self.tickets = tickets
+        self.n_writes = n_writes
+
+
+class PipelineStats:
+    """Pipeline-side counters (store-wide counters live in ``store.stats``)."""
+
+    __slots__ = ("batches", "writes", "fences", "noop_batches", "max_batch",
+                 "publish_runs", "max_publish_run")
+
+    def __init__(self) -> None:
+        self.batches = 0        # group commits handed to the committer
+        self.writes = 0         # logical writes drained into batches
+        self.fences = 0         # multi-shard writes executed
+        self.noop_batches = 0   # drained runs that netted to nothing
+        self.max_batch = 0      # largest coalesced run
+        self.publish_runs = 0   # committer publish_range calls
+        self.max_publish_run = 0  # most batches published in one range
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        return (
+            f"PipelineStats(batches={self.batches}, writes={self.writes}, "
+            f"fences={self.fences}, max_batch={self.max_batch}, "
+            f"publish_runs={self.publish_runs})"
+        )
+
+
+class WritePipeline:
+    """Per-shard writer queues + group-commit scheduler for one store.
+
+    Construct via :meth:`repro.core.store.RapidStore.attach_write_pipeline`
+    (mirrors ``attach_shard_plane``); detach with
+    ``detach_write_pipeline()``, which flushes and joins the threads.
+    """
+
+    def __init__(self, store, n_shards: int = 4, max_batch: int = 1024) -> None:
+        if n_shards <= 0:
+            raise ValueError(f"need n_shards >= 1, got {n_shards}")
+        self.store = store
+        self.n_shards = int(n_shards)
+        self.max_batch = int(max_batch)
+        self.stats = PipelineStats()
+        self._queues = [_ShardQueue() for _ in range(self.n_shards)]
+        # prepared-but-not-yet-linked chain heads; only a sid's owning
+        # worker (or a fence executor while the owners are parked) touches
+        # its entry, so plain dict ops under the GIL suffice
+        self._heads: Dict[int, object] = {}
+        self._prepared: deque = deque()
+        self._prep_cond = threading.Condition()
+        self._enqueue_lock = threading.Lock()  # consistent fence order
+        self._seq = 0
+        self._pending = 0
+        self._pending_cond = threading.Condition()
+        self._paused = threading.Event()
+        self._stop = False
+        self._fatal: Optional[BaseException] = None
+        self._threads: List[threading.Thread] = []
+        for shard in range(self.n_shards):
+            t = threading.Thread(
+                target=self._worker, args=(shard,),
+                name=f"rapidstore-writer-{shard}", daemon=True,
+            )
+            self._threads.append(t)
+        self._committer = threading.Thread(
+            target=self._commit_loop, name="rapidstore-committer", daemon=True
+        )
+        for t in self._threads:
+            t.start()
+        self._committer.start()
+
+    # -- submission ---------------------------------------------------------
+    def submit(
+        self,
+        ins: np.ndarray,
+        dels: np.ndarray,
+        vset: Optional[Dict[int, bool]] = None,
+    ) -> WriteTicket:
+        """Route + enqueue one logical write; returns its ticket.
+
+        Validation runs here, on the caller thread — out-of-range ids raise
+        ``ValueError`` synchronously, exactly like the single-shot path.
+        """
+        if self._stop:
+            raise RuntimeError("write pipeline is detached")
+        if self._fatal is not None:
+            raise RuntimeError("write pipeline failed") from self._fatal
+        rw = _txn.route(self.store, ins, dels, vset)
+        with self._enqueue_lock:
+            ticket = WriteTicket(self._seq)
+            self._seq += 1
+            if rw is None:
+                ticket._ts = 0
+                ticket._event.set()
+                return ticket
+            with self._pending_cond:
+                self._pending += 1
+            shards = sorted({sid % self.n_shards for sid in rw.sids})
+            if len(shards) == 1:
+                q = self._queues[shards[0]]
+                with q.cond:
+                    q.items.append((rw, ticket))
+                    q.cond.notify()
+            else:
+                fence = _Fence(rw, ticket, shards)
+                for s in shards:
+                    q = self._queues[s]
+                    with q.cond:
+                        q.items.append(fence)
+                        q.cond.notify()
+        return ticket
+
+    def flush(self, timeout: Optional[float] = None) -> None:
+        """Full barrier: return only when every submitted write is published.
+
+        Covers writes submitted while the flush is in progress too (waits
+        for the pending count to reach zero).  Re-raises a pipeline-fatal
+        error if one occurred.
+        """
+        with self._pending_cond:
+            if not self._pending_cond.wait_for(
+                lambda: self._pending == 0 or self._fatal is not None,
+                timeout=timeout,
+            ):
+                raise TimeoutError(
+                    f"flush timed out with {self._pending} writes pending"
+                )
+        if self._fatal is not None:
+            raise RuntimeError("write pipeline failed") from self._fatal
+
+    # -- test hooks ---------------------------------------------------------
+    def pause(self) -> None:
+        """Stop workers from draining (submissions still enqueue)."""
+        self._paused.set()
+
+    def resume(self) -> None:
+        self._paused.clear()
+        for q in self._queues:
+            with q.cond:
+                q.cond.notify_all()
+
+    # -- lifecycle ----------------------------------------------------------
+    def stop(self) -> None:
+        """Drain everything, then join the worker + committer threads."""
+        if not self._stop:
+            if self._fatal is None:
+                self._paused.clear()
+                self.flush()
+            self._stop = True
+            for q in self._queues:
+                with q.cond:
+                    q.cond.notify_all()
+            with self._prep_cond:
+                self._prep_cond.notify_all()
+        for t in self._threads:
+            t.join(timeout=30)
+        self._committer.join(timeout=30)
+
+    # -- worker side --------------------------------------------------------
+    def _worker(self, shard: int) -> None:
+        q = self._queues[shard]
+        while True:
+            fence = None
+            batch: List = []
+            with q.cond:
+                while not self._stop and (
+                    not q.items or self._paused.is_set()
+                ):
+                    q.cond.wait(timeout=0.05 if self._paused.is_set() else None)
+                if self._stop and not q.items:
+                    return
+                while q.items and len(batch) < self.max_batch:
+                    head = q.items[0]
+                    if isinstance(head, _Fence):
+                        if not batch:
+                            fence = q.items.popleft()
+                        break
+                    batch.append(q.items.popleft())
+            try:
+                if fence is not None:
+                    self._run_fence(fence)
+                elif batch:
+                    self._run_batch([rw for rw, _ in batch],
+                                    [tk for _, tk in batch])
+            except BaseException as exc:  # pragma: no cover - defensive
+                self._abort(exc, [fence.ticket] if fence is not None
+                            else [tk for _, tk in batch])
+                return
+
+    def _run_batch(self, writes, tickets) -> None:
+        """Coalesce a drained run, prepare on the pending heads, hand off."""
+        net = _txn.coalesce(writes)
+        self.stats.writes += len(writes)
+        self.stats.max_batch = max(self.stats.max_batch, len(writes))
+        if net is None:
+            self.stats.noop_batches += 1
+            self._complete(tickets, ts=0)
+            return
+        new_snaps = _txn.prepare(self.store, net, heads=self._heads)
+        if not new_snaps:
+            self.stats.noop_batches += 1
+            self._complete(tickets, ts=0)
+            return
+        self._heads.update(new_snaps)
+        self.stats.batches += 1
+        with self._prep_cond:
+            self._prepared.append(
+                _PreparedBatch(new_snaps, tickets, n_writes=len(writes))
+            )
+            self._prep_cond.notify()
+
+    def _run_fence(self, fence: _Fence) -> None:
+        """Barrier for a multi-shard write: last arriver executes it.
+
+        Every touched shard's worker parks here, so the executor has
+        exclusive access to all touched subgraphs; handing the batch off
+        BEFORE releasing the parked workers keeps the committer's FIFO
+        (and hence each chain's link order) consistent with submission
+        order.
+        """
+        execute = False
+        with fence.lock:
+            fence.arrived += 1
+            if fence.arrived == len(fence.shards):
+                execute = True
+        if execute:
+            self.stats.fences += 1
+            self._run_batch([fence.rw], [fence.ticket])
+            fence.done.set()
+        else:
+            while not fence.done.wait(timeout=1.0):
+                if self._fatal is not None:
+                    return
+
+    # -- committer side -----------------------------------------------------
+    def _commit_loop(self) -> None:
+        store = self.store
+        while True:
+            with self._prep_cond:
+                while not self._prepared and not self._stop:
+                    self._prep_cond.wait()
+                if self._stop and not self._prepared:
+                    return
+                run: List[_PreparedBatch] = list(self._prepared)
+                self._prepared.clear()
+            try:
+                k = len(run)
+                first = store.clock.reserve(k)
+                for i, pb in enumerate(run):
+                    _txn.link_at(store, first + i, pb.new_snaps,
+                                 n_writes=pb.n_writes)
+                store.clock.publish_range(first, first + k - 1)
+                store.stats.add("commits", k)
+                store.stats.add("group_commits", k)
+                store.stats.add(
+                    "writes_coalesced", sum(pb.n_writes for pb in run)
+                )
+                self.stats.publish_runs += 1
+                self.stats.max_publish_run = max(self.stats.max_publish_run, k)
+                for i, pb in enumerate(run):
+                    self._complete(pb.tickets, ts=first + i)
+                for pb in run:
+                    _txn.reclaim(store, pb.new_snaps)
+            except BaseException as exc:  # pragma: no cover - defensive
+                self._abort(exc, [tk for pb in run for tk in pb.tickets])
+                return
+
+    # -- completion ---------------------------------------------------------
+    def _complete(self, tickets, ts: int) -> None:
+        for tk in tickets:
+            tk._ts = ts
+            tk._event.set()
+        with self._pending_cond:
+            self._pending -= len(tickets)
+            self._pending_cond.notify_all()
+
+    def _abort(self, exc: BaseException, tickets) -> None:
+        self._fatal = exc
+        for tk in tickets:
+            tk._error = exc
+            tk._event.set()
+        with self._pending_cond:
+            self._pending -= len(tickets)
+            self._pending_cond.notify_all()

@@ -1,0 +1,488 @@
+"""Decoupled write pipeline: group-commit visibility, flush barrier,
+serial-oracle parity (hypothesis interleavings), the stats-race and
+publish-stall regressions, and clock/lineage batching units."""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from _parity import assert_view_matches_oracles, hypothesis_examples, rand_edges
+from repro.core import ClockStallError, RapidStore, StoreStats
+from repro.core import txn as _txn
+from repro.core.clock import LogicalClock
+from repro.core.version_chain import CommitLineage
+
+EMPTY = np.empty((0, 2), np.int64)
+
+
+def make_pipelined(n=128, p=16, B=32, n_shards=4, max_batch=1024, **kw):
+    store = RapidStore(n, partition_size=p, B=B, **kw)
+    store.attach_write_pipeline(n_shards=n_shards, max_batch=max_batch)
+    return store
+
+
+# ---------------------------------------------------------------------------
+# phase-split txn building blocks
+# ---------------------------------------------------------------------------
+def test_route_partitions_and_validates():
+    store = RapidStore(64, partition_size=16, B=32)
+    rw = _txn.route(store, np.array([[1, 2], [17, 3], [40, 1]], np.int64), EMPTY)
+    assert rw.sids == [0, 1, 2]
+    assert _txn.route(store, EMPTY, EMPTY) is None
+    with pytest.raises(ValueError):
+        _txn.route(store, np.array([[64, 1]], np.int64), EMPTY)
+    with pytest.raises(ValueError):
+        _txn.route(store, np.array([[-1, 1]], np.int64), EMPTY)
+
+
+def test_coalesce_last_op_wins():
+    store = RapidStore(64, partition_size=16, B=32)
+    w1 = _txn.route(store, np.array([[1, 2], [1, 3]], np.int64), EMPTY)
+    w2 = _txn.route(store, EMPTY, np.array([[1, 2]], np.int64))
+    w3 = _txn.route(store, np.array([[1, 2]], np.int64), EMPTY)
+    # +{(1,2),(1,3)} ; -{(1,2)} ; +{(1,2)}  =>  net insert both
+    net = _txn.coalesce([w1, w2, w3])
+    assert {tuple(e) for e in net.ins} == {(1, 2), (1, 3)}
+    assert len(net.dels) == 0
+    # ... and the reverse order nets (1,2) to a delete
+    net2 = _txn.coalesce([w3, w2])
+    assert len(net2.ins) == 0
+    assert {tuple(e) for e in net2.dels} == {(1, 2)}
+    assert _txn.coalesce([]) is None
+
+
+def test_single_shot_is_batch_of_one():
+    """execute_write == route -> prepare -> commit -> reclaim, verbatim."""
+    store = RapidStore(64, partition_size=16, B=32)
+    assert store.insert_edge(1, 2) == 1
+    assert store.insert_edge(1, 2) == 0  # duplicate: no version, clock idle
+    assert store.clock.write_timestamp() == 1
+    assert store.stats["commits"] == 1
+    assert store.lineage.writes_between(0, 1) == 1
+
+
+# ---------------------------------------------------------------------------
+# pipeline basics
+# ---------------------------------------------------------------------------
+def test_async_writes_visible_after_flush():
+    store = make_pipelined()
+    oracle = set()
+    for i in range(50):
+        e = rand_edges(128, 6, seed=i)
+        store.apply_async(e, EMPTY)
+        oracle |= {(int(u), int(v)) for u, v in e}
+    store.flush()
+    with store.read_view() as view:
+        assert view.edge_set() == oracle
+    store.detach_write_pipeline()
+    store.check_invariants()
+
+
+def test_sync_api_still_works_with_pipeline_attached():
+    store = make_pipelined()
+    t = store.insert_edges(np.array([[1, 2], [3, 4]], np.int64))
+    assert t > 0
+    with store.read_view() as view:
+        assert view.edge_set() == {(1, 2), (3, 4)}
+    assert store.delete_edge(9, 10) == 0  # absent: whole batch no-op
+    store.detach_write_pipeline()
+
+
+def test_group_commit_coalesces_to_one_publish():
+    """100 queued single-edge writes -> ONE commit ts, ONE lineage record."""
+    store = make_pipelined(n=256, p=64, n_shards=2)
+    wp = store.write_pipeline
+    wp.pause()
+    tickets = [
+        store.apply_async(np.array([[1, 2 + i]], np.int64), EMPTY)
+        for i in range(100)
+    ]
+    wp.resume()
+    store.flush()
+    tss = {t.wait() for t in tickets}
+    assert tss == {1}, f"expected one shared commit ts, got {tss}"
+    assert store.stats["commits"] == 1
+    assert len(store.lineage) == 1
+    assert store.lineage.writes_between(0, 1) == 100
+    assert wp.stats.max_batch == 100
+    with store.read_view() as view:
+        assert view.degree(1) == 100
+    store.detach_write_pipeline()
+
+
+def test_coalesced_insert_delete_nets_to_absent():
+    store = make_pipelined(n=256, p=64, n_shards=2)
+    wp = store.write_pipeline
+    wp.pause()
+    store.apply_async(np.array([[5, 6]], np.int64), EMPTY)
+    store.apply_async(EMPTY, np.array([[5, 6]], np.int64))
+    wp.resume()
+    store.flush()
+    with store.read_view() as view:
+        assert not view.search(5, 6)
+        assert view.n_edges == 0
+    store.detach_write_pipeline()
+
+
+def test_flush_is_a_true_barrier():
+    """After flush() returns, EVERY submitted write is published."""
+    store = make_pipelined(n=512, p=16, n_shards=4)
+    oracle = set()
+    olock = threading.Lock()
+
+    def submitter(seed):
+        rng = np.random.default_rng(seed)
+        for _ in range(40):
+            sid = int(rng.integers(0, store.n_subgraphs))
+            u = sid * store.p + int(rng.integers(0, store.p))
+            vs = rng.integers(0, 512, size=4)
+            e = np.stack([np.full(4, u, np.int64), vs], 1)
+            e = e[e[:, 0] != e[:, 1]]
+            store.apply_async(e, EMPTY)
+            with olock:
+                oracle.update((int(a), int(b)) for a, b in e)
+
+    threads = [threading.Thread(target=submitter, args=(i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    store.flush()
+    assert store.write_pipeline._pending == 0
+    with store.read_view() as view:
+        assert view.edge_set() == oracle
+    store.detach_write_pipeline()
+
+
+def test_batch_visibility_is_all_or_nothing():
+    """A logical write's edits appear at ONE timestamp, atomically —
+    including writes spanning shards (fence path)."""
+    store = make_pipelined(n=512, p=16, n_shards=4)
+    # one-shard write (sids 0,4 -> shard 0) and a cross-shard fence write
+    # (sids 0..3 -> shards 0..3); both must be atomic under a polling reader
+    for edges in (
+        np.array([[0, 1], [1, 2], [64, 3], [65, 4]], np.int64),  # shard 0
+        np.array([[0, 9], [16, 9], [32, 9], [48, 9]], np.int64),  # fence
+    ):
+        key = {(int(u), int(v)) for u, v in edges}
+        stop = threading.Event()
+        partial = []
+
+        def poll():
+            while not stop.is_set():
+                with store.read_view() as view:
+                    seen = view.edge_set() & key
+                    if seen and seen != key:
+                        partial.append((view.ts, seen))
+
+        th = threading.Thread(target=poll)
+        th.start()
+        t = store.apply_async(edges, EMPTY).wait()
+        stop.set()
+        th.join()
+        assert t > 0
+        assert not partial, f"partial batch visible: {partial}"
+        # all edits share the one commit ts in the lineage
+        dirty = store.lineage.dirty_between(t - 1, t)
+        assert {int(u) // store.p for u, _ in edges} <= set(dirty)
+        store.delete_edges(edges)
+    assert store.write_pipeline.stats.fences >= 1
+    store.detach_write_pipeline()
+
+
+def test_same_shard_submission_order_preserved():
+    store = make_pipelined(n=256, p=64, n_shards=2)
+    e = np.array([[1, 2]], np.int64)
+    store.apply_async(e, EMPTY)
+    store.apply_async(EMPTY, e)  # delete after insert: absent
+    store.flush()
+    with store.read_view() as view:
+        assert not view.search(1, 2)
+    store.apply_async(EMPTY, e)
+    store.apply_async(e, EMPTY)  # insert after delete: present
+    store.flush()
+    with store.read_view() as view:
+        assert view.search(1, 2)
+    store.detach_write_pipeline()
+
+
+def test_async_validation_raises_on_caller_thread():
+    store = make_pipelined(n=64)
+    with pytest.raises(ValueError):
+        store.apply_async(np.array([[999, 1]], np.int64), EMPTY)
+    with pytest.raises(ValueError):
+        store.apply_async(np.array([[-3, 1]], np.int64), EMPTY)
+    store.flush()  # pipeline unharmed
+    store.detach_write_pipeline()
+
+
+def test_detach_restores_single_shot_semantics():
+    store = make_pipelined()
+    store.apply_async(np.array([[1, 2]], np.int64), EMPTY)
+    store.detach_write_pipeline()  # flushes
+    assert store.write_pipeline is None
+    with store.read_view() as view:
+        assert view.search(1, 2)
+    assert store.insert_edge(1, 2) == 0  # duplicate reports 0 again
+    store.attach_write_pipeline()
+    with pytest.raises(RuntimeError, match="already attached"):
+        store.attach_write_pipeline()
+    store.detach_write_pipeline()
+
+
+def test_vertex_lifecycle_through_pipeline():
+    store = make_pipelined(n=64, p=8)
+    store.apply_async(np.array([[3, 4], [3, 5]], np.int64), EMPTY)
+    store.delete_vertex(3)  # flushes, scans, deletes
+    with store.read_view() as view:
+        assert view.degree(3) == 0
+    assert store.insert_vertex() == 3  # recycled id
+    store.detach_write_pipeline()
+
+
+# ---------------------------------------------------------------------------
+# satellite regressions: stats race + publish stall
+# ---------------------------------------------------------------------------
+def test_stats_add_is_atomic_under_threads():
+    """Regression: `stats[k] += 1` is a racy read-modify-write; StoreStats.add
+    must not lose updates from writers holding no common lock."""
+    stats = StoreStats(commits=0)
+    n_threads, n_iter = 8, 5000
+
+    def bump():
+        for _ in range(n_iter):
+            stats.add("commits")
+            stats.add("versions_reclaimed", 2)
+
+    threads = [threading.Thread(target=bump) for _ in range(n_threads)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert stats["commits"] == n_threads * n_iter
+    assert stats["versions_reclaimed"] == 2 * n_threads * n_iter
+
+
+def test_concurrent_disjoint_writers_count_exactly():
+    """Writers on disjoint subgraphs share no lock; commit/reclaim counters
+    must still be exact."""
+    store = RapidStore(512, partition_size=16, B=32, tracer_k=8)
+    committed = [0] * 4
+
+    def writer(w):
+        base = w * 128  # disjoint 128-vertex (8-subgraph) stripe per writer
+        for i in range(50):
+            e = np.array([[base + (i % 64), base + ((i + 1) % 128)]], np.int64)
+            if store.insert_edges(e) > 0:
+                committed[w] += 1
+
+    threads = [threading.Thread(target=writer, args=(w,)) for w in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert store.stats["commits"] == sum(committed)
+
+
+def test_publish_stall_raises_diagnostic():
+    clock = LogicalClock(stall_timeout=0.2)
+    t1 = clock.next_commit_timestamp()
+    t2 = clock.next_commit_timestamp()
+    with pytest.raises(ClockStallError, match=f"timestamp {t1} was reserved"):
+        clock.publish(t2)
+    # the missing predecessor is named and still publishable: recovery works
+    clock.publish(t1)
+    clock.publish(t2)
+    assert clock.read_timestamp() == t2
+    assert clock.stall_events >= 1
+
+
+def test_store_write_stalls_on_orphaned_timestamp():
+    store = RapidStore(64, partition_size=16, B=32, clock_stall_timeout=0.2)
+    store.clock.next_commit_timestamp()  # writer "dies" before publish
+    with pytest.raises(ClockStallError, match="timestamp 1"):
+        store.insert_edge(1, 2)
+
+
+def test_clock_reserve_and_publish_range():
+    clock = LogicalClock(stall_timeout=5.0)
+    first = clock.reserve(4)
+    assert (first, clock.write_timestamp()) == (1, 4)
+    clock.publish_range(1, 4)  # one conditional increment for the run
+    assert clock.read_timestamp() == 4
+    t5 = clock.next_commit_timestamp()
+    clock.publish(t5)
+    with pytest.raises(RuntimeError, match="already covers"):
+        clock.publish(t5)  # double publish is a protocol bug, not a wait
+    with pytest.raises(ValueError):
+        clock.reserve(0)
+    with pytest.raises(ValueError):
+        clock.publish_range(3, 2)
+
+
+def test_lineage_group_records():
+    lin = CommitLineage()
+    lin.record(1, [0, 1], n_writes=64)
+    lin.record(2, [2], n_writes=1)
+    assert lin.dirty_between(0, 2) == frozenset({0, 1, 2})  # unchanged API
+    assert lin.writes_between(0, 1) == 64
+    assert lin.writes_between(0, 2) == 65
+    assert lin.writes_between(2, 2) == 0
+    assert lin.total_writes == 65
+    # trimming still answers None below the base, counts trimmed too
+    lin2 = CommitLineage(max_records=2)
+    for t in (1, 2, 3):
+        lin2.record(t, [t], n_writes=t)
+    assert lin2.writes_between(0, 3) is None
+    assert lin2.writes_between(1, 3) == 5
+
+
+# ---------------------------------------------------------------------------
+# parity: async group-committed == the same logical writes applied serially
+# ---------------------------------------------------------------------------
+def _parity_ops_roundtrip(ops, n, p, B, n_shards, flush_every):
+    serial = RapidStore(n, partition_size=p, B=B)
+    piped = RapidStore(n, partition_size=p, B=B)
+    piped.attach_write_pipeline(n_shards=n_shards, max_batch=256)
+    try:
+        for i, (kind, edges) in enumerate(ops):
+            arr = np.asarray(edges, np.int64).reshape(-1, 2)
+            if kind == "+":
+                serial.insert_edges(arr)
+                piped.apply_async(arr, EMPTY)
+            else:
+                serial.delete_edges(arr)
+                piped.apply_async(EMPTY, arr)
+            if flush_every and (i + 1) % flush_every == 0:
+                piped.flush()
+        piped.flush()
+        with serial.read_view() as vs, piped.read_view() as vp:
+            assert vp.edge_set() == vs.edge_set()
+            # bitwise: the sorted global layouts must be identical arrays
+            ss, sd = vs.to_coo()
+            ps, pd = vp.to_coo()
+            assert np.array_equal(ps, ss) and np.array_equal(pd, sd)
+            scsr, pcsr = vs.to_csr(), vp.to_csr()
+            assert np.array_equal(pcsr.offsets, scsr.offsets)
+            assert np.array_equal(pcsr.indices, scsr.indices)
+            # and every layout of the pipelined view vs its own oracles
+            assert_view_matches_oracles(vp)
+        piped.check_invariants()
+    finally:
+        piped.detach_write_pipeline()
+
+
+def test_parity_pipelined_vs_serial_deterministic():
+    rng = np.random.default_rng(5)
+    ops = []
+    for i in range(30):
+        e = rand_edges(96, 10, seed=100 + i)
+        ops.append(("+" if rng.random() < 0.7 else "-", e))
+    _parity_ops_roundtrip(ops, n=96, p=16, B=16, n_shards=4, flush_every=7)
+
+
+def test_parity_hypothesis_interleavings():
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    N = 64
+    edge = st.tuples(
+        st.integers(0, N - 1), st.integers(0, N - 1)
+    ).filter(lambda e: e[0] != e[1])
+    op = st.tuples(
+        st.sampled_from(["+", "-"]), st.lists(edge, min_size=1, max_size=8)
+    )
+
+    @settings(max_examples=hypothesis_examples(25), deadline=None)
+    @given(
+        ops=st.lists(op, min_size=1, max_size=20),
+        p=st.sampled_from([8, 16]),
+        n_shards=st.sampled_from([1, 3]),
+        flush_every=st.sampled_from([0, 1, 5]),
+    )
+    def inner(ops, p, n_shards, flush_every):
+        _parity_ops_roundtrip(
+            ops, n=N, p=p, B=16, n_shards=n_shards, flush_every=flush_every
+        )
+
+    inner()
+
+
+# ---------------------------------------------------------------------------
+# stress: free-running submitters + readers, replay-verified
+# ---------------------------------------------------------------------------
+@pytest.mark.slow
+def test_pipeline_stress_replay_linearizable():
+    """4 async submitters + 4 readers; replay in (ts, seq) order must
+    reproduce every observed view (group commits share a ts; seq — the
+    global submission order — breaks ties exactly the way the coalescer
+    applied them)."""
+    n = 256
+    store = RapidStore(n, partition_size=16, B=16, tracer_k=16)
+    store.attach_write_pipeline(n_shards=4, max_batch=128)
+    history, observations, errors = [], [], []
+    hlock = threading.Lock()
+    stop = threading.Event()
+
+    def submitter(seed):
+        rng = np.random.default_rng(seed)
+        try:
+            out = []
+            for _ in range(120):
+                sid = int(rng.integers(0, store.n_subgraphs))
+                u = sid * store.p + int(rng.integers(0, store.p))
+                vs = rng.integers(0, n, size=3)
+                e = np.stack([np.full(3, u, np.int64), vs], 1)
+                e = e[e[:, 0] != e[:, 1]]
+                if not len(e):
+                    continue
+                if rng.random() < 0.7:
+                    tk, op = store.apply_async(e, EMPTY), "+"
+                else:
+                    tk, op = store.apply_async(EMPTY, e), "-"
+                out.append((tk, op, e.copy()))
+            for tk, op, e in out:
+                t = tk.wait(timeout=60)
+                if t > 0:
+                    with hlock:
+                        history.append((t, tk.seq, op, e))
+        except Exception as exc:  # pragma: no cover
+            errors.append(exc)
+        finally:
+            stop.set()
+
+    def reader(seed):
+        try:
+            while not stop.is_set():
+                with store.read_view() as view:
+                    observations.append((view.ts, frozenset(view.edge_set())))
+        except Exception as exc:  # pragma: no cover
+            errors.append(exc)
+
+    threads = [threading.Thread(target=submitter, args=(i,)) for i in range(4)]
+    threads += [threading.Thread(target=reader, args=(100 + i,)) for i in range(4)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    store.flush()
+    assert not errors, errors
+    history.sort(key=lambda h: (h[0], h[1]))
+    for obs_ts, obs_edges in observations:
+        state = set()
+        for t, _seq, op, edges in history:
+            if t > obs_ts:
+                break
+            for u, v in edges:
+                (state.add if op == "+" else state.discard)((int(u), int(v)))
+        assert state == set(obs_edges), f"reader at ts={obs_ts} inconsistent"
+    wp = store.write_pipeline
+    assert wp.stats.writes > 0
+    # group commit did amortize: fewer commits than committed logical writes
+    assert store.stats["commits"] <= store.lineage.total_writes
+    with store.read_view() as view:
+        assert_view_matches_oracles(view)
+    store.detach_write_pipeline()
+    store.check_invariants()
