@@ -71,6 +71,44 @@ def _bench_group_commit(n, edges, quick: bool) -> None:
             store.detach_write_pipeline()
 
 
+def _bench_wal(n, edges, quick: bool) -> None:
+    """Durability tax: batched ingest with the write-ahead log on vs off.
+
+    One fsync per commit at batch >= 64 amortizes to well under the graph
+    mutation cost; the acceptance bar is WAL-on within 2x of WAL-off.
+    The fsync=False row isolates serialization cost from disk flushes.
+    """
+    import os
+    import shutil
+    import tempfile
+
+    m = 20_000 if quick else 60_000
+    stream = edges[:m]
+    bs = 64
+    baseline = None
+    for label, wal, fsync in (("off", False, False),
+                              ("on_fsync", True, True),
+                              ("on_nofsync", True, False)):
+        root = tempfile.mkdtemp(prefix="rswal-bench-") if wal else None
+
+        def ingest():
+            s = RapidStore(n, **store_defaults())
+            if wal:
+                s.attach_wal(os.path.join(root, "wal.log"), fsync=fsync)
+            for i in range(0, m, bs):
+                s.insert_edges(stream[i : i + bs])
+            if wal:
+                s.detach_wal()
+
+        t = timeit(ingest, repeat=1)
+        if root is not None:
+            shutil.rmtree(root, ignore_errors=True)
+        if baseline is None:
+            baseline = t
+        record(f"write/wal_{label}/b{bs}", t / m * 1e6,
+               f"meps={m / t / 1e6:.3f} vs_off={t / baseline:.2f}x")
+
+
 def _run_threads(fn, n_writers, store):
     threads = [threading.Thread(target=fn, args=(w,)) for w in range(n_writers)]
     for t in threads:
@@ -110,6 +148,9 @@ def run(quick: bool = False) -> None:
                       ("vec", insert_vec)):
         t = timeit(fn, repeat=1)
         record(f"write/insert/{label}", t / m * 1e6, f"meps={m / t / 1e6:.3f}")
+
+    # -- durability tax: WAL on vs off at batch >= 64 -------------------------
+    _bench_wal(n, edges, quick)
 
     # -- decoupled pipeline: group-commit matrix ------------------------------
     _bench_group_commit(n, edges, quick)

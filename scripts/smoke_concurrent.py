@@ -1,93 +1,109 @@
 """Threaded writers + readers stress: verify snapshot consistency post-hoc.
 
-Two phases: the single-shot path (per-subgraph locks, one commit ts per
-write), then the decoupled write pipeline (sharded queues, group commit,
-commit pipelining) — same replay verification, but group commits share one
-timestamp per drained batch, so the replay key is (commit_ts, submission
-seq) instead of ts alone."""
+Three phases, arg-gated (``python scripts/smoke_concurrent.py [1 2 3]``;
+no args = phases 1+2, the fast concurrency gate):
+
+1. the single-shot path (per-subgraph locks, one commit ts per write);
+2. the decoupled write pipeline (sharded queues, group commit, commit
+   pipelining) — same replay verification, but group commits share one
+   timestamp per drained batch, so the replay key is (commit_ts, submission
+   seq) instead of ts alone;
+3. the churn soak (nightly tier1-full leg): sustained sliding-window
+   ingest/delete churn with the background storage tier — WAL on every
+   commit, compactor folds with periodic checkpoint cycles — asserting the
+   post-warmup memory plateau (<= 1.5x) that version tiering exists to
+   provide, then one crash-recovery cycle back to the same edge set.
+   ``REPRO_SOAK_COMMITS`` scales the commit count (default 6000; the
+   nightly leg runs 50k+).
+"""
+import sys
 import threading
+
 import numpy as np
 
 from repro.core import RapidStore
 
-rng = np.random.default_rng(1)
-n = 256
-store = RapidStore(n, partition_size=16, B=32, tracer_k=16)
+PHASES = {int(a) for a in sys.argv[1:] if a.isdigit()} or {1, 2}
 
 history_lock = threading.Lock()
-history = []  # (commit_ts, op, edges)
-observations = []  # (ts, frozenset(edges))
-errors = []
 
 
-def writer(seed):
-    r = np.random.default_rng(seed)
-    try:
-        for i in range(60):
-            edges = r.integers(0, n, size=(8, 2), dtype=np.int64)
-            edges = edges[edges[:, 0] != edges[:, 1]]
-            if len(edges) == 0:
-                continue
-            if r.random() < 0.7:
-                t = store.insert_edges(edges)
-                op = "+"
-            else:
-                t = store.delete_edges(edges)
-                op = "-"
-            if t > 0:  # 0 = no-op transaction, no version created
-                with history_lock:
-                    history.append((t, op, edges.copy()))
-    except Exception as e:  # pragma: no cover
-        errors.append(e)
+# ---------------------------------------------------------------------------
+# Phase 1: single-shot writers (per-subgraph locks)
+# ---------------------------------------------------------------------------
+def phase1():
+    n = 256
+    store = RapidStore(n, partition_size=16, B=32, tracer_k=16)
 
+    history = []  # (commit_ts, op, edges)
+    observations = []  # (ts, frozenset(edges))
+    errors = []
 
-def reader(seed):
-    r = np.random.default_rng(seed)
-    try:
-        for i in range(30):
-            with store.read_view() as view:
-                es = frozenset(view.edge_set())
-                observations.append((view.ts, es))
-    except Exception as e:  # pragma: no cover
-        errors.append(e)
+    def writer(seed):
+        r = np.random.default_rng(seed)
+        try:
+            for i in range(60):
+                edges = r.integers(0, n, size=(8, 2), dtype=np.int64)
+                edges = edges[edges[:, 0] != edges[:, 1]]
+                if len(edges) == 0:
+                    continue
+                if r.random() < 0.7:
+                    t = store.insert_edges(edges)
+                    op = "+"
+                else:
+                    t = store.delete_edges(edges)
+                    op = "-"
+                if t > 0:  # 0 = no-op transaction, no version created
+                    with history_lock:
+                        history.append((t, op, edges.copy()))
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
 
+    def reader(seed):
+        try:
+            for i in range(30):
+                with store.read_view() as view:
+                    es = frozenset(view.edge_set())
+                    observations.append((view.ts, es))
+        except Exception as e:  # pragma: no cover
+            errors.append(e)
 
-threads = [threading.Thread(target=writer, args=(i,)) for i in range(4)] + [
-    threading.Thread(target=reader, args=(100 + i,)) for i in range(6)
-]
-for t in threads:
-    t.start()
-for t in threads:
-    t.join()
+    threads = [threading.Thread(target=writer, args=(i,)) for i in range(4)] + [
+        threading.Thread(target=reader, args=(100 + i,)) for i in range(6)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
 
-assert not errors, errors
+    assert not errors, errors
 
-# Multiple commits can share a timestamp only if they touched disjoint
-# subgraphs... no — each commit has a unique ts. Verify monotone unique.
-tss = [h[0] for h in history]
-assert len(set(tss)) == len(tss), "duplicate commit timestamps"
+    # each commit has a unique ts; verify monotone unique
+    tss = [h[0] for h in history]
+    assert len(set(tss)) == len(tss), "duplicate commit timestamps"
 
-# replay: state at ts t = apply history with commit_ts <= t
-history.sort(key=lambda h: h[0])
-for obs_ts, obs_edges in observations:
-    state = set()
-    for t, op, edges in history:
-        if t > obs_ts:
-            break
-        for u, v in edges:
-            if op == "+":
-                state.add((int(u), int(v)))
-            else:
-                state.discard((int(u), int(v)))
-    assert state == set(obs_edges), (
-        f"reader at ts={obs_ts} inconsistent: {len(state)} vs {len(obs_edges)} "
-        f"diff={set(obs_edges) ^ state}"
-    )
+    # replay: state at ts t = apply history with commit_ts <= t
+    history.sort(key=lambda h: h[0])
+    for obs_ts, obs_edges in observations:
+        state = set()
+        for t, op, edges in history:
+            if t > obs_ts:
+                break
+            for u, v in edges:
+                if op == "+":
+                    state.add((int(u), int(v)))
+                else:
+                    state.discard((int(u), int(v)))
+        assert state == set(obs_edges), (
+            f"reader at ts={obs_ts} inconsistent: {len(state)} vs {len(obs_edges)} "
+            f"diff={set(obs_edges) ^ state}"
+        )
 
-store.check_invariants()
-print(f"commits={len(history)} observations={len(observations)} "
-      f"max_chain={store.chain_lengths().max()} reclaimed={store.stats['versions_reclaimed']}")
-print("CONCURRENT SMOKE PASSED")
+    store.check_invariants()
+    print(f"commits={len(history)} observations={len(observations)} "
+          f"max_chain={store.chain_lengths().max()} "
+          f"reclaimed={store.stats['versions_reclaimed']}")
+    print("CONCURRENT SMOKE PASSED")
 
 
 # ---------------------------------------------------------------------------
@@ -97,90 +113,193 @@ print("CONCURRENT SMOKE PASSED")
 # order, so replay sorts by (commit_ts, ticket.seq).  Whole-batch no-ops
 # (ts == 0) changed nothing at their serialization point and are skipped.
 # ---------------------------------------------------------------------------
-pstore = RapidStore(n, partition_size=16, B=32, tracer_k=16)
-wp = pstore.attach_write_pipeline(n_shards=4, max_batch=64)
+def phase2():
+    n = 256
+    pstore = RapidStore(n, partition_size=16, B=32, tracer_k=16)
+    wp = pstore.attach_write_pipeline(n_shards=4, max_batch=64)
 
-phistory = []  # (ticket, op, edges)
-pobservations = []
-perrors = []
+    phistory = []  # (ticket, op, edges)
+    pobservations = []
+    perrors = []
+
+    def submitter(seed):
+        # even seeds write within one random subgraph per batch (single-shard
+        # queue path: coalescing group commits); odd seeds span the full id
+        # range (multi-shard fence path)
+        r = np.random.default_rng(seed)
+        try:
+            for i in range(60):
+                if seed % 2 == 0:
+                    sid = int(r.integers(0, n // 16))
+                    u = r.integers(sid * 16, (sid + 1) * 16, size=(8, 1))
+                    v = r.integers(0, n, size=(8, 1))
+                    edges = np.concatenate([u, v], axis=1).astype(np.int64)
+                else:
+                    edges = r.integers(0, n, size=(8, 2), dtype=np.int64)
+                edges = edges[edges[:, 0] != edges[:, 1]]
+                if len(edges) == 0:
+                    continue
+                empty = np.empty((0, 2), np.int64)
+                if r.random() < 0.7:
+                    ins, dels, op = edges, empty, "+"
+                else:
+                    ins, dels, op = empty, edges, "-"
+                tk = pstore.apply_async(ins, dels)
+                with history_lock:
+                    phistory.append((tk, op, edges.copy()))
+        except Exception as e:  # pragma: no cover
+            perrors.append(e)
+
+    def preader(seed):
+        try:
+            for i in range(30):
+                with pstore.read_view() as view:
+                    pobservations.append((view.ts, frozenset(view.edge_set())))
+        except Exception as e:  # pragma: no cover
+            perrors.append(e)
+
+    threads = [threading.Thread(target=submitter, args=(i,)) for i in range(4)] + [
+        threading.Thread(target=preader, args=(100 + i,)) for i in range(6)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    pstore.flush()
+
+    assert not perrors, perrors
+
+    resolved = []
+    for tk, op, edges in phistory:
+        ts = tk.wait(timeout=30)
+        if ts > 0:
+            resolved.append((ts, tk.seq, op, edges))
+    resolved.sort(key=lambda h: (h[0], h[1]))
+
+    for obs_ts, obs_edges in pobservations:
+        state = set()
+        for t, _, op, edges in resolved:
+            if t > obs_ts:
+                break
+            for u, v in edges:
+                if op == "+":
+                    state.add((int(u), int(v)))
+                else:
+                    state.discard((int(u), int(v)))
+        assert state == set(obs_edges), (
+            f"pipelined reader at ts={obs_ts} inconsistent: "
+            f"{len(state)} vs {len(obs_edges)} diff={set(obs_edges) ^ state}"
+        )
+
+    pstore.check_invariants()
+    ws = wp.stats
+    pstore.detach_write_pipeline()
+    print(f"pipeline: writes={ws.writes} batches={ws.batches} fences={ws.fences} "
+          f"commits={pstore.stats['commits']} "
+          f"group_commits={pstore.stats.get('group_commits', 0)} "
+          f"observations={len(pobservations)}")
+    print("PIPELINE SMOKE PASSED")
 
 
-def submitter(seed):
-    # even seeds write within one random subgraph per batch (single-shard
-    # queue path: coalescing group commits); odd seeds span the full id
-    # range (multi-shard fence path)
-    r = np.random.default_rng(seed)
-    try:
-        for i in range(60):
-            if seed % 2 == 0:
-                sid = int(r.integers(0, n // 16))
-                u = r.integers(sid * 16, (sid + 1) * 16, size=(8, 1))
-                v = r.integers(0, n, size=(8, 1))
-                edges = np.concatenate([u, v], axis=1).astype(np.int64)
-            else:
-                edges = r.integers(0, n, size=(8, 2), dtype=np.int64)
-            edges = edges[edges[:, 0] != edges[:, 1]]
-            if len(edges) == 0:
-                continue
-            empty = np.empty((0, 2), np.int64)
-            if r.random() < 0.7:
-                ins, dels, op = edges, empty, "+"
-            else:
-                ins, dels, op = empty, edges, "-"
-            tk = pstore.apply_async(ins, dels)
-            with history_lock:
-                phistory.append((tk, op, edges.copy()))
-    except Exception as e:  # pragma: no cover
-        perrors.append(e)
+# ---------------------------------------------------------------------------
+# Phase 3: churn soak — the long-running-service profile.  Sliding-window
+# churn on hub vertices fragments C-ART leaves exactly like sustained
+# insert/delete traffic; without the compactor the pool doubles forever
+# (the unbounded-growth bug), with it memory_bytes() must plateau.  Every
+# commit is WAL-logged; checkpoint cycles bound the replay window; one
+# recovery at the end proves the durable trail reconstructs the store.
+# ---------------------------------------------------------------------------
+def phase3():
+    import collections
+    import os
+    import shutil
+    import tempfile
 
+    n = 256
+    hubs = list(range(0, n, 37))
+    window = 48  # live sliding-window neighbors per hub
+    total_commits = int(os.environ.get("REPRO_SOAK_COMMITS", "6000"))
+    commits_per_round = 200
+    ckpt_period = 5  # checkpoint cycle every 5 fold rounds
 
-def preader(seed):
-    try:
-        for i in range(30):
-            with pstore.read_view() as view:
-                pobservations.append((view.ts, frozenset(view.edge_set())))
-    except Exception as e:  # pragma: no cover
-        perrors.append(e)
-
-
-threads = [threading.Thread(target=submitter, args=(i,)) for i in range(4)] + [
-    threading.Thread(target=preader, args=(100 + i,)) for i in range(6)
-]
-for t in threads:
-    t.start()
-for t in threads:
-    t.join()
-pstore.flush()
-
-assert not perrors, perrors
-
-resolved = []
-for tk, op, edges in phistory:
-    ts = tk.wait(timeout=30)
-    if ts > 0:
-        resolved.append((ts, tk.seq, op, edges))
-resolved.sort(key=lambda h: (h[0], h[1]))
-
-for obs_ts, obs_edges in pobservations:
-    state = set()
-    for t, _, op, edges in resolved:
-        if t > obs_ts:
-            break
-        for u, v in edges:
-            if op == "+":
-                state.add((int(u), int(v)))
-            else:
-                state.discard((int(u), int(v)))
-    assert state == set(obs_edges), (
-        f"pipelined reader at ts={obs_ts} inconsistent: "
-        f"{len(state)} vs {len(obs_edges)} diff={set(obs_edges) ^ state}"
+    root = tempfile.mkdtemp(prefix="rapidstore-soak-")
+    store = RapidStore(n, partition_size=32, B=8, high_threshold=4)
+    store.attach_wal(os.path.join(root, "wal.log"))
+    comp = store.attach_compactor(
+        min_waste_rows=2,
+        checkpoint_dir=os.path.join(root, "checkpoints"),
+        keep_checkpoints=2,
     )
 
-pstore.check_invariants()
-ws = wp.stats
-pstore.detach_write_pipeline()
-print(f"pipeline: writes={ws.writes} batches={ws.batches} fences={ws.fences} "
-      f"commits={pstore.stats['commits']} "
-      f"group_commits={pstore.stats.get('group_commits', 0)} "
-      f"observations={len(pobservations)}")
-print("PIPELINE SMOKE PASSED")
+    mems = []
+    live = {h: collections.deque() for h in hubs}  # per-hub insertion order
+    cursor = 0
+    committed = 0
+    readers_seen = 0
+    while committed < total_commits:
+        for _ in range(commits_per_round):
+            hub = hubs[cursor % len(hubs)]
+            j = 1 + (cursor // len(hubs)) % (n - 1)
+            dst = (hub + j) % n
+            store.insert_edges(np.array([[hub, dst]], np.int64))
+            live[hub].append(dst)
+            if len(live[hub]) > window:  # evict the oldest neighbor
+                old = live[hub].popleft()
+                store.delete_edges(np.array([[hub, old]], np.int64))
+            committed += 2
+            cursor += 1
+        # a reader riding along keeps the tracer/GC horizon honest
+        with store.read_view() as v:
+            readers_seen += v.n_edges >= 0
+        comp.compact_once(checkpoint=(len(mems) % ckpt_period == ckpt_period - 1))
+        mems.append(store.memory_bytes())
+
+    # warmup = the first full checkpoint cycle, so the periodic transient
+    # (the checkpoint's own read view lingering as the retired bundle) is in
+    # the baseline too; after it, sustained churn must not outgrow 1.5x
+    warm = ckpt_period
+    plateau = max(mems[warm:]) / max(mems[:warm])
+    fill = store.pool.fill_ratio()
+    assert plateau <= 1.5, (
+        f"memory grew past the plateau under churn: peak/warmup = "
+        f"{plateau:.2f}x ({max(mems[warm:])} vs {max(mems[:warm])} bytes)"
+    )
+    store.check_invariants()
+
+    # a short tail after the last checkpoint so recovery replays a WAL
+    # suffix, not just the base snapshot
+    for k in range(8):
+        store.insert_edges(np.array([[1, (100 + k) % n]], np.int64))
+    with store.read_view() as v:
+        want = v.edge_set()
+    store.detach_compactor()
+    store.detach_wal()
+
+    # one recovery cycle: newest checkpoint + WAL suffix -> same edge set
+    rec = RapidStore.recover(root)
+    with rec.read_view() as v:
+        got = v.edge_set()
+    assert got == want, (
+        f"recovery diverged: {len(got ^ want)} edge diffs after "
+        f"{rec.stats['wal_replayed']} replayed records"
+    )
+    assert rec.stats["wal_replayed"] >= 8, "recovery replayed no WAL suffix"
+    rec.check_invariants()
+    rec.detach_wal()
+    shutil.rmtree(root, ignore_errors=True)
+
+    print(f"churn soak: commits={committed} folds={comp.cycles} "
+          f"plateau={plateau:.2f}x fill={fill:.2f} "
+          f"repacks={store.stats.get('compactor_repacks', 0)} "
+          f"lineage_trimmed={store.stats.get('lineage_trimmed', 0)} "
+          f"wal_replayed={rec.stats['wal_replayed']}")
+    print("CHURN SOAK PASSED")
+
+
+if __name__ == "__main__":
+    if 1 in PHASES:
+        phase1()
+    if 2 in PHASES:
+        phase2()
+    if 3 in PHASES:
+        phase3()

@@ -108,6 +108,28 @@ def restore(ckpt_dir: str | Path, template: Any, step: Optional[int] = None):
     return jax.tree_util.tree_unflatten(treedef, [l for l in leaves]), meta
 
 
+def restore_raw(ckpt_dir: str | Path, step: Optional[int] = None):
+    """Template-free restore: ``({key: array}, meta)`` straight off disk.
+
+    Loads every leaf recorded in ``meta.json``'s key list at their saved
+    shapes and dtypes — for consumers that don't know the structure up
+    front (``RapidStore.recover`` reads its edge arrays this way; the saved
+    ``extra`` dict carries the store config).
+    """
+    ckpt_dir = Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no committed checkpoint in {ckpt_dir}")
+    path = ckpt_dir / f"step_{step:09d}"
+    meta = json.loads((path / "meta.json").read_text())
+    arrays = {
+        key: np.load(path / "arrays" / (key.replace("/", "__") + ".npy"))
+        for key in meta["keys"]
+    }
+    return arrays, meta
+
+
 def prune(ckpt_dir: str | Path, keep: int = 3) -> None:
     ckpt_dir = Path(ckpt_dir)
     steps = sorted(

@@ -27,6 +27,12 @@ Group-commit extensions (write pipeline, see core.write_pipeline):
   ``stall_timeout`` seconds the poll raises :class:`ClockStallError` naming
   the missing timestamp instead of hanging the process; ``stall_events`` /
   ``max_stall_wait`` record how often publishes had to wait at all.
+- :meth:`LogicalClock.abandon` / :meth:`~LogicalClock.abandon_range` — the
+  cooperative fix for the same failure: a writer that errors after reserving
+  renounces its timestamps, and ``t_r`` steps over them as published no-ops
+  so later committers proceed instead of stalling.
+- :meth:`LogicalClock.restore` resets the clock after crash recovery so
+  post-replay commits continue the durable timestamp sequence.
 """
 
 from __future__ import annotations
@@ -58,8 +64,8 @@ class LogicalClock:
     """Paper-faithful (t_w, t_r) pair with atomic advance semantics."""
 
     __slots__ = (
-        "_tw", "_tr", "_lock", "_tr_cond", "stall_timeout",
-        "stall_events", "max_stall_wait",
+        "_tw", "_tr", "_lock", "_tr_cond", "_abandoned", "stall_timeout",
+        "stall_events", "max_stall_wait", "abandon_events",
     )
 
     def __init__(self, stall_timeout: float = 60.0) -> None:
@@ -67,11 +73,15 @@ class LogicalClock:
         self._tr = 0
         self._lock = threading.Lock()
         self._tr_cond = threading.Condition(self._lock)
+        # reserved timestamps whose writer gave up (see abandon_range):
+        # publish waiters step over these instead of stalling against them
+        self._abandoned: set = set()
         #: seconds a publish may poll for its predecessor before raising
         #: ClockStallError; None disables the deadline (legacy hang-forever).
         self.stall_timeout = stall_timeout
         self.stall_events = 0  # publishes that had to wait at least once
         self.max_stall_wait = 0.0  # longest successful publish wait (s)
+        self.abandon_events = 0  # timestamps explicitly abandoned
 
     # -- write side ---------------------------------------------------------
     def next_commit_timestamp(self) -> int:
@@ -93,6 +103,41 @@ class LogicalClock:
             first = self._tw + 1
             self._tw += k
             return first
+
+    def abandon(self, commit_ts: int) -> None:
+        """Renounce one reserved-but-unpublished commit timestamp.
+
+        The error-handling side of the reserve/publish protocol: a writer
+        that fails between ``reserve``/``next_commit_timestamp()`` and
+        ``publish()`` MUST abandon its timestamps, or every later committer
+        stalls against the gap until :class:`ClockStallError`.  An abandoned
+        timestamp behaves like a published no-op: once all earlier commits
+        publish, ``t_r`` silently steps over it and later publishes proceed.
+        """
+        self.abandon_range(commit_ts, commit_ts)
+
+    def abandon_range(self, first: int, last: int) -> None:
+        """Abandon the whole reserved run ``[first, last]`` (see abandon)."""
+        if last < first:
+            raise ValueError(f"empty abandon range [{first}, {last}]")
+        with self._tr_cond:
+            if self._tr >= first:
+                raise RuntimeError(
+                    f"abandon_range([{first}, {last}]) but t_r={self._tr} "
+                    f"already covers {first}: cannot abandon published commits"
+                )
+            for ts in range(first, last + 1):
+                self._abandoned.add(ts)
+            self.abandon_events += last - first + 1
+            self._advance_over_abandoned_locked()
+            self._tr_cond.notify_all()
+
+    def _advance_over_abandoned_locked(self) -> None:
+        # step t_r over any contiguous abandoned run now adjacent to it;
+        # caller holds _lock and notifies afterwards
+        while self._tr + 1 in self._abandoned:
+            self._abandoned.discard(self._tr + 1)
+            self._tr += 1
 
     def publish(self, commit_ts: int) -> None:
         """Advance ``t_r`` to ``commit_ts`` once every earlier commit published.
@@ -117,6 +162,12 @@ class LogicalClock:
         deadline = None
         waited = False
         with self._tr_cond:
+            for ts in range(first, last + 1):
+                if ts in self._abandoned:
+                    raise RuntimeError(
+                        f"publish_range([{first}, {last}]): timestamp {ts} "
+                        f"was abandoned and cannot be published"
+                    )
             while self._tr != first - 1:
                 if self._tr >= first:  # double publish — protocol bug
                     raise RuntimeError(
@@ -145,6 +196,28 @@ class LogicalClock:
                     self.max_stall_wait, time.monotonic() - start
                 )
             self._tr = last
+            self._advance_over_abandoned_locked()
+            self._tr_cond.notify_all()
+
+    def restore(self, ts: int) -> None:
+        """Reset both timestamps to ``ts`` (crash-recovery bootstrap).
+
+        Used by :meth:`RapidStore.recover` after WAL replay: the recovered
+        store's clock must resume exactly where the durable history ends so
+        post-recovery commits draw contiguous timestamps.  Only valid on a
+        quiescent clock (no reserved-but-unpublished timestamps in flight).
+        """
+        with self._tr_cond:
+            if self._tw != self._tr:
+                raise RuntimeError(
+                    f"restore({ts}) on a non-quiescent clock "
+                    f"(t_w={self._tw}, t_r={self._tr})"
+                )
+            if ts < 0:
+                raise ValueError(f"restore needs ts >= 0, got {ts}")
+            self._tw = int(ts)
+            self._tr = int(ts)
+            self._abandoned.clear()
             self._tr_cond.notify_all()
 
     # -- read side ----------------------------------------------------------

@@ -205,7 +205,7 @@ class SnapshotView:
 
     __slots__ = (
         "ts", "p", "snaps", "n_vertices", "B", "assembly", "_pred", "_lineage",
-        "_plane",
+        "_plane", "_base",
     )
 
     def __init__(
@@ -218,6 +218,7 @@ class SnapshotView:
         pred=None,
         lineage=None,
         plane=None,
+        base=None,
     ):
         self.ts = ts
         self.p = p
@@ -228,6 +229,7 @@ class SnapshotView:
         self._pred = pred  # weakref to the predecessor view's ViewAssembly
         self._lineage = lineage  # CommitLineage for the dirty-set diff
         self._plane = plane  # ShardPlane routing collective analytics, or None
+        self._base = base  # STRONG ref to the compactor's frozen base bundle
 
     # -- point reads ------------------------------------------------------------
     def _local(self, u: int) -> Tuple[SubgraphSnapshot, int]:

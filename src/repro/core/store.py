@@ -111,6 +111,12 @@ class RapidStore:
         self.shard_plane = None
         # decoupled write pipeline (attach_write_pipeline); None = single-shot
         self.write_pipeline = None
+        # durability + tiering (attach_wal / attach_compactor)
+        self.wal = None
+        self.compactor = None
+        # frozen base level: the compactor's fully-materialized packed-stream
+        # bundle (strong ref) — the view assembler's base+delta splice source
+        self._base_assembly = None
 
     # -- construction -------------------------------------------------------------
     @classmethod
@@ -147,6 +153,9 @@ class RapidStore:
         store._retire_lock = threading.Lock()
         store.shard_plane = None
         store.write_pipeline = None
+        store.wal = None
+        store.compactor = None
+        store._base_assembly = None
 
         store.chains = []
         if len(edges):
@@ -311,6 +320,7 @@ class RapidStore:
             pred=weakref.ref(retired) if retired is not None else None,
             lineage=self.lineage,
             plane=self.shard_plane,
+            base=self._base_assembly,
         )
         return ReadHandle(slot=slot, ts=t, view=view)
 
@@ -409,6 +419,240 @@ class RapidStore:
             if retired is not None:
                 retired.sharded = None
 
+    # -- durability: WAL + compactor + checkpoint + recovery ----------------------
+    def attach_wal(self, path, fsync: bool = True):
+        """Attach a :class:`~repro.core.wal.WriteAheadLog` at ``path``.
+
+        Every subsequent commit — single-shot and group — is appended and
+        fsync'd before it publishes; compactor repacks are logged too, so
+        :meth:`recover` replays layout-faithfully.  Attaching an existing
+        log resumes it (torn tail truncated); a fresh log starts at the
+        clock's current read timestamp.
+        """
+        from .wal import WriteAheadLog
+
+        if self.wal is not None:
+            raise RuntimeError("a WAL is already attached")
+        self.wal = WriteAheadLog(
+            path, start_ts=self.clock.read_timestamp(), fsync=fsync
+        )
+        return self.wal
+
+    def detach_wal(self) -> None:
+        w = self.wal
+        if w is None:
+            return
+        try:
+            w.close()
+        finally:
+            self.wal = None
+
+    def attach_compactor(self, **kw):
+        """Attach a :class:`~repro.core.compactor.Compactor` (see its doc).
+
+        Keyword arguments are forwarded (``min_waste_rows``,
+        ``checkpoint_dir``, ``checkpoint_every``, ``keep_checkpoints``).
+        Drive it with ``compactor.compact_once()`` or ``compactor.start()``.
+        """
+        from .compactor import Compactor
+
+        if self.compactor is not None:
+            raise RuntimeError("a compactor is already attached")
+        self.compactor = Compactor(self, **kw)
+        return self.compactor
+
+    def detach_compactor(self) -> None:
+        c = self.compactor
+        if c is None:
+            return
+        try:
+            c.stop()
+        finally:
+            self.compactor = None
+
+    def checkpoint(self, directory) -> int:
+        """Persist a durable base snapshot; returns its timestamp.
+
+        Captures one consistent view (concurrent writers keep committing)
+        and writes its edge set, vertex flags, free-id queue, and store
+        config through :mod:`repro.checkpoint.manager`'s committed-save
+        protocol (tmp dir + ``_COMPLETE`` marker + atomic rename).  Pair
+        with ``wal.reset(ts)`` — the compactor's checkpoint cycle does —
+        to bound the recovery replay window.
+        """
+        from ..checkpoint import manager as _ckpt
+
+        with self.read_view() as v:
+            ts = v.ts
+            n_vertices = v.n_vertices
+            src, dst = v.to_coo()
+            active = np.concatenate([s.active for s in v.snaps])[:n_vertices]
+        with self._vid_lock:
+            free = np.array(sorted(self._free_vids), np.int64)
+        tree = {
+            "src": np.asarray(src, np.int64),
+            "dst": np.asarray(dst, np.int64),
+            "active": np.asarray(active, bool),
+            "free_vids": free,
+        }
+        extra = {
+            "kind": "rapidstore",
+            "ts": int(ts),
+            "n_vertices": int(n_vertices),
+            "partition_size": int(self.p),
+            "B": int(self.B),
+            "high_threshold": int(self.high_threshold),
+        }
+        _ckpt.save(directory, step=int(ts), tree=tree, extra=extra)
+        self.stats.add("checkpoints", 1)
+        return int(ts)
+
+    @classmethod
+    def recover(
+        cls,
+        root,
+        wal_filename: str = "wal.log",
+        checkpoint_subdir: str = "checkpoints",
+        attach: bool = True,
+        fsync: bool = True,
+        **store_kw,
+    ) -> "RapidStore":
+        """Rebuild a store from ``root`` after a crash: checkpoint + WAL.
+
+        ``root`` is the durability directory holding ``wal.log`` and
+        ``checkpoints/`` (the layout :meth:`attach_wal` +
+        ``attach_compactor(checkpoint_dir=...)`` produce).  The newest
+        committed checkpoint seeds the store (its saved config overrides
+        ``store_kw``); the WAL suffix is replayed in timestamp order at the
+        ORIGINAL commit timestamps — including repack records, so the
+        clustered-index/C-ART layout history is reproduced and recovered
+        ``SnapshotView`` materializations are bitwise-identical to a serial
+        re-application of the same ops.  A torn WAL tail (crash mid-append)
+        is dropped; everything durable before it replays.  With no
+        checkpoint, ``store_kw`` must supply ``n_vertices`` and layout
+        parameters matching the original store.
+
+        ``attach=True`` re-attaches the WAL (truncating the torn tail on
+        disk) so the recovered store continues durable service.
+        """
+        import os
+
+        from .wal import WriteAheadLog
+
+        root = str(root)
+        wal_path = os.path.join(root, wal_filename)
+        ckpt_dir = os.path.join(root, checkpoint_subdir)
+
+        from ..checkpoint import manager as _ckpt
+
+        step = _ckpt.latest_step(ckpt_dir)
+        if step is not None:
+            arrays, meta = _ckpt.restore_raw(ckpt_dir, step=step)
+            extra = meta["extra"]
+            store_kw = dict(store_kw)
+            store_kw.pop("n_vertices", None)
+            for key in ("partition_size", "B", "high_threshold"):
+                store_kw[key] = extra[key]
+            edges = np.stack([arrays["src"], arrays["dst"]], axis=1) \
+                if len(arrays["src"]) else np.empty((0, 2), np.int64)
+            store = cls.from_edges(extra["n_vertices"], edges, **store_kw)
+            # vertex flags: heads are version-0 snapshots nobody has read
+            # yet, so direct mutation is safe here (and only here)
+            for vid in np.nonzero(~arrays["active"])[0]:
+                store.chains[int(vid) // store.p].head.active[
+                    int(vid) % store.p
+                ] = False
+            store._free_vids = [int(v) for v in arrays["free_vids"]]
+            store.clock.restore(int(extra["ts"]))
+        else:
+            if "n_vertices" not in store_kw:
+                raise ValueError(
+                    "recover() without a checkpoint needs n_vertices (and "
+                    "matching layout parameters) in store_kw"
+                )
+            store_kw = dict(store_kw)
+            store = cls(store_kw.pop("n_vertices"), **store_kw)
+
+        replayed = 0
+        if os.path.exists(wal_path):
+            _, records, clean = WriteAheadLog.replay(wal_path)
+            floor = store.clock.read_timestamp()
+            for rec in records:
+                if rec.ts <= floor:
+                    continue  # already covered by the checkpoint
+                store._replay_record(rec)
+                replayed += 1
+            if not clean:
+                store.stats.add("wal_torn_tail", 1)
+        store.stats.add("wal_replayed", replayed)
+        # replay linked every record as its own version with no readers
+        # active — collapse the chains down to their heads
+        final_ts = store.clock.read_timestamp()
+        for chain in store.chains:
+            chain.collect([final_ts])
+        if attach:
+            store.attach_wal(wal_path, fsync=fsync)
+        return store
+
+    def _ensure_vertices(self, n: int) -> None:
+        """Grow the id space to at least ``n`` vertices (WAL replay path).
+
+        Mirrors :meth:`insert_vertex`'s growth: appends empty version-0
+        chains (and locks) for any new subgraphs.
+        """
+        with self._vid_lock:
+            if n <= self.n_vertices:
+                return
+            self.n_vertices = int(n)
+            needed = -(-self.n_vertices // self.p)
+            while self.n_subgraphs < needed:
+                sid = self.n_subgraphs
+                empty = build_subgraph(
+                    sid, self.p, self.pool, np.empty(0, np.int64),
+                    np.empty(0, np.int32), high_threshold=self.high_threshold,
+                )
+                self.chains.append(VersionChain(sid, empty))
+                self.locks.append(threading.Lock())
+                self.n_subgraphs += 1
+
+    def _replay_record(self, rec) -> None:
+        """Apply one WAL record at its original commit timestamp.
+
+        Replay is single-threaded: versions are linked directly (prepare +
+        link) and the clock is restored past each timestamp instead of
+        running the publish protocol, so timestamp gaps (abandoned or
+        never-synced commits) are stepped over exactly as the live clock
+        stepped over them.
+        """
+        from .wal import KIND_REPACK
+        from .subgraph import build_subgraph as _build
+
+        self._ensure_vertices(rec.n_vertices)
+        if rec.kind == KIND_REPACK:
+            for sid in rec.sids:
+                head = self.chains[sid].head
+                src, dst = head.to_coo_global()
+                snap = _build(
+                    sid, self.p, self.pool, src - sid * self.p, dst,
+                    high_threshold=self.high_threshold,
+                )
+                snap.active = head.active.copy()
+                _txn.link_at(self, rec.ts, {sid: snap}, n_writes=0)
+        else:
+            rw = _txn.route(self, rec.ins, rec.dels, rec.vset)
+            if rw is not None:
+                new_snaps = _txn.prepare(self, rw)
+                if new_snaps:
+                    _txn.link_at(self, rec.ts, new_snaps, n_writes=1)
+            if rec.vset:
+                with self._vid_lock:
+                    for vid, flag in sorted(rec.vset.items()):
+                        if flag and vid in self._free_vids:
+                            self._free_vids.remove(vid)
+                        elif not flag and vid not in self._free_vids:
+                            self._free_vids.append(vid)
+        self.clock.restore(rec.ts)
+
     # -- introspection ------------------------------------------------------------
     def memory_bytes(self) -> int:
         total = self.pool.memory_bytes()
@@ -428,6 +672,16 @@ class RapidStore:
         if retired is not None:
             # the one retained delta-plane bundle (successor splice source)
             total += retired.host_bytes() + retired.device_bytes()
+        base = self._base_assembly
+        if base is not None and base is not retired:
+            # the compactor's frozen base level (strong ref, splice source)
+            total += base.host_bytes() + base.device_bytes()
+        # commit-lineage log (trimmed by the compactor's fold horizon)
+        total += self.lineage.memory_bytes()
+        # logical writes queued/prepared in the pipeline but not yet linked
+        wp = self.write_pipeline
+        if wp is not None:
+            total += wp.queued_bytes()
         return total
 
     def fill_ratio(self) -> float:

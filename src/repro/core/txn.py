@@ -212,14 +212,29 @@ def commit(
     new_snaps: Dict[int, object],
     n_writes: int = 1,
     ts: Optional[int] = None,
+    rw: Optional[RoutedWrite] = None,
 ) -> int:
-    """Phase 3: timestamp + link + lineage + publish (one version publish).
+    """Phase 3: timestamp + WAL + link + lineage + publish.
 
     ``ts`` may be pre-reserved (``clock.reserve``) by a batching committer;
-    otherwise one is drawn here.  Returns the commit timestamp.
+    otherwise one is drawn here.  When the store has a write-ahead log
+    attached and ``rw`` (the net routed write) is provided, the commit is
+    made durable — appended and fsync'd — BEFORE it is published, so any
+    reader-visible commit survives a crash.  A failure between drawing the
+    timestamp and publishing abandons it (``clock.abandon``) so later
+    committers never stall against the gap.  Returns the commit timestamp.
     """
     t = ts if ts is not None else store.clock.next_commit_timestamp()
-    link_at(store, t, new_snaps, n_writes=n_writes)
+    try:
+        wal = store.wal
+        if wal is not None and rw is not None:
+            wal.append_commit(t, rw.ins, rw.dels, rw.vset, store.n_vertices)
+            wal.sync()
+        link_at(store, t, new_snaps, n_writes=n_writes)
+    except BaseException:
+        if ts is None:  # we drew it; a reserving caller owns its own range
+            store.clock.abandon(t)
+        raise
     store.clock.publish(t)
     store.stats.add("commits", 1)
     return t
@@ -259,7 +274,7 @@ def execute_write(
         new_snaps = prepare(store, rw)
         if not new_snaps:
             return 0
-        t = commit(store, new_snaps)
+        t = commit(store, new_snaps, rw=rw)
         reclaim(store, new_snaps)
         return t
     finally:

@@ -117,6 +117,46 @@ class CommitLineage:
             j = bisect.bisect_right(self._ts, hi)
             return sum(self._counts[i:j])
 
+    def trim_below(self, ts: int) -> int:
+        """Drop every record with commit ts <= ``ts``; returns count dropped.
+
+        The compactor calls this after folding all versions at or below its
+        horizon into the frozen base level: windows that start at or above
+        the fold point (``dirty_between(fold_ts, t)``) still answer exactly,
+        while windows reaching below return ``None`` and the view assembler
+        falls back to the base+delta splice or full concat.  Never regresses:
+        a ``ts`` at or below the current base is a no-op.
+        """
+        with self._lock:
+            if ts <= self._base_ts:
+                return 0
+            i = bisect.bisect_right(self._ts, ts)
+            del self._ts[:i]
+            del self._sids[:i]
+            del self._counts[:i]
+            self._base_ts = int(ts)
+            return i
+
+    @property
+    def base_ts(self) -> int:
+        """Oldest timestamp the lineage can still diff against (exclusive)."""
+        return self._base_ts
+
+    def memory_bytes(self) -> int:
+        """Approximate resident footprint of the record log.
+
+        Counted by :meth:`RapidStore.memory_bytes` so sustained churn shows
+        up in the store's accounting instead of hiding in Python lists: three
+        list slots + int + frozenset overhead per record, plus 8 bytes per
+        recorded dirty subgraph id.
+        """
+        with self._lock:
+            n = len(self._ts)
+            sid_entries = sum(len(s) for s in self._sids)
+        # ~88 bytes/record: 3 list slots (24) + small int (28 avg, shared for
+        # tiny values but not for timestamps) + frozenset header amortized
+        return 88 * n + 8 * sid_entries
+
     def __len__(self) -> int:
         return len(self._ts)
 

@@ -37,9 +37,12 @@ The delta plane removes that tax with three cooperating pieces:
    materialization of the remaining dirty subgraphs.
 
 Fallbacks keep the path safe: no predecessor bundle (first read, or GC
-reclaimed it mid-chain), an unknowable lineage window (trimmed log), a dirty
+reclaimed it mid-chain) and an unknowable lineage window (trimmed log) first
+try the compactor's frozen *base* bundle — ``store._base_assembly``, strong-
+referenced so it cannot die, with ``base.ts`` at or above the lineage trim
+point so its diff window always answers; failing that, and for a dirty
 fraction above :func:`max_dirty_frac` (splicing S/2 runs would cost more than
-one concat), or ``REPRO_DISABLE_DELTA_SPLICE=1`` all route to the classic
+one concat) or ``REPRO_DISABLE_DELTA_SPLICE=1``, they route to the classic
 full concatenation — which this module also owns, so the per-subgraph touch
 counters in :data:`stats` cover both paths.  ``SnapshotView.to_*_uncached``
 remain the independent oracles.
@@ -81,6 +84,7 @@ class AssemblyStats:
     spliced_segments: int = 0
     spliced_bytes: int = 0
     prefetch_uploads: int = 0
+    base_splices: int = 0
     fallback_no_pred: int = 0
     fallback_lineage: int = 0
     fallback_dirty_frac: int = 0
@@ -93,6 +97,7 @@ class AssemblyStats:
         self.spliced_segments = 0
         self.spliced_bytes = 0
         self.prefetch_uploads = 0
+        self.base_splices = 0
         self.fallback_no_pred = 0
         self.fallback_lineage = 0
         self.fallback_dirty_frac = 0
@@ -236,26 +241,42 @@ def _plan(view) -> Optional[Tuple[ViewAssembly, List[int]]]:
 
     The dirty set is the lineage diff over ``(pred.ts, view.ts]`` (symmetric
     if the retired predecessor is newer than this view), extended with any
-    subgraphs appended after the predecessor was assembled.  Falls back on a
-    dead weakref, an unknowable lineage window, or a dirty fraction above
-    :func:`max_dirty_frac`.
+    subgraphs appended after the predecessor was assembled.  A dead weakref
+    or an unknowable lineage window falls back to the compactor's frozen
+    *base* bundle (``view._base``) — a strong reference whose timestamp is
+    at or above the lineage trim point by construction, so its window always
+    answers — before giving up; a dirty fraction above
+    :func:`max_dirty_frac` always routes to the full concat.
     """
     if not splice_enabled():
         return None
+    lineage = view._lineage
     ref = view._pred
     pred = ref() if ref is not None else None
     if pred is None:
-        _count(fallback_no_pred=1)
-        return None
-    if pred.ts == view.ts:
-        diff: Optional[frozenset] = frozenset()
+        diff: Optional[frozenset] = None
+        reason = "fallback_no_pred"
+    elif pred.ts == view.ts:
+        diff = frozenset()
+        reason = ""
     else:
-        lineage = view._lineage
         diff = (
             lineage.dirty_between(pred.ts, view.ts) if lineage is not None else None
         )
+        reason = "fallback_lineage"
     if diff is None:
-        _count(fallback_lineage=1)
+        base = view._base
+        if (
+            base is not None
+            and lineage is not None
+            and base.ts <= view.ts
+        ):
+            bdiff = lineage.dirty_between(base.ts, view.ts)
+            if bdiff is not None:
+                pred, diff = base, bdiff
+                _count(base_splices=1)
+    if diff is None:
+        _count(**{reason: 1})
         return None
     S = len(view.snaps)
     dirty = {s for s in diff if s < S}

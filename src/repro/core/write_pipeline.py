@@ -59,6 +59,7 @@ from __future__ import annotations
 
 import threading
 from collections import deque
+from contextlib import contextmanager
 from typing import Dict, List, Optional
 
 import numpy as np
@@ -116,14 +117,20 @@ class _Fence:
 
 
 class _PreparedBatch:
-    """Output of a worker's prepare phase, awaiting the committer."""
+    """Output of a worker's prepare phase, awaiting the committer.
 
-    __slots__ = ("new_snaps", "tickets", "n_writes")
+    ``net`` is the coalesced :class:`~repro.core.txn.RoutedWrite` — the
+    committer logs it to the write-ahead log (one record per batch, one
+    fsync per drained run) before publishing.
+    """
 
-    def __init__(self, new_snaps, tickets, n_writes) -> None:
+    __slots__ = ("new_snaps", "tickets", "n_writes", "net")
+
+    def __init__(self, new_snaps, tickets, n_writes, net=None) -> None:
         self.new_snaps = new_snaps
         self.tickets = tickets
         self.n_writes = n_writes
+        self.net = net
 
 
 class PipelineStats:
@@ -251,6 +258,35 @@ class WritePipeline:
         if self._fatal is not None:
             raise RuntimeError("write pipeline failed") from self._fatal
 
+    # -- introspection ------------------------------------------------------
+    def queued_bytes(self) -> int:
+        """Bytes of logical writes buffered in the pipeline (queues +
+        prepared-but-unpublished batches) — charged by
+        :meth:`RapidStore.memory_bytes` so a backed-up pipeline shows up in
+        the store's accounting instead of hiding in deques."""
+
+        def _rw_bytes(rw) -> int:
+            b = rw.ins.nbytes + rw.dels.nbytes
+            if rw.vset:
+                b += 16 * len(rw.vset)
+            return b
+
+        total = 0
+        for shard, q in enumerate(self._queues):
+            with q.cond:
+                for item in q.items:
+                    if isinstance(item, _Fence):
+                        # a fence sits in every touched queue; charge once
+                        if shard == item.shards[0]:
+                            total += _rw_bytes(item.rw)
+                    else:
+                        total += _rw_bytes(item[0])
+        with self._prep_cond:
+            for pb in self._prepared:
+                if pb.net is not None:
+                    total += _rw_bytes(pb.net)
+        return total
+
     # -- test hooks ---------------------------------------------------------
     def pause(self) -> None:
         """Stop workers from draining (submissions still enqueue)."""
@@ -261,6 +297,35 @@ class WritePipeline:
         for q in self._queues:
             with q.cond:
                 q.cond.notify_all()
+
+    # -- compactor integration ----------------------------------------------
+    @contextmanager
+    def quiesce(self):
+        """Block new submissions and drain everything in flight.
+
+        While the context is held, every queue is empty, every prepared
+        batch is committed and published, and no worker owns any subgraph —
+        the exclusive write access the compactor's repack commits need.
+        Submitters block on the enqueue lock (they do not fail) and proceed
+        when the context exits.
+        """
+        with self._enqueue_lock:
+            self.flush()
+            self.pause()
+            try:
+                yield self
+            finally:
+                self.resume()
+
+    def invalidate_heads(self, sids) -> None:
+        """Drop pending-head entries for ``sids`` (call under quiesce).
+
+        After the compactor links a repacked snapshot, the pipeline's
+        prepared-head cache for that subgraph points at the superseded
+        version; the next prepare must build on the chain head instead.
+        """
+        for sid in sids:
+            self._heads.pop(sid, None)
 
     # -- lifecycle ----------------------------------------------------------
     def stop(self) -> None:
@@ -328,7 +393,7 @@ class WritePipeline:
         self.stats.batches += 1
         with self._prep_cond:
             self._prepared.append(
-                _PreparedBatch(new_snaps, tickets, n_writes=len(writes))
+                _PreparedBatch(new_snaps, tickets, n_writes=len(writes), net=net)
             )
             self._prep_cond.notify()
 
@@ -369,9 +434,38 @@ class WritePipeline:
             try:
                 k = len(run)
                 first = store.clock.reserve(k)
-                for i, pb in enumerate(run):
-                    _txn.link_at(store, first + i, pb.new_snaps,
-                                 n_writes=pb.n_writes)
+                linked = 0
+                try:
+                    wal = store.wal
+                    for i, pb in enumerate(run):
+                        if wal is not None and pb.net is not None:
+                            wal.append_commit(
+                                first + i, pb.net.ins, pb.net.dels,
+                                pb.net.vset, store.n_vertices,
+                            )
+                        _txn.link_at(store, first + i, pb.new_snaps,
+                                     n_writes=pb.n_writes)
+                        linked += 1
+                    if wal is not None:
+                        # ONE durability barrier per drained run, mirroring
+                        # the single publish_range below
+                        wal.sync()
+                except BaseException:
+                    # Renounce the reserved-but-unlinked suffix so later
+                    # committers step over it instead of stalling to
+                    # ClockStallError; fully-linked prefix batches are
+                    # valid commits — publish them so their lineage
+                    # records match reader-visible state.
+                    if linked < k:
+                        store.clock.abandon_range(first + linked,
+                                                  first + k - 1)
+                    if linked:
+                        try:
+                            store.clock.publish_range(first,
+                                                      first + linked - 1)
+                        except BaseException:  # pragma: no cover
+                            pass  # don't mask the original failure
+                    raise
                 store.clock.publish_range(first, first + k - 1)
                 store.stats.add("commits", k)
                 store.stats.add("group_commits", k)

@@ -15,6 +15,11 @@ from pathlib import Path
 SRC = str(Path(__file__).resolve().parents[1] / "src")
 
 
+def _sub_env():
+    return {"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin:/usr/local/bin", "HOME": "/root",
+            "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")}
+
+
 def run_sub(code: str, devices: int = 8, timeout: int = 600) -> str:
     prog = (
         "import os\n"
@@ -23,11 +28,21 @@ def run_sub(code: str, devices: int = 8, timeout: int = 600) -> str:
     )
     # Forced host devices only make sense on the CPU platform; pin it so the
     # subprocess never wastes a minute probing for TPU metadata.
-    env = {"PYTHONPATH": SRC, "PATH": "/usr/bin:/bin:/usr/local/bin", "HOME": "/root",
-           "JAX_PLATFORMS": os.environ.get("JAX_PLATFORMS", "cpu")}
     res = subprocess.run(
         [sys.executable, "-c", prog],
-        capture_output=True, text=True, timeout=timeout, env=env,
+        capture_output=True, text=True, timeout=timeout, env=_sub_env(),
     )
     assert res.returncode == 0, f"STDOUT:\n{res.stdout}\nSTDERR:\n{res.stderr[-3000:]}"
     return res.stdout
+
+
+def run_sub_killable(code: str, timeout: int = 600):
+    """Run ``code`` in a subprocess that is EXPECTED to die (crash-recovery
+    tests SIGKILL themselves at injected points).  Returns the completed
+    process — callers assert on ``returncode`` (-9 for a self-SIGKILL) and
+    whatever state the child persisted before dying."""
+    res = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=_sub_env(),
+    )
+    return res

@@ -1,0 +1,65 @@
+"""Hypothesis property: compaction (and checkpoint cycles) interleaved at
+arbitrary points in an op stream never changes any view result, and the
+durable WAL/checkpoint trail recovers to the same edge set."""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import RapidStore
+
+from _parity import assert_view_matches_oracles, hypothesis_examples
+
+N = 48
+_edge = st.tuples(st.integers(0, N - 1), st.integers(0, N - 1)).filter(
+    lambda e: e[0] != e[1]
+)
+_step = st.one_of(
+    st.tuples(st.just("+"), st.lists(_edge, min_size=1, max_size=12)),
+    st.tuples(st.just("-"), st.lists(_edge, min_size=1, max_size=8)),
+    st.tuples(st.just("compact"), st.just([])),
+    st.tuples(st.just("compact_ckpt"), st.just([])),
+)
+
+
+@settings(max_examples=hypothesis_examples(25), deadline=None)
+@given(steps=st.lists(_step, min_size=3, max_size=20),
+       p=st.sampled_from([8, 16]), B=st.sampled_from([8, 16]))
+def test_compaction_never_changes_views(tmp_path_factory, steps, p, B):
+    root = tmp_path_factory.mktemp("soak")
+    store = RapidStore(N, partition_size=p, B=B, high_threshold=4, tracer_k=4)
+    store.attach_wal(root / "wal.log")
+    comp = store.attach_compactor(
+        min_waste_rows=1, checkpoint_dir=root / "checkpoints"
+    )
+    oracle = set()
+    try:
+        for kind, edges in steps:
+            if kind == "compact":
+                comp.compact_once()
+            elif kind == "compact_ckpt":
+                comp.compact_once(checkpoint=True)
+            else:
+                arr = np.asarray(edges, np.int64)
+                if kind == "+":
+                    store.insert_edges(arr)
+                    oracle |= set(edges)
+                else:
+                    store.delete_edges(arr)
+                    oracle -= set(edges)
+            with store.read_view() as view:
+                assert view.edge_set() == oracle
+        store.check_invariants()
+        with store.read_view() as view:
+            assert_view_matches_oracles(view)
+    finally:
+        store.detach_wal()
+    # and the durable trail recovers to the same edge set
+    rec = RapidStore.recover(
+        root, n_vertices=N, partition_size=p, B=B, high_threshold=4,
+        attach=False,
+    )
+    with rec.read_view() as view:
+        assert view.edge_set() == oracle

@@ -1,0 +1,463 @@
+"""WAL durability + crash recovery: framed log round-trips, torn-tail
+truncation, checkpoint-bounded replay, clock abandon/restore semantics, the
+killed-prepared-batch pipeline regression, and subprocess SIGKILL tests that
+recover mid-group-commit kills to bitwise-identical views."""
+
+import os
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import RapidStore
+from repro.core.clock import LogicalClock
+from repro.core.wal import _HEADER, KIND_REPACK, WriteAheadLog
+
+from _parity import assert_view_matches_oracles
+from _subproc import run_sub_killable
+
+
+def rand_ops(n, rounds, seed=7):
+    """Deterministic mixed op stream shared by crash children and oracles."""
+    rng = np.random.default_rng(seed)
+    ops = []
+    for i in range(rounds):
+        e = rng.integers(0, n, (6, 2), dtype=np.int64)
+        ops.append(("-", e[:2]) if i % 3 == 2 else ("+", e))
+    return ops
+
+
+def apply_ops(store, ops):
+    for kind, e in ops:
+        if kind == "+":
+            store.insert_edges(e)
+        else:
+            store.delete_edges(e)
+
+
+# ---------------------------------------------------------------------------
+# WAL file format
+# ---------------------------------------------------------------------------
+def test_wal_roundtrip(tmp_path):
+    path = tmp_path / "wal.log"
+    wal = WriteAheadLog(path, start_ts=3)
+    wal.append_commit(4, np.array([[0, 1], [2, 3]], np.int64),
+                      np.empty((0, 2), np.int64), {7: True}, 96)
+    wal.append_repack(5, [0, 2], 96)
+    wal.append_commit(6, np.empty((0, 2), np.int64),
+                      np.array([[0, 1]], np.int64), None, 96)
+    wal.sync()
+    wal.close()
+
+    start_ts, records, clean = WriteAheadLog.replay(path)
+    assert (start_ts, clean) == (3, True)
+    assert [r.ts for r in records] == [4, 5, 6]
+    assert np.array_equal(records[0].ins, [[0, 1], [2, 3]])
+    assert records[0].vset == {7: True}
+    assert records[1].kind == KIND_REPACK and records[1].sids == [0, 2]
+    assert np.array_equal(records[2].dels, [[0, 1]])
+
+
+def test_wal_torn_tail_truncated_on_reopen(tmp_path):
+    path = tmp_path / "wal.log"
+    wal = WriteAheadLog(path, start_ts=0)
+    for ts in (1, 2, 3):
+        wal.append_commit(ts, np.array([[ts, ts + 1]], np.int64),
+                          np.empty((0, 2), np.int64), None, 96)
+    wal.sync()
+    wal.close()
+
+    size = os.path.getsize(path)
+    frame = (size - _HEADER.size) // 3
+    # tear mid-way through the last frame (crash mid-append)
+    with open(path, "r+b") as f:
+        f.truncate(size - frame // 2)
+    _, records, clean = WriteAheadLog.replay(path)
+    assert not clean
+    assert [r.ts for r in records] == [1, 2]
+
+    # reopen physically truncates the torn bytes; appends resume cleanly
+    wal = WriteAheadLog(path)
+    wal.append_commit(9, np.array([[5, 6]], np.int64),
+                      np.empty((0, 2), np.int64), None, 96)
+    wal.sync()
+    wal.close()
+    _, records, clean = WriteAheadLog.replay(path)
+    assert clean and [r.ts for r in records] == [1, 2, 9]
+
+
+def test_wal_corrupt_crc_stops_scan(tmp_path):
+    path = tmp_path / "wal.log"
+    wal = WriteAheadLog(path, start_ts=0)
+    for ts in (1, 2):
+        wal.append_commit(ts, np.array([[ts, 0]], np.int64),
+                          np.empty((0, 2), np.int64), None, 8)
+    wal.sync()
+    wal.close()
+    size = os.path.getsize(path)
+    with open(path, "r+b") as f:
+        f.seek(size - 3)
+        f.write(b"\xff")  # flip payload bytes of record 2
+    _, records, clean = WriteAheadLog.replay(path)
+    assert not clean and [r.ts for r in records] == [1]
+
+
+def test_wal_reset_keeps_suffix(tmp_path):
+    path = tmp_path / "wal.log"
+    wal = WriteAheadLog(path, start_ts=0)
+    for ts in (1, 2, 3, 4):
+        wal.append_commit(ts, np.array([[ts, 0]], np.int64),
+                          np.empty((0, 2), np.int64), None, 8)
+    wal.sync()
+    wal.reset(2)  # checkpoint at ts=2: 1, 2 covered; 3, 4 must survive
+    wal.append_commit(5, np.array([[5, 0]], np.int64),
+                      np.empty((0, 2), np.int64), None, 8)
+    wal.sync()
+    wal.close()
+    start_ts, records, clean = WriteAheadLog.replay(path)
+    assert (start_ts, clean) == (2, True)
+    assert [r.ts for r in records] == [3, 4, 5]
+
+
+# ---------------------------------------------------------------------------
+# Clock abandon / restore
+# ---------------------------------------------------------------------------
+def test_clock_abandon_unblocks_later_committers():
+    c = LogicalClock()
+    t1 = c.next_commit_timestamp()
+    t2 = c.next_commit_timestamp()
+    # t2 cannot publish past the t1 gap until t1 is abandoned
+    done = threading.Event()
+    threading.Thread(target=lambda: (c.publish(t2), done.set()), daemon=True).start()
+    assert not done.wait(0.05)
+    c.abandon(t1)
+    assert done.wait(5)
+    assert c.read_timestamp() == t2
+    assert c.abandon_events == 1
+
+
+def test_clock_abandon_range_and_trailing_gap():
+    c = LogicalClock()
+    first = c.reserve(4)
+    c.abandon_range(first + 2, first + 3)  # suffix dies first
+    c.publish_range(first, first + 1)
+    # publishing the prefix steps t_r over the contiguous abandoned run
+    assert c.read_timestamp() == first + 3
+
+
+def test_clock_abandon_rejects_published_and_publish_rejects_abandoned():
+    c = LogicalClock()
+    t1 = c.next_commit_timestamp()
+    c.publish(t1)
+    with pytest.raises(RuntimeError):
+        c.abandon(t1)
+    t2 = c.next_commit_timestamp()
+    c.abandon(t2)
+    with pytest.raises(RuntimeError):
+        c.publish(t2)
+
+
+def test_clock_restore_requires_quiescence():
+    c = LogicalClock()
+    t = c.next_commit_timestamp()
+    with pytest.raises(RuntimeError):
+        c.restore(10)  # t reserved but unpublished
+    c.publish(t)
+    c.restore(10)
+    assert c.read_timestamp() == 10
+    assert c.next_commit_timestamp() == 11
+
+
+# ---------------------------------------------------------------------------
+# Commit-failure regressions: a dead writer must not stall the clock
+# ---------------------------------------------------------------------------
+class _ExplodingWal:
+    """WAL stand-in whose append fails N times, then never again."""
+
+    def __init__(self, n=1):
+        self.n = n
+
+    def append_commit(self, *a, **kw):
+        if self.n > 0:
+            self.n -= 1
+            raise OSError("disk on fire")
+
+    def append_repack(self, *a, **kw):
+        self.append_commit()
+
+    def sync(self):
+        pass
+
+    def close(self):
+        pass
+
+
+def test_single_shot_commit_failure_abandons_ts():
+    store = RapidStore(64, partition_size=16, B=8, clock_stall_timeout=5.0)
+    store.wal = _ExplodingWal(n=1)
+    with pytest.raises(OSError):
+        store.insert_edges(np.array([[1, 2]], np.int64))
+    # the drawn timestamp was abandoned: the next commit publishes instead
+    # of stalling to ClockStallError behind the dead writer's gap
+    ts = store.insert_edges(np.array([[3, 4]], np.int64))
+    assert ts == store.clock.read_timestamp()
+    with store.read_view() as v:
+        assert v.search(3, 4) and not v.search(1, 2)
+    assert store.clock.abandon_events == 1
+
+
+def test_pipeline_killed_batch_then_commits_still_publish():
+    store = RapidStore(64, partition_size=16, B=8, clock_stall_timeout=5.0)
+    store.wal = _ExplodingWal(n=1)
+    wp = store.attach_write_pipeline(n_shards=2)
+    t = store.apply_async(np.array([[1, 2]], np.int64), np.empty((0, 2), np.int64))
+    with pytest.raises(OSError):
+        t.wait()
+    # the prepared batch died mid-commit; its reserved timestamps were
+    # abandoned, so post-detach single-shot commits publish immediately
+    store.detach_write_pipeline()
+    ts = store.insert_edges(np.array([[3, 4]], np.int64))
+    assert ts == store.clock.read_timestamp()
+    with store.read_view() as v:
+        assert v.search(3, 4)
+    assert store.clock.abandon_events >= 1
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint + replay (in-process)
+# ---------------------------------------------------------------------------
+def test_recover_wal_only_matches_serial_oracle(tmp_path):
+    root = tmp_path
+    store = RapidStore(96, partition_size=16, B=8, high_threshold=4)
+    store.attach_wal(root / "wal.log")
+    ops = rand_ops(96, 30)
+    apply_ops(store, ops)
+    with store.read_view() as v:
+        want = v.edge_set()
+    store.detach_wal()
+
+    rec = RapidStore.recover(root, n_vertices=96, partition_size=16, B=8,
+                             high_threshold=4)
+    oracle = RapidStore(96, partition_size=16, B=8, high_threshold=4)
+    apply_ops(oracle, ops)
+    with rec.read_view() as v, oracle.read_view() as ov:
+        assert v.edge_set() == want
+        # bitwise layout parity with the serial oracle, every layout family
+        assert np.array_equal(v.to_coo()[0], ov.to_coo()[0])
+        assert np.array_equal(v.to_coo()[1], ov.to_coo()[1])
+        lb, olb = v.to_leaf_blocks(), ov.to_leaf_blocks()
+        assert np.array_equal(lb.src, olb.src)
+        assert np.array_equal(lb.rows, olb.rows)
+        assert np.array_equal(lb.length, olb.length)
+        assert_view_matches_oracles(v)
+    assert rec.clock.read_timestamp() == store.clock.read_timestamp()
+    # recovered store keeps serving durable writes (WAL re-attached)
+    rec.insert_edges(np.array([[0, 1]], np.int64))
+    rec.detach_wal()
+
+
+def test_recover_from_checkpoint_bounds_replay(tmp_path):
+    root = tmp_path
+    store = RapidStore(96, partition_size=16, B=8, high_threshold=4)
+    store.attach_wal(root / "wal.log")
+    ops = rand_ops(96, 24, seed=11)
+    apply_ops(store, ops[:16])
+    ckpt_ts = store.checkpoint(root / "checkpoints")
+    store.wal.reset(ckpt_ts)
+    apply_ops(store, ops[16:])
+    with store.read_view() as v:
+        want = v.edge_set()
+    store.detach_wal()
+
+    rec = RapidStore.recover(root)
+    # config restored from the checkpoint, replay bounded to the suffix
+    assert (rec.p, rec.B, rec.high_threshold) == (16, 8, 4)
+    assert rec.stats["wal_replayed"] <= len(ops) - 16
+    with rec.read_view() as v:
+        assert v.edge_set() == want
+        assert_view_matches_oracles(v)
+
+
+def test_recover_vertex_lifecycle(tmp_path):
+    root = tmp_path
+    store = RapidStore(32, partition_size=16, B=8)
+    store.attach_wal(root / "wal.log")
+    vid = store.insert_vertex()
+    assert vid == 32  # grows the id space into a fresh subgraph
+    store.insert_edges(np.array([[vid, 3], [5, 6]], np.int64))
+    store.delete_vertex(5)
+    store.detach_wal()
+
+    rec = RapidStore.recover(root, n_vertices=32, partition_size=16, B=8)
+    assert rec.n_vertices == 33
+    assert rec._free_vids == [5]
+    assert not rec.chains[0].head.active[5]
+    with rec.read_view() as v:
+        assert v.search(vid, 3) and not v.search(5, 6)
+    # the recycled id is reused, exactly as the original store would
+    assert rec.insert_vertex() == 5
+    rec.detach_wal()
+
+
+def test_recover_is_deterministic_with_repack_records(tmp_path):
+    root = tmp_path
+    store = RapidStore(96, partition_size=16, B=8, high_threshold=4)
+    store.attach_wal(root / "wal.log")
+    # hub churn: big C-ART neighbor sets, then delete every other edge so
+    # the leaves strand half-empty pool rows the compactor must repack
+    for hub in (0, 17, 33):
+        full = np.array([[hub, j] for j in range(96) if j != hub], np.int64)
+        store.insert_edges(full)
+        store.delete_edges(full[::2])
+    comp = store.attach_compactor(min_waste_rows=1)
+    report = comp.compact_once()
+    assert report.repacked, "churn should fragment at least one subgraph"
+    apply_ops(store, rand_ops(96, 6, seed=4))
+    with store.read_view() as v:
+        want = v.edge_set()
+    store.detach_wal()
+
+    kw = dict(n_vertices=96, partition_size=16, B=8, high_threshold=4,
+              attach=False)
+    rec1 = RapidStore.recover(root, **kw)
+    rec2 = RapidStore.recover(root, **kw)
+    with rec1.read_view() as v1, rec2.read_view() as v2:
+        assert v1.edge_set() == want
+        # repack records replay the layout change, so two independent
+        # recoveries agree bitwise on every tile
+        lb1, lb2 = v1.to_leaf_blocks(), v2.to_leaf_blocks()
+        assert np.array_equal(lb1.src, lb2.src)
+        assert np.array_equal(lb1.rows, lb2.rows)
+        assert np.array_equal(lb1.length, lb2.length)
+        assert_view_matches_oracles(v1)
+
+
+# ---------------------------------------------------------------------------
+# SIGKILL crash tests (subprocess, injected kill points)
+# ---------------------------------------------------------------------------
+_CRASH_CHILD = """
+import os, signal
+import numpy as np
+from repro.core import RapidStore
+
+root = {root!r}
+store = RapidStore(96, partition_size=16, B=8, high_threshold=4)
+store.attach_wal(os.path.join(root, "wal.log"))
+
+count = [0]
+def die():
+    count[0] += 1
+    if count[0] >= {kill_at}:
+        os.kill(os.getpid(), signal.SIGKILL)
+store.wal.{hook} = die
+
+rng = np.random.default_rng(7)
+for i in range(200):
+    e = rng.integers(0, 96, (6, 2), dtype=np.int64)
+    if i % 3 == 2:
+        store.delete_edges(e[:2])
+    else:
+        store.insert_edges(e)
+raise SystemExit("child outlived its kill point")
+"""
+
+
+@pytest.mark.parametrize("hook,kill_at", [
+    ("hook_after_sync", 9),    # record durable, publish never happened
+    ("hook_before_sync", 9),   # record buffered only: lost, not replayed
+])
+def test_sigkill_single_shot_recovers_to_serial_oracle(tmp_path, hook, kill_at):
+    root = str(tmp_path)
+    res = run_sub_killable(_CRASH_CHILD.format(root=root, kill_at=kill_at,
+                                               hook=hook))
+    assert res.returncode == -9, f"child survived: {res.stdout} {res.stderr}"
+
+    rec = RapidStore.recover(root, n_vertices=96, partition_size=16, B=8,
+                             high_threshold=4, attach=False)
+    k = rec.stats["wal_replayed"]
+    if hook == "hook_after_sync":
+        assert k == kill_at  # every synced commit must have survived
+    else:
+        assert k < kill_at  # the unsynced tail must NOT have survived
+
+    # serial oracle: the child's (deterministic) op stream, replayed through
+    # the ordinary write API until it reaches the k-th commit
+    oracle = RapidStore(96, partition_size=16, B=8, high_threshold=4)
+    ops = rand_ops(96, 200)
+    for kind, e in ops:
+        if oracle.stats["commits"] >= k:
+            break
+        apply_ops(oracle, [(kind, e)])
+    assert oracle.stats["commits"] == k
+    with rec.read_view() as v, oracle.read_view() as ov:
+        assert v.edge_set() == ov.edge_set()
+        assert np.array_equal(v.to_coo()[0], ov.to_coo()[0])
+        assert np.array_equal(v.to_coo()[1], ov.to_coo()[1])
+        lb, olb = v.to_leaf_blocks(), ov.to_leaf_blocks()
+        assert np.array_equal(lb.src, olb.src)
+        assert np.array_equal(lb.rows, olb.rows)
+        assert_view_matches_oracles(v)
+
+
+_CRASH_CHILD_PIPELINE = """
+import os, signal
+import numpy as np
+from repro.core import RapidStore
+
+root = {root!r}
+store = RapidStore(96, partition_size=16, B=8, high_threshold=4)
+store.attach_wal(os.path.join(root, "wal.log"))
+store.attach_write_pipeline(n_shards=2, max_batch=16)
+
+count = [0]
+def die():
+    count[0] += 1
+    if count[0] >= {kill_at}:
+        os.kill(os.getpid(), signal.SIGKILL)
+store.wal.hook_before_sync = die
+
+rng = np.random.default_rng(13)
+tickets = []
+for i in range(400):
+    e = rng.integers(0, 96, (4, 2), dtype=np.int64)
+    if i % 3 == 2:
+        tickets.append(store.apply_async(np.empty((0, 2), np.int64), e[:2]))
+    else:
+        tickets.append(store.apply_async(e, np.empty((0, 2), np.int64)))
+store.flush()
+raise SystemExit("child outlived its kill point")
+"""
+
+
+def test_sigkill_mid_group_commit_recovers_consistently(tmp_path):
+    """Kill inside a group-commit drain, before its durability barrier.
+
+    Whatever prefix of the drained run reached the kernel must replay to a
+    consistent store: the recovered edge set equals a set-semantics replay
+    of the surviving records, every layout family matches its uncached
+    oracle bitwise, and recovery is deterministic.
+    """
+    from repro.core.wal import WriteAheadLog
+
+    root = str(tmp_path)
+    res = run_sub_killable(_CRASH_CHILD_PIPELINE.format(root=root, kill_at=3))
+    assert res.returncode == -9, f"child survived: {res.stdout} {res.stderr}"
+
+    _, records, _ = WriteAheadLog.replay(os.path.join(root, "wal.log"))
+    want = set()
+    for r in records:
+        want |= {(int(u), int(v)) for u, v in r.ins}
+        want -= {(int(u), int(v)) for u, v in r.dels}
+
+    kw = dict(n_vertices=96, partition_size=16, B=8, high_threshold=4,
+              attach=False)
+    rec1 = RapidStore.recover(root, **kw)
+    rec2 = RapidStore.recover(root, **kw)
+    assert rec1.stats["wal_replayed"] == len(records)
+    with rec1.read_view() as v1, rec2.read_view() as v2:
+        assert v1.edge_set() == want
+        lb1, lb2 = v1.to_leaf_blocks(), v2.to_leaf_blocks()
+        assert np.array_equal(lb1.src, lb2.src)
+        assert np.array_equal(lb1.rows, lb2.rows)
+        assert np.array_equal(lb1.length, lb2.length)
+        assert_view_matches_oracles(v1)
