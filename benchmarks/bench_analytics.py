@@ -372,6 +372,68 @@ def bench_device_cache_analytics(name: str, n: int, edges: np.ndarray) -> None:
                t_incr * 1e6, f"uploads={device_cache.stats.uploads - u0}")
 
 
+def bench_tiered_skew(name: str, n: int, edges: np.ndarray) -> None:
+    """Skew-adaptive leaf tiering vs the single-B layout: scan + intersect
+    throughput over device-resident tiles on the power-law regimes.
+
+    Both stores hold identical edges; the tiered store uses the CI leg's
+    (64, 512) config, the baseline a pinned single-512 pool.  Kernel work
+    scales with padded tile *area*, so on a skewed degree distribution —
+    where the long tail of low-degree vertices would otherwise pad every
+    leaf out to the max width — the per-tier dispatch directly measures the
+    padding the per-degree tiers stopped paying.  Scan covers every leaf of
+    the graph; intersect runs the same vertex-sampled tile pairs through
+    both layouts (same vertices, each layout's own tile of that vertex).
+    """
+    import jax.numpy as jnp
+
+    from repro.core import view_assembler
+    from repro.kernels.intersect import intersect_tiles_view
+    from repro.kernels.spmm import leaf_scan_reduce_view
+
+    defaults = store_defaults()
+    b_max = defaults.pop("B")
+    layouts = {
+        "single_b": (b_max,),
+        "tiered": (64, b_max),
+    }
+    rng = np.random.default_rng(21)
+    x = jnp.asarray(rng.normal(size=n).astype(np.float32))
+    times = {}
+    for label, tiers in layouts.items():
+        store = RapidStore.from_edges(n, edges, leaf_tiers=tiers, **defaults)
+        with store.read_view() as view:
+            stream = view.to_leaf_stream()
+            n_tiles = len(stream.leaf_lens)
+            padded_bytes = int(stream.leaf_tiers.astype(np.int64).sum()) * 4
+            # --- scan: every leaf tile of the identical graph ---
+            leaf_scan_reduce_view(view, x).block_until_ready()  # compile+upload
+            t_scan = timeit(
+                lambda: leaf_scan_reduce_view(view, x).block_until_ready()
+            )
+            # --- intersect: one tile pair per sampled vertex pair ---
+            src, order = view_assembler.block_src_index(view)
+            verts = np.unique(src)  # same vertex set in both layouts
+            us = rng.choice(verts, size=4096)
+            first_tile = order[np.searchsorted(src[order], us, "left")]
+            pa, pb = first_tile[::2], first_tile[1::2]
+            intersect_tiles_view(view, pa, pb)  # compile
+            t_int = timeit(
+                lambda: np.asarray(intersect_tiles_view(view, pa, pb))
+            )
+        times[label] = (t_scan, t_int)
+        record(f"analytics/{name}/tiered_skew_scan_{label}", t_scan * 1e6,
+               f"tiles={n_tiles} padded_bytes={padded_bytes} "
+               f"tiles_per_s={n_tiles / max(t_scan, 1e-9) / 1e3:.0f}k")
+        record(f"analytics/{name}/tiered_skew_intersect_{label}", t_int * 1e6,
+               f"pairs={len(pa)} "
+               f"pairs_per_s={len(pa) / max(t_int, 1e-9) / 1e3:.1f}k")
+    scan_x = times["single_b"][0] / max(times["tiered"][0], 1e-9)
+    int_x = times["single_b"][1] / max(times["tiered"][1], 1e-9)
+    record(f"analytics/{name}/tiered_skew_speedup", max(scan_x, int_x),
+           f"scan={scan_x:.2f}x intersect={int_x:.2f}x tiers=64,{b_max}")
+
+
 def run(quick: bool = False) -> None:
     names = ["lj", "g5"] if quick else ["lj", "g5", "ldbc"]
     for name in names:
@@ -417,3 +479,6 @@ def run(quick: bool = False) -> None:
     # CPU-only container — only the residency timings fail loudly.
     require_accelerator("bench_analytics device-cache rows")
     bench_device_cache_analytics("lj", *dataset("lj"))
+    # skew rows: tiered vs single-B on the power-law regimes (device tiles)
+    for name in ["g5"] if quick else ["g5", "ldbc"]:
+        bench_tiered_skew(name, *dataset(name))

@@ -137,6 +137,57 @@ def bench_device_delta_splice(store, n: int) -> None:
                f"splice_speedup={t_concat / max(t_splice, 1e-9):.2f}x")
 
 
+def bench_tiered_bytes(quick: bool = False) -> None:
+    """Byte footprint of the skew-adaptive tiered layout vs single-B on a
+    power-law graph (the ``g5`` R-MAT regime).
+
+    Three axes: host pool rows (each vertex's leaves sized to its tier vs
+    every row at the max width), device-resident padded tiles (per-tier
+    fixed-shape groups vs the unified max-width layout), and the cold
+    host->device upload (the packed stream moves live bytes under both
+    layouts, so this row mostly documents that the bus cost did NOT regress
+    while the resident/padded footprints shrank)."""
+    from repro.core import view_assembler  # noqa: F401  (assembler warm path)
+
+    from .common import dataset
+
+    n, edges = dataset("g5")
+    if quick:
+        edges = edges[: len(edges) // 4]
+    b_max = 512
+    footprints = {}
+    # high_threshold below the narrow tier so the C-ART band straddles the
+    # tier boundary: with the default ht=256 every promoted vertex exceeds
+    # the narrow tier and the pool rows can't differentiate (the tail would
+    # sit in the CI, whose tiles shrink regardless — see the device row)
+    for label, tiers in (("single_b", (b_max,)), ("tiered", (64, 128, b_max))):
+        store = RapidStore.from_edges(n, edges, partition_size=64,
+                                      leaf_tiers=tiers, high_threshold=32)
+        pool = store.pool
+        pool_bytes = sum(
+            pool.pool_for(t).n_live_rows() * int(t) * 4 for t in pool.tiers
+        )
+        with store.read_view() as view:
+            device_cache.stats.reset()
+            dev = view.to_leaf_blocks_device()
+            upload_bytes = device_cache.stats.bytes_uploaded
+            if getattr(dev, "groups", None) is not None:
+                # per-tier resident bytes WITHOUT building the unified
+                # max-width compat twin (that would double-count)
+                dev_bytes = dev.device_bytes()
+            else:
+                dev_bytes = (int(dev.src.nbytes) + int(dev.rows.nbytes)
+                             + int(dev.length.nbytes))
+        footprints[label] = (pool_bytes, dev_bytes, upload_bytes)
+    s, t = footprints["single_b"], footprints["tiered"]
+    record("kernels/tiered_host_pool_bytes", float(t[0]),
+           f"single_b={s[0]} reduction={s[0] / max(t[0], 1):.1f}x")
+    record("kernels/tiered_device_resident_bytes", float(t[1]),
+           f"single_b={s[1]} reduction={s[1] / max(t[1], 1):.1f}x")
+    record("kernels/tiered_upload_bytes_packed", float(t[2]),
+           f"single_b={s[2]} ratio={s[2] / max(t[2], 1):.2f}x")
+
+
 def run(quick: bool = False) -> None:
     rng = np.random.default_rng(0)
     Q, B = (256, 512)
@@ -181,3 +232,4 @@ def run(quick: bool = False) -> None:
     # residency timings refuse to masquerade as device numbers.
     require_accelerator("bench_kernels device-cache rows")
     bench_device_tile_cache(quick=quick)
+    bench_tiered_bytes(quick=quick)

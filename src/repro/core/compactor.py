@@ -19,15 +19,22 @@ churn soak test pins).  One fold cycle:
    walk over ``VersionChain`` history the paper's writer-driven GC does
    per-commit, done store-wide.
 2. **Repack fragmented heads.**  A head snapshot whose C-ART directories
-   strand more than ``min_waste_rows`` pool rows (vs. the maximally-packed
-   ideal, counting vertices at or below ``high_threshold`` as
-   clustered-index residents) is rebuilt fully packed with
-   :func:`~repro.core.subgraph.build_subgraph` and linked as a normal
-   commit: lineage-recorded (so delta-plane successors splice the new
-   layout instead of serving stale segments) and WAL-logged as a *repack
-   record* (so crash recovery replays the identical layout change —
-   the clustered-index <-> C-ART split is path-dependent).  The old
-   version's rows free on the GC that follows.
+   strand more than ``min_waste_rows`` max-tier rows' worth of BYTES (vs.
+   the maximally-packed, tier-right-sized ideal, counting vertices at or
+   below ``high_threshold`` as clustered-index residents) is rebuilt fully
+   packed with :func:`~repro.core.subgraph.build_subgraph` and linked as a
+   normal commit: lineage-recorded (so delta-plane successors splice the
+   new layout instead of serving stale segments) and WAL-logged as a
+   *repack record* (so crash recovery replays the identical layout change —
+   the clustered-index <-> C-ART split is path-dependent).  On a tiered
+   pool the rebuild is also the ONLY tier-migration point: each directory's
+   current tier is passed as a hysteresis hint, so a vertex whose degree
+   crossed a tier boundary migrates here (WAL-logged with the repack),
+   while one hovering inside the ±25% band is held at its tier — counted
+   in ``stats['tier_migrations']`` / ``stats['tier_migrations_held']``.
+   Waste is measured in bytes, not rows, because a stranded 64-wide row
+   costs 8x less than a stranded 512-wide one.  The old version's rows
+   free on the GC that follows.
 3. **Freeze the base bundle.**  A fresh view materializes the packed
    stream (``SubgraphSnapshot.to_leaf_stream_global`` under the hood) and
    its :class:`~repro.core.view_assembler.ViewAssembly` is pinned as
@@ -71,6 +78,7 @@ class CompactionReport:
     versions_reclaimed: int = 0
     repacked: List[int] = field(default_factory=list)
     rows_freed: int = 0
+    tier_migrations: int = 0
     lineage_trimmed: int = 0
     base_ts: Optional[int] = None
     checkpoint_ts: Optional[int] = None
@@ -117,24 +125,33 @@ class Compactor:
         return min(min(active), t_r) if active else t_r
 
     # -- fragmentation test --------------------------------------------------
-    def _waste_rows(self, snap) -> int:
-        """Pool rows a fully-packed rebuild of ``snap`` would free.
+    def _waste_bytes(self, snap) -> int:
+        """Pool BYTES a fully-packed rebuild of ``snap`` would free.
 
         The clustered index is rebuilt packed on every write, so only C-ART
         leaves fragment.  A directory whose vertex would drop back to the
         clustered index on rebuild (degree <= high_threshold) frees ALL its
-        rows; the rest pack to ``ceil(degree / B)``.
+        rows; the rest pack to ``ceil(degree / w) * w`` values at the width
+        ``w`` a rebuild would pick (hysteresis applied against the current
+        tier, so a hover inside the band is not counted as waste).  Bytes,
+        not rows: on a tiered pool a stranded narrow row is cheap and a
+        stranded wide row is not, and a row count would weight them equally.
         """
         if not snap.dirs:
             return 0
-        pool, B, ht = snap.pool, snap.pool.B, snap.high_threshold
-        used = ideal = 0
+        pool, ht = snap.pool, snap.high_threshold
+        waste = 0
         for d in snap.dirs.values():
-            used += d.n_leaves
+            used = d.n_leaves * d.tier * 4
             deg = cart.degree(pool, d)
+            ideal = 0
             if deg > ht:
-                ideal += -(-deg // B)
-        return used - ideal
+                w = int(pool.tier_for_degree(deg, current=d.tier))
+                ideal = -(-deg // w) * w * 4
+            # clamp per directory: a dir due to migrate UP can have
+            # ideal > used, and that deficit must not mask real waste
+            waste += max(0, used - ideal)
+        return waste
 
     # -- one fold cycle ------------------------------------------------------
     def compact_once(self, checkpoint: bool = False) -> CompactionReport:
@@ -214,13 +231,16 @@ class Compactor:
     def _maybe_repack(self, sid: int, report: CompactionReport) -> None:
         store = self.store
         head = store.chains[sid].head
-        if self._waste_rows(head) < self.min_waste_rows:
+        # threshold in max-tier row equivalents: min_waste_rows keeps its
+        # single-tier meaning (N stranded B-wide rows) on both pool kinds
+        if self._waste_bytes(head) < self.min_waste_rows * store.pool.B * 4:
             return
         src, dst = head.to_coo_global()
         snap = build_subgraph(
             sid, store.p, store.pool,
             src - sid * store.p, dst,
             high_threshold=store.high_threshold,
+            tier_hints={int(lu): d.tier for lu, d in head.dirs.items()},
         )
         # build_subgraph assumes a fresh all-active block; carry the real
         # vertex flags over — repack must not resurrect deleted vertices
@@ -238,6 +258,20 @@ class Compactor:
             raise
         store.clock.publish(t)
         report.repacked.append(sid)
+        migrated = held = 0
+        for lu, nd in snap.dirs.items():
+            od = head.dirs.get(lu)
+            if od is None:
+                continue
+            if nd.tier != od.tier:
+                migrated += 1
+            elif int(store.pool.tier_for_degree(cart.degree(store.pool, nd))) != nd.tier:
+                held += 1
+        if migrated:
+            store.stats.add("tier_migrations", migrated)
+            report.tier_migrations += migrated
+        if held:
+            store.stats.add("tier_migrations_held", held)
 
     # -- background thread ---------------------------------------------------
     def start(self, interval: float = 1.0) -> None:

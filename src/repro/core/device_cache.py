@@ -67,7 +67,7 @@ from __future__ import annotations
 
 import os
 import threading
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Optional, Sequence, Tuple
 
 import numpy as np
@@ -145,12 +145,18 @@ def _miss() -> None:
 # Per-snapshot device tiles
 # ---------------------------------------------------------------------------
 def _gen_stamp(snap) -> Tuple[np.ndarray, np.ndarray]:
-    """Capture (leaf row ids, pool generations) backing ``snap``'s dirs."""
+    """Capture (leaf row ids, pool generations) backing ``snap``'s dirs.
+
+    Ids are gid-encoded (:meth:`TieredLeafPool.gids`) so tiered pools decode
+    them back to the owning subpool; identity on a plain pool.
+    """
     if not snap.dirs:
         e = np.empty(0, np.int64)
         return e, e
-    ids = np.concatenate([d.leaf_ids for d in snap.dirs.values()]).astype(np.int64)
-    return ids, snap.pool.generation[ids].copy()
+    ids = np.concatenate(
+        [snap.pool.gids(d.leaf_ids, d.tier) for d in snap.dirs.values()]
+    )
+    return ids, np.asarray(snap.pool.generation[ids]).copy()
 
 
 def tiles_fresh(snap) -> bool:
@@ -164,7 +170,7 @@ def tiles_fresh(snap) -> bool:
     if stamp is None:
         return True
     ids, gens = stamp
-    return bool(np.array_equal(snap.pool.generation[ids], gens))
+    return bool(np.array_equal(np.asarray(snap.pool.generation[ids]), gens))
 
 
 def _pad_tiles_on_device(data, lens, B: int):
@@ -194,18 +200,43 @@ def _pad_tiles_on_device(data, lens, B: int):
     )
 
 
-def leaf_block_tiles(snap, wait: bool = True) -> tuple:
-    """Device-resident ``(src, rows, length)`` tiles of one snapshot.
+def split_stream_by_tier(data, lens, keys, tiers):
+    """Split a packed leaf stream into per-tier packed sub-streams (host).
 
-    Memoized on the snapshot: the first call uploads the host-memoized
-    *compacted* stream — packed values, lens, keys; no SENTINEL padding
-    crosses the bus — then re-pads to the fixed-B ``[n, B]`` tile shape
-    device-side (one transfer per snapshot version, ever); repeats return
-    the pinned ``jax.Array`` tuple.  Raises RuntimeError on released
-    snapshots.
+    Returns ``{tier: (gidx, data_t, lens_t, keys_t)}`` where ``gidx`` holds
+    the ascending global leaf positions of that tier's leaves in the input
+    stream — the scatter map the per-tier device groups carry so consumers
+    can route global leaf indices to the right ``[n_t, B_t]`` group.
+    """
+    lens64 = np.asarray(lens).astype(np.int64)
+    off = np.cumsum(lens64) - lens64
+    out = {}
+    for t in np.unique(np.asarray(tiers)):
+        gidx = np.nonzero(np.asarray(tiers) == t)[0]
+        sel = lens64[gidx]
+        local_off = np.cumsum(sel) - sel
+        pos = np.arange(int(sel.sum()), dtype=np.int64) - np.repeat(local_off, sel)
+        data_t = data[np.repeat(off[gidx], sel) + pos]
+        out[int(t)] = (gidx, data_t, lens[gidx], keys[gidx])
+    return out
+
+
+def leaf_block_tiles(snap, wait: bool = True):
+    """Device-resident leaf tiles of one snapshot.
+
+    Single-tier pools: the ``(src, rows, length)`` tuple of old — the
+    host-memoized *compacted* stream is uploaded (packed values, lens, keys;
+    no SENTINEL padding crosses the bus) then re-padded to the fixed-B
+    ``[n, B]`` tile shape device-side; one transfer per snapshot version,
+    ever.  Tiered pools: a :class:`DeviceTieredBlocks` — the packed stream
+    is split per tier host-side, each tier's sub-stream uploads separately,
+    and one device-side re-pad per tier yields fixed ``[n_t, B_t]`` groups
+    (so the Pallas kernels keep fixed shapes per tier, and the resident tile
+    bytes shrink to each leaf's native width).  Memoized on the snapshot
+    either way; raises RuntimeError on released snapshots.
 
     ``wait=False`` skips the post-upload ``block_until_ready`` — the delta
-    plane's async prefetch path issues one non-blocking ``jax.device_put``
+    plane's async prefetch path issues non-blocking ``jax.device_put`` calls
     per dirty subgraph so the transfer overlaps the next subgraph's host
     materialization; JAX sequences any downstream use automatically.
     """
@@ -220,10 +251,23 @@ def leaf_block_tiles(snap, wait: bool = True) -> tuple:
             return cached
         _miss()
         # raises if released; the stream is a copy of the pool rows
-        data, _offsets, lens, keys = snap.to_leaf_stream_global()
-        up_data, up_lens, up_keys = _device_put((data, lens, keys), wait=wait)
-        rows = _pad_tiles_on_device(up_data, up_lens, snap.pool.B)
-        tiles = (up_keys, rows, up_lens)
+        data, _offsets, lens, keys, tiers = snap.to_leaf_stream_global()
+        if len(snap.pool.tiers) == 1:
+            up_data, up_lens, up_keys = _device_put((data, lens, keys), wait=wait)
+            rows = _pad_tiles_on_device(up_data, up_lens, snap.pool.B)
+            tiles = (up_keys, rows, up_lens)
+        else:
+            groups = {}
+            gidx = {}
+            for t, (gi, d_t, l_t, k_t) in split_stream_by_tier(
+                data, lens, keys, tiers
+            ).items():
+                up_d, up_l, up_k = _device_put((d_t, l_t, k_t), wait=wait)
+                groups[t] = (up_k, _pad_tiles_on_device(up_d, up_l, t), up_l)
+                gidx[t] = gi
+            tiles = DeviceTieredBlocks(
+                groups=groups, gidx=gidx, n_blocks=len(lens), B=snap.pool.B
+            )
         snap._dev_gen_stamp = _gen_stamp(snap)
         snap._dev_blocks_cache = tiles
         return tiles
@@ -342,7 +386,7 @@ def shard_leaf_tiles(snap, device, wait: bool = True) -> Tuple[tuple, int]:
             _hit()
             return cache[key], 0
         _miss()
-        data, _offsets, lens, keys = snap.to_leaf_stream_global()
+        data, _offsets, lens, keys, _tiers = snap.to_leaf_stream_global()
         return _shard_cache_put(
             snap, key, (data, lens, keys), device, wait,
             finish=lambda up: (
@@ -372,6 +416,78 @@ class DeviceLeafBlockView:
 
 
 @dataclass(frozen=True)
+class DeviceTieredBlocks:
+    """Per-tier device leaf tiles of a tiered pool.
+
+    Each tier's leaves live in their own fixed-shape group — ``groups[t] =
+    (src, rows [n_t, t], length)`` jax.Arrays padded device-side to that
+    tier's native width — so the Pallas kernels dispatch once per tier with
+    a fixed ``[*, B_t]`` shape and resident tile bytes track each leaf's
+    real width instead of the max tier.  ``gidx[t]`` (host int64, ascending)
+    maps each group row back to its global position in the unified leaf
+    stream order; consumers gathering by global leaf index
+    (edge search / intersect) ``searchsorted`` into it to find the group
+    row.  ``src``/``rows``/``length`` lazily build the unified
+    max-width twin for compatibility consumers and parity asserts.
+    """
+
+    groups: dict  # tier -> (src, rows, length) jax.Arrays
+    gidx: dict  # tier -> np.ndarray int64 global leaf positions (ascending)
+    n_blocks: int
+    B: int  # unified compat padding width (max tier)
+    _unified: list = field(default_factory=list, repr=False, compare=False)
+
+    @property
+    def tiers(self):
+        return sorted(self.groups)
+
+    def _build_unified(self) -> tuple:
+        import jax.numpy as jnp
+
+        from .leaf_pool import SENTINEL
+
+        src = jnp.zeros(self.n_blocks, jnp.int32)
+        rows = jnp.full((self.n_blocks, self.B), jnp.int32(SENTINEL))
+        length = jnp.zeros(self.n_blocks, jnp.int32)
+        for t in self.tiers:
+            s, r, l = self.groups[t]
+            gi = jnp.asarray(self.gidx[t], jnp.int32)
+            pad = self.B - int(r.shape[1])
+            if pad:
+                r = jnp.pad(r, ((0, 0), (0, pad)), constant_values=SENTINEL)
+            src = src.at[gi].set(s)
+            rows = rows.at[gi].set(r)
+            length = length.at[gi].set(l)
+        return src, rows, length
+
+    @property
+    def unified(self) -> tuple:
+        if not self._unified:
+            self._unified.append(self._build_unified())
+        return self._unified[0]
+
+    @property
+    def src(self):
+        return self.unified[0]
+
+    @property
+    def rows(self):
+        return self.unified[1]
+
+    @property
+    def length(self):
+        return self.unified[2]
+
+    def device_bytes(self) -> int:
+        total = 0
+        for cols in self.groups.values():
+            total += sum(int(a.nbytes) for a in cols)
+        if self._unified:
+            total += sum(int(a.nbytes) for a in self._unified[0])
+        return total
+
+
+@dataclass(frozen=True)
 class DeviceCSRView:
     """Device twin of :class:`~repro.core.snapshot.CSRView`."""
 
@@ -388,10 +504,14 @@ def assemble_leaf_blocks(snaps: Sequence, B: int) -> DeviceLeafBlockView:
         z = np.zeros(0, np.int32)
         src, rows, length = _device_put((z, np.zeros((0, B), np.int32), z))
         return DeviceLeafBlockView(src, rows, length)
+    cols = [
+        (p.src, p.rows, p.length) if isinstance(p, DeviceTieredBlocks) else p
+        for p in parts
+    ]
     return DeviceLeafBlockView(
-        jnp.concatenate([p[0] for p in parts]),
-        jnp.concatenate([p[1] for p in parts]),
-        jnp.concatenate([p[2] for p in parts]),
+        jnp.concatenate([c[0] for c in cols]),
+        jnp.concatenate([c[1] for c in cols]),
+        jnp.concatenate([c[2] for c in cols]),
     )
 
 
@@ -425,6 +545,8 @@ __all__ = [
     "CacheStats",
     "DeviceCSRView",
     "DeviceLeafBlockView",
+    "DeviceTieredBlocks",
+    "split_stream_by_tier",
     "assemble_coo",
     "assemble_csr",
     "assemble_leaf_blocks",

@@ -104,6 +104,9 @@ class LeafBlockView:
     src: np.ndarray  # int32 [n_blocks]
     rows: np.ndarray  # int32 [n_blocks, B]
     length: np.ndarray  # int32 [n_blocks]
+    # per-leaf native tier width (tiered pools); None when the producer
+    # didn't track tiers — rows are always padded to one common width
+    tiers: Optional[np.ndarray] = None
 
 
 @dataclass(frozen=True)
@@ -127,6 +130,7 @@ class CompactLeafStream:
     leaf_offsets: np.ndarray  # int64 [n_leaves + 1]
     leaf_lens: np.ndarray  # int32 [n_leaves]
     leaf_keys: np.ndarray  # int32 [n_leaves] — source vertex per leaf
+    leaf_tiers: np.ndarray  # int32 [n_leaves] — native leaf width (tier) per leaf
 
     @property
     def n_leaves(self) -> int:
@@ -146,6 +150,7 @@ class CompactLeafStream:
             + self.leaf_offsets.nbytes
             + self.leaf_lens.nbytes
             + self.leaf_keys.nbytes
+            + self.leaf_tiers.nbytes
         )
 
     def gather_padded(self, idx: np.ndarray, B: int) -> np.ndarray:
@@ -188,6 +193,7 @@ class CompactLeafStream:
             self.leaf_keys,
             pad_leaf_stream(self.data, self.leaf_offsets, self.leaf_lens, B),
             self.leaf_lens,
+            tiers=self.leaf_tiers,
         )
 
 
@@ -306,7 +312,14 @@ class SnapshotView:
         mask = np.arange(B)[None, :] < lens[:, None]
         offsets = np.zeros(len(lens) + 1, np.int64)
         np.cumsum(lens, out=offsets[1:])
-        return CompactLeafStream(ob.rows[mask], offsets, ob.length, ob.src)
+        tiers = (
+            ob.tiers
+            if ob.tiers is not None
+            else np.full(len(lens), B, np.int32)
+        )
+        return CompactLeafStream(
+            ob.rows[mask], offsets, ob.length, ob.src, tiers.astype(np.int32)
+        )
 
     def to_leaf_blocks(self) -> LeafBlockView:
         """Global padded leaf-tile stream (compatibility layout).
@@ -322,43 +335,59 @@ class SnapshotView:
         return view_assembler.host_blocks(self)
 
     def to_leaf_blocks_uncached(self) -> LeafBlockView:
-        """Full-rebuild reference path for the leaf-tile stream (oracle)."""
+        """Full-rebuild reference path for the leaf-tile stream (oracle).
+
+        Tier-aware: each clustered-index vertex chunks at its degree's tier
+        width and each C-ART leaf reads at its directory's tier, but every
+        row is padded out to the view's max width ``self.B`` so the result
+        is one dense matrix (the tier per leaf rides in ``tiers``).
+        """
         from .leaf_pool import SENTINEL
 
-        srcs, rows, lens = [], [], []
+        srcs, rows, lens, tiers = [], [], [], []
+        Bmax = self.B
         for s in self.snaps:
             base = s.sid * self.p
-            B = s.pool.B
             for lu in range(s.p):
                 if lu in s.dirs:
                     continue
                 seg = s.scan(lu)
                 if len(seg) == 0:
                     continue
-                for o in range(0, len(seg), B):
-                    chunk = seg[o : o + B]
-                    padded = np.full(B, SENTINEL, np.int32)
+                w = int(s.pool.tier_for_degree(len(seg)))
+                for o in range(0, len(seg), w):
+                    chunk = seg[o : o + w]
+                    padded = np.full(Bmax, SENTINEL, np.int32)
                     padded[: len(chunk)] = chunk
                     srcs.append(base + lu)
                     rows.append(padded)
                     lens.append(len(chunk))
+                    tiers.append(w)
             for lu, d in sorted(s.dirs.items()):
-                data = s.pool.data[d.leaf_ids]  # [n_leaves, B]
-                ln = s.pool.length[d.leaf_ids]
+                lp = s.pool.pool_for(d.tier)
+                data = lp.data[d.leaf_ids]  # [n_leaves, tier]
+                ln = lp.length[d.leaf_ids]
                 keep = ln > 0
                 for r, n in zip(data[keep], ln[keep]):
+                    padded = np.full(Bmax, SENTINEL, np.int32)
+                    padded[: d.tier] = r
                     srcs.append(base + lu)
-                    rows.append(r)
+                    rows.append(padded)
                     lens.append(int(n))
+                    tiers.append(d.tier)
         if not rows:
             B = self.B
             return LeafBlockView(
-                np.zeros(0, np.int32), np.zeros((0, B), np.int32), np.zeros(0, np.int32)
+                np.zeros(0, np.int32),
+                np.zeros((0, B), np.int32),
+                np.zeros(0, np.int32),
+                tiers=np.zeros(0, np.int32),
             )
         return LeafBlockView(
             np.asarray(srcs, np.int32),
             np.stack(rows).astype(np.int32),
             np.asarray(lens, np.int32),
+            tiers=np.asarray(tiers, np.int32),
         )
 
     # -- device materialization ---------------------------------------------------

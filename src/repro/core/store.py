@@ -31,7 +31,7 @@ from typing import Dict, Iterator, List, Optional, Tuple
 import numpy as np
 
 from .clock import LogicalClock
-from .leaf_pool import LeafPool
+from .leaf_pool import LeafPool, TieredLeafPool, env_leaf_tiers, parse_leaf_tiers
 from .reader_tracer import ReaderTracer
 from .snapshot import SnapshotView
 from .subgraph import SubgraphSnapshot, build_subgraph
@@ -67,6 +67,25 @@ class ReadHandle:
     view: SnapshotView
 
 
+def _make_pool(leaf_tiers, B, initial_rows):
+    """Resolve the leaf pool from tier config (paper §6.2 skew adaptation).
+
+    Precedence: explicit ``leaf_tiers`` > ``REPRO_LEAF_TIERS`` env > the
+    single-width ``B``.  A multi-tier spec builds a
+    :class:`~repro.core.leaf_pool.TieredLeafPool` whose max tier becomes the
+    store's compat width ``B``; a single-tier spec (or none) keeps the plain
+    :class:`~repro.core.leaf_pool.LeafPool` and today's exact layout.
+    Returns ``(tiers_or_None, pool)``.
+    """
+    tiers = (
+        parse_leaf_tiers(leaf_tiers) if leaf_tiers is not None else env_leaf_tiers()
+    )
+    if tiers is not None and len(tiers) > 1:
+        return tiers, TieredLeafPool(tiers=tiers, initial_capacity=initial_rows)
+    width = int(tiers[0]) if tiers is not None else int(B)
+    return None, LeafPool(B=width, initial_capacity=initial_rows)
+
+
 class RapidStore:
     """In-memory dynamic graph store for concurrent queries."""
 
@@ -79,15 +98,20 @@ class RapidStore:
         tracer_k: int = 32,
         initial_pool_rows: int = 64,
         clock_stall_timeout: float = 60.0,
+        leaf_tiers=None,
     ) -> None:
         if n_vertices <= 0:
             raise ValueError("need at least one vertex")
         self.p = int(partition_size)
-        self.B = int(B)
-        self.high_threshold = int(high_threshold if high_threshold is not None else B // 2)
+        self.leaf_tiers, self.pool = _make_pool(
+            leaf_tiers, B, initial_pool_rows
+        )
+        self.B = self.pool.B
+        self.high_threshold = int(
+            high_threshold if high_threshold is not None else self.B // 2
+        )
         self.n_vertices = int(n_vertices)
         self.n_subgraphs = -(-self.n_vertices // self.p)
-        self.pool = LeafPool(B=self.B, initial_capacity=initial_pool_rows)
         self.clock = LogicalClock(stall_timeout=clock_stall_timeout)
         self.tracer = ReaderTracer(k=tracer_k)
         self.chains: List[VersionChain] = []
@@ -133,13 +157,15 @@ class RapidStore:
             edges = np.concatenate([edges, edges[:, ::-1]])
         store = cls.__new__(cls)
         store.p = int(kw.get("partition_size", 64))
-        store.B = int(kw.get("B", 512))
+        est_rows = max(64, len(edges) // max(1, int(kw.get("B", 512))) * 2)
+        store.leaf_tiers, store.pool = _make_pool(
+            kw.get("leaf_tiers"), kw.get("B", 512), est_rows
+        )
+        store.B = store.pool.B
         ht = kw.get("high_threshold")
         store.high_threshold = int(ht if ht is not None else store.B // 2)
         store.n_vertices = int(n_vertices)
         store.n_subgraphs = -(-store.n_vertices // store.p)
-        est_rows = max(64, len(edges) // max(1, store.B) * 2)
-        store.pool = LeafPool(B=store.B, initial_capacity=est_rows)
         store.clock = LogicalClock(
             stall_timeout=kw.get("clock_stall_timeout", 60.0)
         )
@@ -502,6 +528,9 @@ class RapidStore:
             "partition_size": int(self.p),
             "B": int(self.B),
             "high_threshold": int(self.high_threshold),
+            "leaf_tiers": [int(t) for t in self.leaf_tiers]
+            if self.leaf_tiers is not None
+            else None,
         }
         _ckpt.save(directory, step=int(ts), tree=tree, extra=extra)
         self.stats.add("checkpoints", 1)
@@ -553,6 +582,11 @@ class RapidStore:
             store_kw.pop("n_vertices", None)
             for key in ("partition_size", "B", "high_threshold"):
                 store_kw[key] = extra[key]
+            # tier config is layout-determining, so the checkpoint's record
+            # beats REPRO_LEAF_TIERS: a single-B checkpoint pins a single-B
+            # pool (passing (B,) suppresses the env fallback)
+            lt = extra.get("leaf_tiers")
+            store_kw["leaf_tiers"] = tuple(lt) if lt else (extra["B"],)
             edges = np.stack([arrays["src"], arrays["dst"]], axis=1) \
                 if len(arrays["src"]) else np.empty((0, 2), np.int64)
             store = cls.from_edges(extra["n_vertices"], edges, **store_kw)
@@ -632,9 +666,13 @@ class RapidStore:
             for sid in rec.sids:
                 head = self.chains[sid].head
                 src, dst = head.to_coo_global()
+                # tier hints mirror the live compactor's: hysteresis against
+                # the pre-repack tier, which matches the original run's head
+                # by induction over the replayed record sequence
                 snap = _build(
                     sid, self.p, self.pool, src - sid * self.p, dst,
                     high_threshold=self.high_threshold,
+                    tier_hints={int(lu): d.tier for lu, d in head.dirs.items()},
                 )
                 snap.active = head.active.copy()
                 _txn.link_at(self, rec.ts, {sid: snap}, n_writes=0)

@@ -30,6 +30,28 @@ from .clustered_index import ClusteredIndex
 from .leaf_pool import SENTINEL, LeafPool
 
 
+class _SubgraphStats:
+    """Process-wide CI<->C-ART transition counters.
+
+    Promotion/demotion rebuilds are the expensive storage-kind flips; the
+    thrash regression tests counter-assert that the hysteresis band (promote
+    above ``high_threshold``, demote below half of it) bounds them under
+    degree churn around the boundary.
+    """
+
+    __slots__ = ("promotions", "demotions")
+
+    def __init__(self) -> None:
+        self.reset()
+
+    def reset(self) -> None:
+        self.promotions = 0
+        self.demotions = 0
+
+
+stats = _SubgraphStats()
+
+
 def pad_leaf_stream(
     data: np.ndarray, offsets: np.ndarray, lens: np.ndarray, B: int
 ) -> np.ndarray:
@@ -71,12 +93,13 @@ class SubgraphSnapshot:
     _coo_cache: Optional[Tuple[np.ndarray, np.ndarray]] = field(
         default=None, init=False, repr=False, compare=False
     )
-    # Compacted leaf-tile stream (data, leaf_offsets, leaf_lens, leaf_keys):
-    # the ONLY host leaf materialization cached per snapshot.  No SENTINEL
-    # padding — padded [n, B] tiles are derived on demand (device-side after
-    # upload, or host-side for the to_leaf_blocks compatibility path).
+    # Compacted leaf-tile stream (data, leaf_offsets, leaf_lens, leaf_keys,
+    # leaf_tiers): the ONLY host leaf materialization cached per snapshot.
+    # No SENTINEL padding — padded [n, B_t] tiles are derived on demand
+    # (device-side per tier group after upload, or host-side at the max tier
+    # width for the to_leaf_blocks compatibility path).
     _blocks_cache: Optional[
-        Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]
+        Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]
     ] = field(default=None, init=False, repr=False, compare=False)
     # (leaf row ids, pool generations) captured when the host stream was
     # materialized — the host twin of the device-tile generation stamp (see
@@ -185,7 +208,9 @@ class SubgraphSnapshot:
                     keep = np.union1d(orig.leaf_ids, d1.leaf_ids)
                     drop = np.setdiff1d(base.leaf_ids, keep)
                     if len(drop):
-                        self.pool.decref_many(drop)
+                        # orig/base/d1 share one tier (in-place edits never
+                        # migrate), so the set algebra stays subpool-local
+                        self.pool.pool_for(d1.tier).decref_many(drop)
                 new_dirs[int(lu)] = d1
                 changed = True
 
@@ -213,6 +238,7 @@ class SubgraphSnapshot:
                     vs = cidx.neighbors(new_ci, lu)
                     new_dirs[lu] = cart.build(self.pool, vs)
                     new_ci = cidx.extract(new_ci, lu)
+                    stats.promotions += 1
                     changed = True
 
         # --- demotion: C-ART vertex fell below half the threshold --------------
@@ -232,6 +258,7 @@ class SubgraphSnapshot:
                         cart.free(self.pool, d)  # born this txn via promotion
                     del new_dirs[lu]
                     new_ci = cidx.inject(new_ci, lu, vs)
+                    stats.demotions += 1
                     changed = True
 
         new_active = self.active
@@ -301,25 +328,48 @@ class SubgraphSnapshot:
             )
 
     def _dir_leaf_ids(self, dir_lus: np.ndarray):
-        """(leaves_per_dir, concatenated pool row ids) in (lu, leaf) order —
+        """(leaves_per_dir, pool row ids, leaf tiers) in (lu, leaf) order —
         the one definition of C-ART leaf ordering every materializer (COO,
-        compacted stream, padded blocks) shares."""
-        leaves_per = np.array(
-            [self.dirs[int(lu)].n_leaves for lu in dir_lus], np.int64
+        compacted stream, padded blocks) shares.  Row ids are local to their
+        leaf's tier subpool; ``all_tiers[i]`` names that subpool's width."""
+        ds = [self.dirs[int(lu)] for lu in dir_lus]
+        leaves_per = np.array([d.n_leaves for d in ds], np.int64)
+        all_ids = np.concatenate([d.leaf_ids for d in ds])
+        all_tiers = np.concatenate(
+            [np.full(d.n_leaves, d.tier, np.int64) for d in ds]
         )
-        all_ids = np.concatenate([self.dirs[int(lu)].leaf_ids for lu in dir_lus])
-        return leaves_per, all_ids
+        return leaves_per, all_ids, all_tiers
 
-    def _dir_leaf_gather(self, dir_lus: np.ndarray):
-        """Gather every C-ART leaf of this snapshot in (lu, leaf) order.
+    def _dir_gather_packed(self, all_ids: np.ndarray, all_tiers: np.ndarray):
+        """Packed ``(values, lens)`` for C-ART leaves in (lu, leaf) order.
 
-        Returns ``(leaves_per_dir, data, lens)`` where ``data`` is a fresh
-        ``[n_leaves, B]`` copy of the pool rows (fancy indexing copies — the
-        cache must never alias recyclable pool memory) and ``lens`` the live
-        counts.
+        Routes each leaf to its tier's subpool, gathers per tier, and
+        scatters the packed runs back into global leaf order — so the
+        emitted stream is identical to a single-pool ``gather_packed`` when
+        only one tier is populated.  All output arrays are fresh copies.
         """
-        leaves_per, all_ids = self._dir_leaf_ids(dir_lus)
-        return leaves_per, self.pool.data[all_ids], self.pool.length[all_ids]
+        tiers = self.pool.tiers
+        if len(tiers) == 1:
+            return self.pool.pool_for(tiers[0]).gather_packed(all_ids)
+        n = len(all_ids)
+        lens = np.zeros(n, np.int64)
+        parts = []
+        for t in tiers:
+            m = all_tiers == t
+            if not m.any():
+                continue
+            d, l = self.pool.pool_for(int(t)).gather_packed(all_ids[m])
+            parts.append((m, d, l))
+            lens[m] = l
+        offsets = np.cumsum(lens) - lens  # global start of each leaf's run
+        data = np.empty(int(lens.sum()), np.int32)
+        for m, d, l in parts:
+            if not len(d):
+                continue
+            local_off = np.cumsum(l) - l
+            pos = np.arange(len(d), dtype=np.int64) - np.repeat(local_off, l)
+            data[np.repeat(offsets[m], l) + pos] = d
+        return data, lens
 
     def to_coo_global(self) -> Tuple[np.ndarray, np.ndarray]:
         """(src, dst) in (u, v) order with GLOBAL src ids — memoized.
@@ -348,10 +398,10 @@ class SubgraphSnapshot:
         if not self.dirs:
             return ci_lu + base, ci_v
         dir_lus = np.fromiter(sorted(self.dirs), np.int64, len(self.dirs))
-        leaves_per, data, lens = self._dir_leaf_gather(dir_lus)
+        leaves_per, all_ids, all_tiers = self._dir_leaf_ids(dir_lus)
+        # packed live leaf contents in (lu, leaf) order — stays sorted per lu
+        dir_v, lens = self._dir_gather_packed(all_ids, all_tiers)
         lens = lens.astype(np.int64)
-        # flatten live leaf contents in (lu, leaf) order — stays sorted per lu
-        dir_v = data[np.arange(self.pool.B)[None, :] < lens[:, None]]
         starts = np.cumsum(leaves_per) - leaves_per
         deg_per_dir = np.add.reduceat(lens, starts)
         dir_lu = np.repeat(dir_lus, deg_per_dir)
@@ -381,18 +431,19 @@ class SubgraphSnapshot:
 
     def to_leaf_stream_global(
         self,
-    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
         """Memoized compacted leaf-tile stream, GLOBAL src ids.
 
-        Returns ``(data, leaf_offsets, leaf_lens, leaf_keys)``: ``data`` is
-        the packed concatenation of every leaf's live values (no SENTINEL
-        padding), leaf ``i`` spanning ``data[leaf_offsets[i] :
+        Returns ``(data, leaf_offsets, leaf_lens, leaf_keys, leaf_tiers)``:
+        ``data`` is the packed concatenation of every leaf's live values (no
+        SENTINEL padding), leaf ``i`` spanning ``data[leaf_offsets[i] :
         leaf_offsets[i + 1]]`` with ``leaf_lens[i]`` values belonging to
-        source vertex ``leaf_keys[i]``.  Leaf order matches the padded
-        layout exactly: clustered-index segments chunked to width B (in
-        local-vertex order), then one leaf per live C-ART row (directories
-        in vertex order).  Read-only, computed once per snapshot; the pool
-        rows are copied, never aliased.
+        source vertex ``leaf_keys[i]`` at leaf width ``leaf_tiers[i]``.
+        Leaf order matches the padded layout exactly: clustered-index
+        segments chunked to their degree's tier width (in local-vertex
+        order), then one leaf per live C-ART row (directories in vertex
+        order).  Read-only, computed once per snapshot; the pool rows are
+        copied, never aliased.
         """
         cached = self._blocks_cache
         if cached is None:
@@ -411,33 +462,39 @@ class SubgraphSnapshot:
 
     def _materialize_leaf_stream(
         self,
-    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
-        p, B = self.p, self.pool.B
+    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+        p = self.p
         base = self.sid * p
         # clustered index: the values array IS the packed stream; chunking a
-        # segment to width B only splits the sidecars, not the data
+        # segment to its tier width only splits the sidecars, not the data.
+        # Each CI vertex chunks at the width its degree would be assigned —
+        # one global B when the pool is single-tier.
         degs = np.diff(self.ci.offsets).astype(np.int64)
-        chunks_per = -(-degs // B)  # ceil; 0 for empty segments
+        w = self.pool.tiers_for_degrees(degs)
+        chunks_per = -(-degs // w)  # ceil; 0 for empty segments
         n_ci = int(chunks_per.sum())
         chunk_base = np.cumsum(chunks_per) - chunks_per
         ci_keys = np.repeat(np.arange(p, dtype=np.int64), chunks_per)
         c_within = np.arange(n_ci, dtype=np.int64) - np.repeat(chunk_base, chunks_per)
-        ci_lens = np.minimum(B, np.repeat(degs, chunks_per) - c_within * B)
+        rep_w = np.repeat(w, chunks_per)
+        ci_lens = np.minimum(rep_w, np.repeat(degs, chunks_per) - c_within * rep_w)
         if not self.dirs:
             # this branch returns the CI values directly: copy so the frozen
             # cache never aliases the clustered index's array
             data = self.ci.values.astype(np.int32, copy=True)
             lens = ci_lens
             keys = ci_keys
+            tiers = rep_w
         else:
             dir_lus = np.fromiter(sorted(self.dirs), np.int64, len(self.dirs))
-            leaves_per, all_ids = self._dir_leaf_ids(dir_lus)
-            d_data, d_lens = self.pool.gather_packed(all_ids)
+            leaves_per, all_ids, all_tiers = self._dir_leaf_ids(dir_lus)
+            d_data, d_lens = self._dir_gather_packed(all_ids, all_tiers)
             keep = d_lens > 0
             # concatenate copies; no defensive astype copy needed first
             data = np.concatenate([self.ci.values.astype(np.int32, copy=False), d_data])
             lens = np.concatenate([ci_lens, d_lens[keep]])
             keys = np.concatenate([ci_keys, np.repeat(dir_lus, leaves_per)[keep]])
+            tiers = np.concatenate([rep_w, all_tiers[keep]])
         offsets = np.zeros(len(lens) + 1, np.int64)
         np.cumsum(lens, out=offsets[1:])
         return (
@@ -445,28 +502,31 @@ class SubgraphSnapshot:
             offsets,
             lens.astype(np.int32),
             (keys + base).astype(np.int32),
+            tiers.astype(np.int32),
         )
 
     def to_leaf_blocks_global(self) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
         """Padded ``(src, rows, length)`` leaf-tile blocks, GLOBAL src ids.
 
         Compatibility view over :meth:`to_leaf_stream_global`: the padded
-        ``[n_leaves, B]`` tiles are reconstructed from the compacted stream
-        on every call and NOT cached — host memory only pays for padding
-        while a caller explicitly holds the result.
+        ``[n_leaves, B]`` tiles (B = the max tier width) are reconstructed
+        from the compacted stream on every call and NOT cached — host memory
+        only pays for padding while a caller explicitly holds the result.
         """
-        data, offsets, lens, keys = self.to_leaf_stream_global()
+        data, offsets, lens, keys, _tiers = self.to_leaf_stream_global()
         return keys, pad_leaf_stream(data, offsets, lens, self.pool.B), lens
 
     def _capture_gen_stamp(self) -> Tuple[np.ndarray, np.ndarray]:
-        """(leaf row ids, pool generations) backing this snapshot's dirs."""
+        """(global leaf row ids, pool generations) backing this snapshot's
+        dirs — ids are gid-encoded so tiered pools decode them back to the
+        right subpool (identity on a plain pool)."""
         if not self.dirs:
             e = np.empty(0, np.int64)
             return e, e
-        ids = np.concatenate([d.leaf_ids for d in self.dirs.values()]).astype(
-            np.int64
+        ids = np.concatenate(
+            [self.pool.gids(d.leaf_ids, d.tier) for d in self.dirs.values()]
         )
-        return ids, self.pool.generation[ids].copy()
+        return ids, np.asarray(self.pool.generation[ids]).copy()
 
     def stream_fresh(self) -> bool:
         """True iff the host stream cache still describes live pool rows.
@@ -504,7 +564,11 @@ class SubgraphSnapshot:
         """Accelerator bytes pinned by this snapshot's device tiles."""
         total = 0
         for cached in (self._dev_blocks_cache, self._dev_coo_cache):
-            if cached is not None:
+            if cached is None:
+                continue
+            if hasattr(cached, "device_bytes"):  # DeviceTieredBlocks
+                total += cached.device_bytes()
+            else:
                 total += sum(int(a.nbytes) for a in cached)
         if self._shard_dev_cache:
             for tiles in self._shard_dev_cache.values():
@@ -526,8 +590,15 @@ def build_subgraph(
     local_u: np.ndarray,
     vs: np.ndarray,
     high_threshold: int = 256,
+    tier_hints: Optional[Dict[int, int]] = None,
 ) -> SubgraphSnapshot:
-    """Bulk-build the version-0 snapshot of subgraph ``sid`` from its edges."""
+    """Bulk-build the version-0 snapshot of subgraph ``sid`` from its edges.
+
+    ``tier_hints`` maps local vertex -> the vertex's *current* leaf tier in
+    the snapshot being rebuilt (compactor repacks pass it): tier selection
+    then applies the hysteresis band around the old tier, so a repack only
+    migrates vertices whose degree drifted decisively across a boundary.
+    """
     local_u = np.asarray(local_u, np.int64)
     vs = np.asarray(vs, np.int32)
     degs = np.bincount(local_u, minlength=p)
@@ -537,7 +608,11 @@ def build_subgraph(
     for lu in high:
         m = local_u == lu
         low_mask &= ~m
-        dirs[int(lu)] = cart.build(pool, np.sort(np.unique(vs[m])))
+        vals = np.sort(np.unique(vs[m]))
+        tier = None
+        if tier_hints and int(lu) in tier_hints:
+            tier = pool.tier_for_degree(len(vals), current=tier_hints[int(lu)])
+        dirs[int(lu)] = cart.build(pool, vals, tier=tier)
     ci = cidx.build(p, local_u[low_mask], vs[low_mask])
     return SubgraphSnapshot(
         sid=sid,

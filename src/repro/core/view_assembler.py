@@ -563,18 +563,22 @@ def host_stream(view):
             return a.host_stream
         segs = _host_stream_segs(view, dirty)
         ps = pred.host_stream
-        side_segs = {s: (t[3], t[2]) for s, t in segs.items()}  # (keys, lens)
+        # (keys, lens, tiers) share the per-leaf segmentation
+        side_segs = {s: (t[3], t[2], t[4]) for s, t in segs.items()}
         data_segs = {s: (t[0],) for s, t in segs.items()}
-        (keys, lens), a.block_offsets = _splice_host_cols(
-            (ps.leaf_keys, ps.leaf_lens), pred.block_offsets, side_segs, a.S
+        (keys, lens, tiers), a.block_offsets = _splice_host_cols(
+            (ps.leaf_keys, ps.leaf_lens, ps.leaf_tiers),
+            pred.block_offsets,
+            side_segs,
+            a.S,
         )
         (data,), a.data_offsets = _splice_host_cols(
             (ps.data,), pred.data_offsets, data_segs, a.S
         )
         offsets = np.zeros(len(lens) + 1, np.int64)
         np.cumsum(lens, out=offsets[1:])
-        _freeze((data, offsets, lens, keys))
-        a.host_stream = CompactLeafStream(data, offsets, lens, keys)
+        _freeze((data, offsets, lens, keys, tiers))
+        a.host_stream = CompactLeafStream(data, offsets, lens, keys, tiers)
         _count(
             splices=1,
             spliced_segments=len(dirty),
@@ -589,16 +593,18 @@ def host_stream(view):
         data = np.zeros(0, np.int32)
         lens = np.zeros(0, np.int32)
         keys = np.zeros(0, np.int32)
+        tiers = np.zeros(0, np.int32)
     else:
         data = np.concatenate([t[0] for t in segs_l])
         lens = np.concatenate([t[2] for t in segs_l])
         keys = np.concatenate([t[3] for t in segs_l])
+        tiers = np.concatenate([t[4] for t in segs_l])
     offsets = np.zeros(len(lens) + 1, np.int64)
     np.cumsum(lens, out=offsets[1:])
-    _freeze((data, offsets, lens, keys))
+    _freeze((data, offsets, lens, keys, tiers))
     a.block_offsets = _segment_offsets([len(t[2]) for t in segs_l])
     a.data_offsets = _segment_offsets([len(t[0]) for t in segs_l])
-    a.host_stream = CompactLeafStream(data, offsets, lens, keys)
+    a.host_stream = CompactLeafStream(data, offsets, lens, keys, tiers)
     _count(full_concats=1)
     return a.host_stream
 
@@ -731,14 +737,67 @@ def _splice_device(pred_cols, pred_offsets, segs, S):
     return out, _segment_offsets(counts)
 
 
+def _device_blocks_tiered(view, a):
+    """Per-tier global device tiles for multi-tier pools.
+
+    Concatenates each tier's per-snapshot groups (per-snapshot uploads stay
+    memoized, so only dirty snapshots transfer) and rebases the per-snapshot
+    ``gidx`` maps into global leaf positions.  The predecessor *device*
+    splice stays single-tier-only — multi-tier views rebuild the O(S)
+    concat from the pinned per-snapshot groups instead; a clean predecessor
+    (empty dirty set) is still reused wholesale by the caller.
+    """
+    import jax.numpy as jnp
+
+    from . import device_cache
+
+    parts = []
+    for s in view.snaps:
+        _count(snapshot_touches=1)
+        parts.append(device_cache.leaf_block_tiles(s, wait=False))
+    nb = [p.n_blocks for p in parts]
+    base = np.cumsum([0] + nb)
+    groups = {}
+    gidx = {}
+    for t in sorted({t for p in parts for t in p.groups}):
+        cols = [p.groups[t] for p in parts if t in p.groups]
+        groups[t] = tuple(
+            jnp.concatenate([c[i] for c in cols]) for i in range(3)
+        )
+        gidx[t] = np.concatenate(
+            [p.gidx[t] + base[i] for i, p in enumerate(parts) if t in p.groups]
+        )
+    a.block_offsets = _segment_offsets(nb)
+    a.dev_blocks = device_cache.DeviceTieredBlocks(
+        groups=groups, gidx=gidx, n_blocks=int(base[-1]), B=view.B
+    )
+    _count(full_concats=1)
+    return a.dev_blocks
+
+
 def device_blocks(view):
-    """Device-resident global leaf-tile stream (delta-spliced when possible)."""
+    """Device-resident global leaf-tile stream (delta-spliced when possible).
+
+    Tiered pools route to :func:`_device_blocks_tiered` (per-tier groups);
+    single-tier pools keep the unified splice path below.
+    """
     from . import device_cache
 
     a = _bundle(view)
     if a.dev_blocks is not None:
         return a.dev_blocks
     import jax.numpy as jnp
+
+    if view.snaps and len(view.snaps[0].pool.tiers) > 1:
+        plan = _plan(view)
+        if plan is not None and plan[0].dev_blocks is not None \
+                and plan[0].block_offsets is not None \
+                and not plan[1] and plan[0].S == a.S:
+            a.block_offsets = plan[0].block_offsets
+            a.dev_blocks = plan[0].dev_blocks
+            _count(reuses=1)
+            return a.dev_blocks
+        return _device_blocks_tiered(view, a)
 
     plan = _plan(view)
     if plan is not None and plan[0].dev_blocks is not None \

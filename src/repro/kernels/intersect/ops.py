@@ -23,6 +23,8 @@ def intersect_count(a, b, q_block: int = 64, chunk: int = 128) -> jnp.ndarray:
     a = jnp.asarray(a, jnp.int32)
     b = jnp.asarray(b, jnp.int32)
     q = a.shape[0]
+    if q == 0:
+        return jnp.zeros(0, jnp.int32)
     qb = min(q_block, max(8, q))
     a = _pad(a, qb, chunk)
     b = _pad(b, qb, chunk)
@@ -60,7 +62,12 @@ def intersect_tiles_view(view, idx_a, idx_b, q_block: int = 64, chunk: int = 128
     REPRO_DISABLE_DEVICE_CACHE (host tiles re-upload per call then).
     """
     if device_cache_enabled():
-        rows = view.to_leaf_blocks_device().rows
+        dev = view.to_leaf_blocks_device()
+        if getattr(dev, "groups", None) is not None:
+            return _intersect_tiles_tiered(
+                view, dev, idx_a, idx_b, q_block=q_block, chunk=chunk
+            )
+        rows = dev.rows
         a = rows[jnp.asarray(idx_a, jnp.int32)]
         b = rows[jnp.asarray(idx_b, jnp.int32)]
     else:
@@ -70,6 +77,45 @@ def intersect_tiles_view(view, idx_a, idx_b, q_block: int = 64, chunk: int = 128
         a = jnp.asarray(stream.gather_padded(np.asarray(idx_a, np.int64), view.B))
         b = jnp.asarray(stream.gather_padded(np.asarray(idx_b, np.int64), view.B))
     return intersect_count(a, b, q_block=q_block, chunk=chunk)
+
+
+def _intersect_tiles_tiered(view, dev, idx_a, idx_b, q_block: int, chunk: int):
+    """Per-(tier_a, tier_b) pair-group dispatch for tiered device tiles.
+
+    Pairs are bucketed by their operands' tiers; each bucket gathers from
+    its two fixed-shape groups, pads the narrower operand out to the wider
+    tier, and runs one kernel call — so every dispatch keeps a fixed
+    ``[*, max(B_a, B_b)]`` shape and narrow×narrow pairs never pay the max
+    tier's lane width.
+    """
+    idx_a = np.asarray(idx_a, np.int64).reshape(-1)
+    idx_b = np.asarray(idx_b, np.int64).reshape(-1)
+    tiers = view.to_leaf_stream().leaf_tiers
+    ta = tiers[idx_a] if len(idx_a) else np.zeros(0, np.int32)
+    tb = tiers[idx_b] if len(idx_b) else np.zeros(0, np.int32)
+    out = np.zeros(len(idx_a), np.int32)
+
+    def _gather(t, idx):
+        pos = np.searchsorted(dev.gidx[int(t)], idx)
+        return dev.groups[int(t)][1][jnp.asarray(pos, jnp.int32)]
+
+    for t1 in dev.tiers:
+        for t2 in dev.tiers:
+            m = (ta == t1) & (tb == t2)
+            if not m.any():
+                continue
+            wide = max(int(t1), int(t2))
+            a = _gather(t1, idx_a[m])
+            b = _gather(t2, idx_b[m])
+            if int(a.shape[1]) < wide:
+                a = jnp.pad(a, ((0, 0), (0, wide - int(a.shape[1]))),
+                            constant_values=SENTINEL)
+            if int(b.shape[1]) < wide:
+                b = jnp.pad(b, ((0, 0), (0, wide - int(b.shape[1]))),
+                            constant_values=SENTINEL)
+            counts = intersect_count(a, b, q_block=q_block, chunk=chunk)
+            out[m] = np.asarray(counts, np.int32)
+    return jnp.asarray(out)
 
 
 def sum_intersect_tiles_view(

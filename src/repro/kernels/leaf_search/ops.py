@@ -23,6 +23,8 @@ def leaf_search(rows, targets, q_block: int = 256):
     rows = jnp.asarray(rows, jnp.int32)
     targets = jnp.asarray(targets, jnp.int32)
     q, b = rows.shape
+    if q == 0:
+        return jnp.zeros(0, bool), jnp.zeros(0, jnp.int32)
     qb = min(q_block, max(8, q))
     pad_q = (-q) % qb
     if pad_q:
@@ -58,7 +60,24 @@ def edge_search_view(view, us, vs, q_block: int = 256) -> np.ndarray:
     qidx = np.repeat(np.arange(len(us)), counts)
     flat = np.concatenate([order[l:h] for l, h in zip(lo, hi) if h > l])
     if device_cache_enabled():
-        rows_sel = view.to_leaf_blocks_device().rows[jnp.asarray(flat, jnp.int32)]
+        dev = view.to_leaf_blocks_device()
+        if getattr(dev, "groups", None) is not None:
+            # tiered tiles: route each candidate leaf to its tier group and
+            # run one fixed-[*, B_t] batched search per tier
+            tiers = view.to_leaf_stream().leaf_tiers
+            cand_t = tiers[flat]
+            for t in dev.tiers:
+                m = cand_t == t
+                if not m.any():
+                    continue
+                pos = np.searchsorted(dev.gidx[t], flat[m])
+                rows_sel = dev.groups[t][1][jnp.asarray(pos, jnp.int32)]
+                found, _ = leaf_search(
+                    rows_sel, jnp.asarray(vs[qidx[m]], jnp.int32), q_block=q_block
+                )
+                np.logical_or.at(out, qidx[m], np.asarray(found))
+            return out
+        rows_sel = dev.rows[jnp.asarray(flat, jnp.int32)]
     else:
         # host fallback reads the compacted stream natively: only the
         # candidate leaves are padded, never the full [n_leaves, B] matrix

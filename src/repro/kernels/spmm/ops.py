@@ -38,6 +38,8 @@ def leaf_scan_reduce(rows, x, n_block: int = 256) -> jnp.ndarray:
     rows = jnp.asarray(rows, jnp.int32)
     x = jnp.asarray(x, jnp.float32)
     n, b = rows.shape
+    if n == 0:
+        return jnp.zeros(0, jnp.float32)
     nb = min(n_block, max(8, n))
     pad_n = (-n) % nb
     if pad_n:
@@ -58,6 +60,8 @@ def leaf_spmm(rows, h, n_block: int = 64, v_tile: int = 512) -> jnp.ndarray:
     h = jnp.asarray(h, jnp.float32)
     n, b = rows.shape
     nv, d = h.shape
+    if n == 0:
+        return jnp.zeros((0, d), jnp.float32)
     nb = min(n_block, max(8, n))
     vt = min(v_tile, max(128, nv))
     pad_n = (-n) % nb
@@ -71,27 +75,63 @@ def leaf_spmm(rows, h, n_block: int = 64, v_tile: int = 512) -> jnp.ndarray:
     return out[:n, :d]
 
 
+def _tier_groups(blocks):
+    """``[(gidx_or_None, (src, rows, length))]`` per tier — one entry with
+    ``gidx=None`` for unified (single-tier / host) block views."""
+    groups = getattr(blocks, "groups", None)
+    if groups is None:
+        return [(None, (blocks.src, blocks.rows, blocks.length))]
+    return [(blocks.gidx[t], groups[t]) for t in blocks.tiers]
+
+
 def leaf_scan_reduce_view(view, x, n_block: int = 256) -> jnp.ndarray:
     """Per-tile scan-reduce over a view's device-resident leaf blocks.
 
     ``y[i] = sum_j x[rows[i, j]]`` for tile i of
     ``view.to_leaf_blocks_device()``; warm repeats on an unchanged view read
     the pinned device tiles and transfer nothing host->device (pass ``x`` as
-    a ``jax.Array`` to keep the whole call transfer-free).
+    a ``jax.Array`` to keep the whole call transfer-free).  On a tiered pool
+    the kernel dispatches once per tier group (fixed ``[n_t, B_t]`` shapes)
+    and scatters each group's outputs back to global tile order.
     """
-    return leaf_scan_reduce(_view_blocks(view).rows, x, n_block=n_block)
+    blocks = _view_blocks(view)
+    parts = _tier_groups(blocks)
+    if len(parts) == 1 and parts[0][0] is None:
+        return leaf_scan_reduce(blocks.rows, x, n_block=n_block)
+    out = jnp.zeros(blocks.n_blocks, jnp.float32)
+    for gidx, (_s, rows, _l) in parts:
+        y = leaf_scan_reduce(rows, x, n_block=n_block)
+        out = out.at[jnp.asarray(gidx, jnp.int32)].set(y)
+    return out
 
 
 def leaf_spmm_view(view, h, n_block: int = 64, v_tile: int = 512) -> jnp.ndarray:
-    """Per-tile SpMM (GNN messages) over device-resident leaf blocks."""
-    return leaf_spmm(_view_blocks(view).rows, h, n_block=n_block, v_tile=v_tile)
+    """Per-tile SpMM (GNN messages) over device-resident leaf blocks.
+
+    Tiered pools dispatch the kernel once per tier group and scatter the
+    per-group outputs back into global tile order.
+    """
+    blocks = _view_blocks(view)
+    parts = _tier_groups(blocks)
+    if len(parts) == 1 and parts[0][0] is None:
+        return leaf_spmm(blocks.rows, h, n_block=n_block, v_tile=v_tile)
+    h = jnp.asarray(h, jnp.float32)
+    out = jnp.zeros((blocks.n_blocks, h.shape[1]), jnp.float32)
+    for gidx, (_s, rows, _l) in parts:
+        y = leaf_spmm(rows, h, n_block=n_block, v_tile=v_tile)
+        out = out.at[jnp.asarray(gidx, jnp.int32)].set(y)
+    return out
 
 
 def spmm_view(view, h, n_block: int = 64, v_tile: int = 512) -> jnp.ndarray:
     """Per-vertex aggregated SpMM: ``Y[u] = sum_{v in N(u)} H[v]``.
 
     Runs the tile kernel then segment-sums tile outputs by their source
-    vertex — all on device, sized by the view's vertex count.
+    vertex — all on device, sized by the view's vertex count.  On a tiered
+    pool each tier group runs its own fixed-shape kernel + segment-sum and
+    the per-tier partials add up exactly: every vertex's leaves share one
+    tier (directories are homogeneous, CI vertices chunk at one width), so
+    the other tiers contribute exact zeros.
 
     Under an attached shard plane the same kernel runs per-shard over
     mesh-pinned tiles and the source-keyed partials merge with an exact
@@ -106,10 +146,20 @@ def spmm_view(view, h, n_block: int = 64, v_tile: int = 512) -> jnp.ndarray:
     if plane is not None:
         return plane.spmm(view, h, n_block=n_block, v_tile=v_tile)
     blocks = _view_blocks(view)
-    per_tile = leaf_spmm(blocks.rows, h, n_block=n_block, v_tile=v_tile)
-    return jax.ops.segment_sum(
-        per_tile, jnp.asarray(blocks.src), num_segments=view.n_vertices
-    )
+    parts = _tier_groups(blocks)
+    if len(parts) == 1 and parts[0][0] is None:
+        per_tile = leaf_spmm(blocks.rows, h, n_block=n_block, v_tile=v_tile)
+        return jax.ops.segment_sum(
+            per_tile, jnp.asarray(blocks.src), num_segments=view.n_vertices
+        )
+    h = jnp.asarray(h, jnp.float32)
+    out = jnp.zeros((view.n_vertices, h.shape[1]), jnp.float32)
+    for _gidx, (src, rows, _l) in parts:
+        per_tile = leaf_spmm(rows, h, n_block=n_block, v_tile=v_tile)
+        out = out + jax.ops.segment_sum(
+            per_tile, jnp.asarray(src), num_segments=view.n_vertices
+        )
+    return out
 
 
 __all__ = [

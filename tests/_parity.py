@@ -37,12 +37,13 @@ def rand_edges(n, m, seed=0):
     return e[e[:, 0] != e[:, 1]]
 
 
-def make_store(n=96, m=900, seed=1, p=16, B=16, ht=8, undirected=False):
+def make_store(n=96, m=900, seed=1, p=16, B=16, ht=8, undirected=False,
+               leaf_tiers=None):
     from repro.core import RapidStore
 
     return RapidStore.from_edges(
         n, rand_edges(n, m, seed), undirected=undirected,
-        partition_size=p, B=B, high_threshold=ht,
+        partition_size=p, B=B, high_threshold=ht, leaf_tiers=leaf_tiers,
     )
 
 

@@ -27,7 +27,9 @@ def hub_churn(store, hubs, n, rounds=1):
 
 
 def make_fragmented(n=96, p=16, B=8, ht=4):
-    store = RapidStore(n, partition_size=p, B=B, high_threshold=ht)
+    # pin the plain pool via a one-element tier spec: the fragmentation
+    # geometry below is tuned to B=8 and must survive a REPRO_LEAF_TIERS env
+    store = RapidStore(n, partition_size=p, high_threshold=ht, leaf_tiers=(B,))
     store.insert_edges(rand_edges(n, 300, seed=5))
     for hub in (0, 17, 33):
         full = np.array([[hub, j] for j in range(n) if j != hub], np.int64)
@@ -129,8 +131,9 @@ def test_background_compactor_runs_cycles():
 # ---------------------------------------------------------------------------
 def test_churn_soak_memory_plateaus():
     n, hubs = 128, (0, 33, 70, 101)
-    store = RapidStore(n, partition_size=16, B=8, high_threshold=4)
-    control = RapidStore(n, partition_size=16, B=8, high_threshold=4)
+    # leaf_tiers=(8,) pins the B=8 plain pool the churn geometry is tuned to
+    store = RapidStore(n, partition_size=16, high_threshold=4, leaf_tiers=(8,))
+    control = RapidStore(n, partition_size=16, high_threshold=4, leaf_tiers=(8,))
     comp = store.attach_compactor(min_waste_rows=1)
 
     warmup_mem = None
@@ -243,6 +246,119 @@ def test_splice_below_horizon_falls_back_to_base():
     # the unknowable pred window routed to the frozen base, not full concat
     assert va.stats.base_splices >= 1
     assert va.stats.fallback_lineage == 0
+
+
+# ---------------------------------------------------------------------------
+# Skew-adaptive tiering: byte-weighted waste + hysteresis counters
+# ---------------------------------------------------------------------------
+def _tier_fragment(store, vertices, promote_deg, grow_deg, drop):
+    """Promote each vertex at ``promote_deg``, grow in place to ``grow_deg``
+    (splits leaves at half fill), then delete ``drop`` interleaved neighbors
+    (every other value, so survivors strand mid-leaf instead of freeing
+    whole leaves) — the stranded half-empty rows live in whatever tier
+    promotion picked."""
+    for v in vertices:
+        nbrs = np.array(
+            [(v, (v + 1 + j) % store.n_vertices) for j in range(grow_deg)],
+            np.int64,
+        )
+        store.insert_edges(nbrs[:promote_deg])
+        if grow_deg > promote_deg:
+            store.insert_edges(nbrs[promote_deg:])
+        if drop:
+            store.delete_edges(nbrs[1::2][:drop])
+
+
+def test_waste_accounting_is_byte_weighted():
+    """Equal stranded-ROW pressure, 8x different BYTE pressure: only the
+    wide tier's fragmentation may trigger a repack (the old row rule
+    weighed a half-empty 8-wide row the same as a half-empty 64-wide one).
+    """
+    store = RapidStore(256, partition_size=16, high_threshold=4,
+                       leaf_tiers=(8, 64))
+    # sid 0: narrow-tier fragmenters (promoted at degree 6 -> tier 8)
+    _tier_fragment(store, range(8), promote_deg=6, grow_deg=12, drop=6)
+    # sid 1: wide-tier fragmenters (promoted at degree 128 -> tier 64)
+    _tier_fragment(store, range(16, 24), promote_deg=128, grow_deg=128, drop=64)
+
+    comp = store.attach_compactor(min_waste_rows=2)  # = 2 * 64 * 4 bytes
+    h0 = store.chains[0].head
+    h1 = store.chains[1].head
+
+    def stranded_rows(snap):
+        rows = 0
+        for d in snap.dirs.values():
+            from repro.core import cart
+            deg = cart.degree(store.pool, d)
+            rows += d.n_leaves - (-(-deg // d.tier))
+        return rows
+
+    r0, r1 = stranded_rows(h0), stranded_rows(h1)
+    assert r0 > 0 and r0 == r1, (r0, r1)  # identical row pressure
+    w0, w1 = comp._waste_bytes(h0), comp._waste_bytes(h1)
+    assert w1 == 8 * w0, (w0, w1)  # bytes scale with tier width
+    threshold = comp.min_waste_rows * store.pool.B * 4
+    assert w0 < threshold <= w1
+
+    report = comp.compact_once()
+    assert 1 in report.repacked and 0 not in report.repacked
+    store.check_invariants()
+    with store.read_view() as v:
+        assert_view_matches_oracles(v)
+
+
+def test_promote_demote_thrash_bounded_by_hysteresis():
+    """Churn a vertex's degree inside the (ht//2, ht] hysteresis band:
+    exactly one promotion, zero demotions.  Crossing below ht//2 then
+    demotes exactly once."""
+    from repro.core import subgraph as sg
+
+    ht = 8
+    store = RapidStore(64, partition_size=16, B=32, high_threshold=ht)
+    nbrs = np.array([[3, j] for j in range(20, 34)], np.int64)  # 14 targets
+    sg.stats.reset()
+    store.insert_edges(nbrs[: ht + 2])  # degree 10 > ht: promote once
+    assert (sg.stats.promotions, sg.stats.demotions) == (1, 0)
+    for _ in range(10):  # oscillate 10 <-> 6, never below ht//2 = 4
+        store.delete_edges(nbrs[ht - 2 : ht + 2])
+        store.insert_edges(nbrs[ht - 2 : ht + 2])
+    assert (sg.stats.promotions, sg.stats.demotions) == (1, 0), \
+        "in-band churn must not rebuild the C-ART directory"
+    store.delete_edges(nbrs[3 : ht + 2])  # degree 3 < ht//2: demote once
+    assert (sg.stats.promotions, sg.stats.demotions) == (1, 1)
+    store.insert_edges(nbrs[3 : ht + 2])  # back over ht: promote again
+    assert (sg.stats.promotions, sg.stats.demotions) == (2, 1)
+    store.check_invariants()
+
+
+def test_tier_migration_hysteresis_counters():
+    """Repack cycles migrate a drifted dir across the tier boundary but
+    hold one hovering inside the ±25% band, and the counters say which."""
+    store = RapidStore(256, partition_size=16, high_threshold=4,
+                       leaf_tiers=(8, 64))
+    # v=0: promoted at degree 6 (tier 8), grown to 40 — far past 8 * 1.25,
+    # so the next repack must migrate it up to tier 64
+    _tier_fragment(store, [0], promote_deg=6, grow_deg=40, drop=0)
+    # v=16: promoted at degree 6 (tier 8), grown to 9 — inside the band
+    # (9 <= 8 * 1.25), so repacks must hold it at tier 8
+    _tier_fragment(store, [16], promote_deg=6, grow_deg=9, drop=0)
+    assert store.chains[0].head.dirs[0].tier == 8
+    assert store.chains[1].head.dirs[0].tier == 8
+
+    comp = store.attach_compactor(min_waste_rows=0)  # always repack
+    comp.compact_once()
+    assert store.chains[0].head.dirs[0].tier == 64, "drifted dir migrates"
+    assert store.chains[1].head.dirs[0].tier == 8, "in-band dir is held"
+    assert store.stats.get("tier_migrations", 0) == 1
+    assert store.stats.get("tier_migrations_held", 0) >= 1
+    migrations_after_first = store.stats["tier_migrations"]
+    for _ in range(3):
+        comp.compact_once()
+    assert store.stats["tier_migrations"] == migrations_after_first, \
+        "hysteresis bounds migrations: repack cycles must not thrash tiers"
+    with store.read_view() as v:
+        assert_view_matches_oracles(v)
+    store.check_invariants()
 
 
 def test_splice_trimmed_window_without_base_falls_back_to_concat():

@@ -188,7 +188,10 @@ def test_write_uploads_only_dirty_subgraphs():
     from repro.core import view_assembler
 
     n = 128
-    store = make_store(n=n, m=800, seed=11)
+    # pin the plain pool: this test asserts the device predecessor-splice
+    # zero-touch contract, which only the single-B layout provides (tiered
+    # assembly is a memoized per-tier concat that *hits* clean snap caches)
+    store = make_store(n=n, m=800, seed=11, leaf_tiers=(16,))
     with store.read_view() as v1:
         v1.to_leaf_blocks_device()
         absent = next(v for v in range(2, n) if not v1.search(1, v))

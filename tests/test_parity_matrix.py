@@ -76,10 +76,15 @@ def test_view_entry_matrix(route, leg, monkeypatch):
         s = view_assembler.stats
         if leg == "splice":
             assert s.splices >= 1
-            assert s.full_concats == 0
-            # the compacted-stream splice touched only the dirty subgraphs
-            dirty = {int(u) // P for u in e[:, 0]}
-            assert s.snapshot_touches <= len(dirty) * 6  # <= dirty per layout
+            if store.leaf_tiers is None:
+                # single-B layouts: every family splices O(dirty).  Multi-tier
+                # pools legitimately full-concat the padded/device block
+                # families (memoized per-tier concat, no predecessor splice),
+                # so the O(dirty) stats contract only binds plain pools.
+                assert s.full_concats == 0
+                # the compacted-stream splice touched only the dirty subgraphs
+                dirty = {int(u) // P for u in e[:, 0]}
+                assert s.snapshot_touches <= len(dirty) * 6  # <= dirty per layout
         else:
             assert s.splices == 0
             assert s.full_concats >= 1

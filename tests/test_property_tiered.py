@@ -1,0 +1,226 @@
+"""Hypothesis property tests for skew-adaptive leaf tiering.
+
+A tiered store (per-degree leaf widths) must be INDISTINGUISHABLE from the
+single-B oracle store (B = max tier) at every content surface, across random
+write/delete/compact interleavings:
+
+- edge sets and sorted COO bitwise equal;
+- per-vertex adjacency reconstructed from the host compacted stream (and
+  from the device re-padded tier groups) bitwise equal;
+- integer-exact ``*_view`` entry points (edge search, triangle count, SpMM
+  over integer-valued features — float32 sums of small integers are exact,
+  so even the summation-grouping change from tiering cannot perturb bits);
+- every within-layout ``*_uncached`` oracle of the tiered view itself.
+
+Tile *partitioning* legitimately differs between the layouts (that is the
+point of tiering); these tests pin everything that must not.
+"""
+
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # deterministic legs below still run
+    HAVE_HYPOTHESIS = False
+
+from _parity import assert_view_matches_oracles, hypothesis_examples as _examples
+from repro.core import RapidStore
+
+N_VERTICES = 64
+P = 8
+TIERS = (8, 32)  # oracle runs single-B at max(TIERS)
+HT = 4
+
+
+def _per_vertex_from_stream(view):
+    """vertex -> np.concatenate(leaf payloads), read off the host stream."""
+    stream = view.to_leaf_stream()
+    keys = np.asarray(stream.leaf_keys)
+    out = {}
+    for i, u in enumerate(keys):
+        lo = int(stream.leaf_offsets[i])
+        hi = int(stream.leaf_offsets[i + 1])
+        out.setdefault(int(u), []).append(stream.data[lo:hi])
+    return {u: np.concatenate(parts) for u, parts in out.items()}
+
+
+def _per_vertex_from_device(view):
+    """Same map, read off the device re-padded tiles (per-tier groups when
+    tiered, the single padded tile matrix otherwise)."""
+    dev = view.to_leaf_blocks_device()
+    src = np.asarray(dev.src)
+    rows = np.asarray(dev.rows)
+    lens = np.asarray(dev.length)
+    order = np.argsort(src, kind="stable")
+    out = {}
+    for i in order:
+        out.setdefault(int(src[i]), []).append(rows[i, : lens[i]])
+    groups = getattr(dev, "groups", None)
+    if groups is not None:
+        # the per-tier fixed-shape groups must re-pad to exactly the same
+        # rows the unified compat twin exposes
+        for t in dev.tiers:
+            g_rows = np.asarray(groups[t][1])
+            assert g_rows.shape[1] == t
+            gi = np.asarray(dev.gidx[t])
+            assert np.array_equal(g_rows, rows[gi, :t])
+    return {u: np.concatenate(parts) for u, parts in out.items()}
+
+
+def _assert_stores_agree(tiered, single):
+    with tiered.read_view() as tv, single.read_view() as sv:
+        assert tv.edge_set() == sv.edge_set()
+        tc, sc = tv.to_coo(), sv.to_coo()
+        assert np.array_equal(tc[0], sc[0]) and np.array_equal(tc[1], sc[1])
+        # host stream and device re-padded tiles, per vertex
+        t_host, s_host = _per_vertex_from_stream(tv), _per_vertex_from_stream(sv)
+        assert set(t_host) == set(s_host)
+        for u in t_host:
+            assert np.array_equal(t_host[u], s_host[u]), u
+        t_dev = _per_vertex_from_device(tv)
+        assert set(t_dev) == set(t_host)
+        for u in t_dev:
+            assert np.array_equal(t_dev[u], t_host[u]), u
+        # the tiered view against its own uncached oracles, bitwise
+        assert_view_matches_oracles(tv)
+
+        # integer-exact entry points across the two layouts
+        from repro.core.analytics import triangle_count_view
+        from repro.kernels.leaf_search import edge_search_view
+        from repro.kernels.spmm import spmm_view
+
+        rng = np.random.default_rng(0)
+        qs = rng.integers(0, N_VERTICES, size=(32, 2))
+        got = edge_search_view(tv, qs[:, 0], qs[:, 1])
+        want = edge_search_view(sv, qs[:, 0], qs[:, 1])
+        assert np.array_equal(got, want)
+        H = rng.integers(-8, 8, size=(N_VERTICES, 6)).astype(np.float32)
+        assert np.array_equal(
+            np.asarray(spmm_view(tv, H)).view(np.uint32),
+            np.asarray(spmm_view(sv, H)).view(np.uint32),
+        )
+        assert triangle_count_view(tv) == triangle_count_view(sv)
+
+
+def _make_pair():
+    tiered = RapidStore(N_VERTICES, partition_size=P, high_threshold=HT,
+                        leaf_tiers=TIERS)
+    # a single-element tier spec pins the plain pool even when
+    # REPRO_LEAF_TIERS is set in the environment (the tiered CI leg)
+    single = RapidStore(N_VERTICES, partition_size=P, high_threshold=HT,
+                        leaf_tiers=(max(TIERS),))
+    assert type(tiered.pool).__name__ == "TieredLeafPool"
+    assert type(single.pool).__name__ == "LeafPool"
+    return tiered, single
+
+
+def _run_interleaving(steps):
+    tiered, single = _make_pair()
+    comp_t = tiered.attach_compactor(min_waste_rows=1)
+    comp_s = single.attach_compactor(min_waste_rows=1)
+    for s in steps:
+        if s[0] == "write":
+            _, ins, dels = s
+            ia = np.array(ins, np.int64) if ins else np.empty((0, 2), np.int64)
+            da = np.array(dels, np.int64) if dels else np.empty((0, 2), np.int64)
+            tiered.apply(ia, da)
+            single.apply(ia, da)
+        elif s[0] == "hub":
+            _, u, k = s
+            nbrs = np.array(
+                [(u, (u + 1 + j) % N_VERTICES) for j in range(k)], np.int64
+            )
+            tiered.insert_edges(nbrs)
+            single.insert_edges(nbrs)
+        elif s[0] == "compact":
+            comp_t.compact_once()
+            comp_s.compact_once()
+        else:
+            _assert_stores_agree(tiered, single)
+    _assert_stores_agree(tiered, single)
+    tiered.check_invariants()
+    single.check_invariants()
+
+
+def _churn_with_migrations(seed):
+    """Degree-drift churn: hubs grow across the tier boundary, shrink back,
+    and repack cycles migrate them — content must track the single-B oracle
+    the whole way."""
+    rng = np.random.default_rng(seed)
+    tiered, single = _make_pair()
+    comp_t = tiered.attach_compactor(min_waste_rows=0)  # repack every cycle
+    comp_s = single.attach_compactor(min_waste_rows=0)
+    hubs = rng.choice(N_VERTICES, size=3, replace=False)
+    for r in range(4):
+        for hub in hubs:
+            k = int(rng.integers(6, 40))
+            nbrs = np.array(
+                [(hub, (hub + 1 + j) % N_VERTICES) for j in range(k)], np.int64
+            )
+            for store in (tiered, single):
+                store.insert_edges(nbrs)
+                store.delete_edges(nbrs[1::2])
+        comp_t.compact_once()
+        comp_s.compact_once()
+        _assert_stores_agree(tiered, single)
+    tiered.check_invariants()
+
+
+def _rand_steps(seed):
+    rng = np.random.default_rng(seed)
+    steps = []
+    for _ in range(int(rng.integers(5, 14))):
+        roll = rng.random()
+        if roll < 0.45:
+            k = int(rng.integers(1, 8))
+            e = rng.integers(0, N_VERTICES, size=(k + 2, 2))
+            ins = [tuple(x) for x in e[:k] if x[0] != x[1]]
+            dels = [tuple(x) for x in e[k:] if x[0] != x[1]]
+            steps.append(("write", ins, dels))
+        elif roll < 0.7:
+            steps.append(("hub", int(rng.integers(0, N_VERTICES)),
+                          int(rng.integers(9, 40))))
+        elif roll < 0.85:
+            steps.append(("compact",))
+        else:
+            steps.append(("read",))
+    return steps
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3])
+def test_tiered_interleavings_match_single_b_oracle(seed):
+    _run_interleaving(_rand_steps(seed))
+
+
+@pytest.mark.parametrize("seed", [5, 11])
+def test_tiered_churn_with_migrations_matches_oracle(seed):
+    _churn_with_migrations(seed)
+
+
+if HAVE_HYPOTHESIS:
+    edge = st.tuples(
+        st.integers(0, N_VERTICES - 1), st.integers(0, N_VERTICES - 1)
+    ).filter(lambda e: e[0] != e[1])
+
+    step = st.one_of(
+        st.tuples(st.just("write"), st.lists(edge, min_size=1, max_size=8),
+                  st.lists(edge, min_size=0, max_size=5)),
+        # hub write: push one vertex's degree across a tier boundary
+        st.tuples(st.just("hub"), st.integers(0, N_VERTICES - 1),
+                  st.integers(9, 40)),
+        st.tuples(st.just("compact")),
+        st.tuples(st.just("read")),
+    )
+
+    @settings(max_examples=_examples(20), deadline=None)
+    @given(steps=st.lists(step, min_size=3, max_size=14))
+    def test_tiered_interleavings_hypothesis(steps):
+        _run_interleaving(steps)
+
+    @settings(max_examples=_examples(10), deadline=None)
+    @given(seed=st.integers(0, 2**16))
+    def test_tiered_churn_hypothesis(seed):
+        _churn_with_migrations(seed)

@@ -258,7 +258,9 @@ def test_recover_wal_only_matches_serial_oracle(tmp_path):
 
 def test_recover_from_checkpoint_bounds_replay(tmp_path):
     root = tmp_path
-    store = RapidStore(96, partition_size=16, B=8, high_threshold=4)
+    # leaf_tiers=(8,) pins B=8 even under a REPRO_LEAF_TIERS env (the
+    # recovered config is asserted exactly below)
+    store = RapidStore(96, partition_size=16, high_threshold=4, leaf_tiers=(8,))
     store.attach_wal(root / "wal.log")
     ops = rand_ops(96, 24, seed=11)
     apply_ops(store, ops[:16])
@@ -301,7 +303,8 @@ def test_recover_vertex_lifecycle(tmp_path):
 
 def test_recover_is_deterministic_with_repack_records(tmp_path):
     root = tmp_path
-    store = RapidStore(96, partition_size=16, B=8, high_threshold=4)
+    # the hub-churn fragmentation below is tuned to a plain B=8 pool
+    store = RapidStore(96, partition_size=16, high_threshold=4, leaf_tiers=(8,))
     store.attach_wal(root / "wal.log")
     # hub churn: big C-ART neighbor sets, then delete every other edge so
     # the leaves strand half-empty pool rows the compactor must repack
@@ -325,6 +328,94 @@ def test_recover_is_deterministic_with_repack_records(tmp_path):
         assert v1.edge_set() == want
         # repack records replay the layout change, so two independent
         # recoveries agree bitwise on every tile
+        lb1, lb2 = v1.to_leaf_blocks(), v2.to_leaf_blocks()
+        assert np.array_equal(lb1.src, lb2.src)
+        assert np.array_equal(lb1.rows, lb2.rows)
+        assert np.array_equal(lb1.length, lb2.length)
+        assert_view_matches_oracles(v1)
+
+
+def test_recover_roundtrips_tier_config(tmp_path, monkeypatch):
+    """The checkpoint header carries leaf_tiers; recovery restores the
+    tiered pool without it being passed in store_kw — and the checkpoint
+    beats a conflicting REPRO_LEAF_TIERS env (tier config is
+    layout-determining, so replay must use the original tiers)."""
+    root = tmp_path
+    store = RapidStore(96, partition_size=16, high_threshold=4,
+                       leaf_tiers=(8, 64))
+    store.attach_wal(root / "wal.log")
+    ops = rand_ops(96, 24, seed=3)
+    apply_ops(store, ops[:16])
+    ckpt_ts = store.checkpoint(root / "checkpoints")
+    store.wal.reset(ckpt_ts)
+    apply_ops(store, ops[16:])
+    with store.read_view() as v:
+        want = v.edge_set()
+        want_lb = v.to_leaf_blocks()
+    store.detach_wal()
+
+    monkeypatch.setenv("REPRO_LEAF_TIERS", "16,128")  # must lose
+    rec = RapidStore.recover(root, attach=False)
+    assert type(rec.pool).__name__ == "TieredLeafPool"
+    assert rec.pool.tiers == (8, 64)
+    assert rec.leaf_tiers == (8, 64) and rec.B == 64
+    with rec.read_view() as v:
+        assert v.edge_set() == want
+        lb = v.to_leaf_blocks()
+        assert np.array_equal(lb.src, want_lb.src)
+        assert np.array_equal(lb.rows, want_lb.rows)
+        assert np.array_equal(lb.length, want_lb.length)
+        assert_view_matches_oracles(v)
+
+    # and a single-B checkpoint pins a single-B pool despite the env
+    root2 = tmp_path / "single"
+    root2.mkdir()
+    # leaf_tiers=(8,) pins a plain pool while the env var is still set
+    s2 = RapidStore(96, partition_size=16, high_threshold=4, leaf_tiers=(8,))
+    s2.attach_wal(root2 / "wal.log")
+    apply_ops(s2, ops[:4])
+    s2.checkpoint(root2 / "checkpoints")
+    s2.detach_wal()
+    rec2 = RapidStore.recover(str(root2), attach=False)
+    assert type(rec2.pool).__name__ == "LeafPool" and rec2.B == 8
+
+
+def test_recover_is_deterministic_with_tier_migrations(tmp_path):
+    """Repack records on a tiered store replay the tier migrations too:
+    two independent recoveries agree bitwise on every tile, and recovered
+    directory tiers equal the live store's."""
+    root = tmp_path
+    store = RapidStore(96, partition_size=16, high_threshold=4,
+                       leaf_tiers=(8, 64))
+    store.attach_wal(root / "wal.log")
+    # grow hubs from the narrow tier across the boundary, then churn
+    for hub in (0, 17, 33):
+        nbrs = np.array([[hub, j] for j in range(96) if j != hub], np.int64)
+        store.insert_edges(nbrs[:6])    # promote into tier 8
+        store.insert_edges(nbrs[6:])    # drift far past the boundary
+        store.delete_edges(nbrs[1::2])
+    comp = store.attach_compactor(min_waste_rows=0)  # repack every head
+    report = comp.compact_once()
+    assert report.repacked
+    assert store.stats.get("tier_migrations", 0) > 0
+    apply_ops(store, rand_ops(96, 6, seed=4))
+    want_tiers = {
+        sid: {int(lu): d.tier for lu, d in store.chains[sid].head.dirs.items()}
+        for sid in range(store.n_subgraphs)
+    }
+    with store.read_view() as v:
+        want = v.edge_set()
+    store.detach_wal()
+
+    kw = dict(n_vertices=96, partition_size=16, high_threshold=4,
+              leaf_tiers=(8, 64), attach=False)
+    rec1 = RapidStore.recover(root, **kw)
+    rec2 = RapidStore.recover(root, **kw)
+    for sid, tiers in want_tiers.items():
+        got = {int(lu): d.tier for lu, d in rec1.chains[sid].head.dirs.items()}
+        assert got == tiers, f"sid {sid}: recovered tiers diverge"
+    with rec1.read_view() as v1, rec2.read_view() as v2:
+        assert v1.edge_set() == want
         lb1, lb2 = v1.to_leaf_blocks(), v2.to_leaf_blocks()
         assert np.array_equal(lb1.src, lb2.src)
         assert np.array_equal(lb1.rows, lb2.rows)
@@ -427,6 +518,70 @@ for i in range(400):
 store.flush()
 raise SystemExit("child outlived its kill point")
 """
+
+
+_CRASH_CHILD_TIERED = """
+import os, signal
+import numpy as np
+from repro.core import RapidStore
+
+root = {root!r}
+store = RapidStore(96, partition_size=16, high_threshold=4,
+                   leaf_tiers=(8, 64))
+store.attach_wal(os.path.join(root, "wal.log"))
+comp = store.attach_compactor(min_waste_rows=1)
+
+count = [0]
+def die():
+    count[0] += 1
+    if count[0] >= {kill_at}:
+        os.kill(os.getpid(), signal.SIGKILL)
+store.wal.hook_after_sync = die
+
+rng = np.random.default_rng(7)
+for i in range(200):
+    e = rng.integers(0, 96, (6, 2), dtype=np.int64)
+    if i % 3 == 2:
+        store.delete_edges(e[:2])
+    else:
+        store.insert_edges(e)
+    if i % 8 == 7:
+        comp.compact_once()  # repack records (tier migrations) hit the WAL
+raise SystemExit("child outlived its kill point")
+"""
+
+
+def test_sigkill_tiered_recovers_consistently(tmp_path):
+    """SIGKILL a tiered store mid-run (repack/migration records in the log):
+    recovery must replay the surviving records onto a tiered pool,
+    deterministically, with every layout family matching its oracle."""
+    from repro.core.wal import KIND_COMMIT, WriteAheadLog
+
+    root = str(tmp_path)
+    res = run_sub_killable(_CRASH_CHILD_TIERED.format(root=root, kill_at=25))
+    assert res.returncode == -9, f"child survived: {res.stdout} {res.stderr}"
+
+    _, records, _ = WriteAheadLog.replay(os.path.join(root, "wal.log"))
+    want = set()
+    for r in records:
+        if r.kind == KIND_COMMIT:
+            want |= {(int(u), int(v)) for u, v in r.ins}
+            want -= {(int(u), int(v)) for u, v in r.dels}
+
+    kw = dict(n_vertices=96, partition_size=16, high_threshold=4,
+              leaf_tiers=(8, 64), attach=False)
+    rec1 = RapidStore.recover(root, **kw)
+    rec2 = RapidStore.recover(root, **kw)
+    assert type(rec1.pool).__name__ == "TieredLeafPool"
+    assert rec1.stats["wal_replayed"] == len(records)
+    with rec1.read_view() as v1, rec2.read_view() as v2:
+        assert v1.edge_set() == want
+        lb1, lb2 = v1.to_leaf_blocks(), v2.to_leaf_blocks()
+        assert np.array_equal(lb1.src, lb2.src)
+        assert np.array_equal(lb1.rows, lb2.rows)
+        assert np.array_equal(lb1.length, lb2.length)
+        assert_view_matches_oracles(v1)
+    rec1.check_invariants()
 
 
 def test_sigkill_mid_group_commit_recovers_consistently(tmp_path):
