@@ -15,6 +15,15 @@ no args = phases 1+2, the fast concurrency gate):
    provide, then one crash-recovery cycle back to the same edge set.
    ``REPRO_SOAK_COMMITS`` scales the commit count (default 6000; the
    nightly leg runs 50k+).
+
+Telemetry rides along in every phase: tracing is force-enabled, each phase
+prints ``store.telemetry_report()``, and span-balance invariants are
+asserted from the tracer's wraparound-proof per-name counts — every
+``begin_read`` produced a closed ``read`` span and the ``commit`` span
+count matches ``stats["commits"]`` exactly.  Phase 2 additionally dumps
+the span ring as Chrome trace-event JSON (Perfetto-loadable) and verifies
+one commit is traceable end to end: enqueue (ticket seq) -> wal_sync ->
+publish (ts range) -> commit (exact ts) -> first reader view at that ts.
 """
 import sys
 import threading
@@ -22,10 +31,64 @@ import threading
 import numpy as np
 
 from repro.core import RapidStore
+from repro import obs
+from repro.obs.trace import TRACER
 
 PHASES = {int(a) for a in sys.argv[1:] if a.isdigit()} or {1, 2}
 
+EMPTY_EDGES = np.empty((0, 2), np.int64)
+
 history_lock = threading.Lock()
+
+
+def _assert_span_balance(store, c0, label):
+    """Span-balance invariants from the pre-phase count snapshot ``c0``."""
+    assert store.stats["reads_begun"] == store.stats["reads_ended"], (
+        f"{label}: unclosed reads: {store.stats['reads_begun']} begun vs "
+        f"{store.stats['reads_ended']} ended"
+    )
+    d_commit = TRACER.count("commit") - c0.get("commit", 0)
+    assert d_commit == store.stats["commits"], (
+        f"{label}: commit spans ({d_commit}) != stats['commits'] "
+        f"({store.stats['commits']})"
+    )
+    d_read = TRACER.count("read") - c0.get("read", 0)
+    assert d_read == store.stats["reads_ended"], (
+        f"{label}: read spans ({d_read}) != closed reads "
+        f"({store.stats['reads_ended']})"
+    )
+
+
+def _verify_trace_chain(root, seq, ts):
+    """Dump the span ring as Chrome trace JSON and re-read it, asserting one
+    commit is traceable end to end at timestamp ``ts``: its enqueue span
+    (ticket ``seq``), a wal_sync + publish span whose ts range covers it,
+    the commit span itself, and a reader view pinned at ``ts``."""
+    import json
+    import os
+
+    path = obs.write_chrome_trace(os.path.join(root, "trace.json"))
+    events = json.load(open(path))["traceEvents"]
+    assert events, "empty Perfetto trace"
+    by_name = {}
+    for e in events:
+        by_name.setdefault(e["name"], []).append(e)
+
+    def covers(e):
+        a = e["args"]
+        return a.get("ts_first", a.get("ts")) <= ts <= a.get("ts_last", a.get("ts"))
+
+    assert any(e["args"].get("seq") == seq for e in by_name.get("enqueue", ())), \
+        f"no enqueue span for ticket seq={seq}"
+    for stage in ("wal_sync", "publish"):
+        assert any(covers(e) for e in by_name.get(stage, ())), \
+            f"no {stage} span covering commit ts={ts}"
+    assert any(e["args"].get("ts") == ts for e in by_name.get("commit", ())), \
+        f"no commit span at ts={ts}"
+    assert any(e["args"].get("ts") == ts for e in by_name.get("read", ())), \
+        f"no read span pinned at ts={ts}"
+    print(f"trace chain verified @ ts={ts}: enqueue(seq={seq}) -> wal_sync "
+          f"-> publish -> commit -> read ({len(events)} events in {path})")
 
 
 # ---------------------------------------------------------------------------
@@ -33,6 +96,7 @@ history_lock = threading.Lock()
 # ---------------------------------------------------------------------------
 def phase1():
     n = 256
+    c0 = TRACER.counts()
     store = RapidStore(n, partition_size=16, B=32, tracer_k=16)
 
     history = []  # (commit_ts, op, edges)
@@ -100,6 +164,8 @@ def phase1():
         )
 
     store.check_invariants()
+    _assert_span_balance(store, c0, "phase1")
+    print(store.telemetry_report())
     print(f"commits={len(history)} observations={len(observations)} "
           f"max_chain={store.chain_lengths().max()} "
           f"reclaimed={store.stats['versions_reclaimed']}")
@@ -114,8 +180,17 @@ def phase1():
 # (ts == 0) changed nothing at their serialization point and are skipped.
 # ---------------------------------------------------------------------------
 def phase2():
+    import os
+    import shutil
+    import tempfile
+
     n = 256
+    c0 = TRACER.counts()
+    root = tempfile.mkdtemp(prefix="rapidstore-smoke2-")
     pstore = RapidStore(n, partition_size=16, B=32, tracer_k=16)
+    # WAL on (group durability barrier per drained run) so the trace shows
+    # the full commit lifecycle: enqueue -> prepare -> wal_sync -> publish
+    pstore.attach_wal(os.path.join(root, "wal.log"), fsync=False)
     wp = pstore.attach_write_pipeline(n_shards=4, max_batch=64)
 
     phistory = []  # (ticket, op, edges)
@@ -192,12 +267,28 @@ def phase2():
         )
 
     pstore.check_invariants()
+
+    # -- deterministic epilogue: one traceable write, then the first read
+    # at exactly its commit timestamp (no concurrent writers left)
+    ep_ticket = pstore.apply_async(np.array([[7, 11]], np.int64), EMPTY_EDGES)
+    ep_ts = ep_ticket.wait(timeout=30)
+    assert ep_ts > 0
+    with pstore.read_view() as view:
+        assert view.ts == ep_ts
+        view.edge_set()
+
+    _assert_span_balance(pstore, c0, "phase2")
+    _verify_trace_chain(root, ep_ticket.seq, ep_ts)
+
     ws = wp.stats
     pstore.detach_write_pipeline()
+    pstore.detach_wal()
+    print(pstore.telemetry_report())
     print(f"pipeline: writes={ws.writes} batches={ws.batches} fences={ws.fences} "
           f"commits={pstore.stats['commits']} "
           f"group_commits={pstore.stats.get('group_commits', 0)} "
           f"observations={len(pobservations)}")
+    shutil.rmtree(root, ignore_errors=True)
     print("PIPELINE SMOKE PASSED")
 
 
@@ -216,6 +307,7 @@ def phase3():
     import tempfile
 
     n = 256
+    c0 = TRACER.counts()
     hubs = list(range(0, n, 37))
     window = 48  # live sliding-window neighbors per hub
     total_commits = int(os.environ.get("REPRO_SOAK_COMMITS", "6000"))
@@ -272,6 +364,8 @@ def phase3():
         store.insert_edges(np.array([[1, (100 + k) % n]], np.int64))
     with store.read_view() as v:
         want = v.edge_set()
+    _assert_span_balance(store, c0, "phase3")
+    print(store.telemetry_report())
     store.detach_compactor()
     store.detach_wal()
 
@@ -297,6 +391,7 @@ def phase3():
 
 
 if __name__ == "__main__":
+    obs.enable()  # span tracing on for the whole smoke, REPRO_TELEMETRY or not
     if 1 in PHASES:
         phase1()
     if 2 in PHASES:

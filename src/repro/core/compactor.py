@@ -68,6 +68,7 @@ import numpy as np
 from . import cart
 from . import txn as _txn
 from .subgraph import build_subgraph
+from ..obs.trace import TRACER as _trc
 
 
 @dataclass
@@ -159,6 +160,7 @@ class Compactor:
         concurrent readers and writers (quiesces the pipeline / takes the
         per-subgraph locks around each repack commit)."""
         store = self.store
+        tok = _trc.begin()
         wp = store.write_pipeline
         if wp is not None:
             with wp.quiesce():
@@ -166,6 +168,12 @@ class Compactor:
                 wp.invalidate_heads(report.repacked)
         else:
             report = self._fold(locked=False)
+        _trc.end(tok, "compactor_fold", cat="compact", ts=report.horizon, args={
+            "versions_reclaimed": report.versions_reclaimed,
+            "repacked": len(report.repacked),
+            "rows_freed": report.rows_freed,
+            "lineage_trimmed": report.lineage_trimmed,
+        })
         if checkpoint and self.checkpoint_dir is not None:
             from ..checkpoint import manager as _ckpt
 

@@ -72,38 +72,60 @@ from typing import Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..obs import metrics as _metrics
+from ..obs.trace import TRACER as _trc
+
 
 # ---------------------------------------------------------------------------
 # Cache statistics — the observable transfer contract
 # ---------------------------------------------------------------------------
-@dataclass
 class CacheStats:
     """Counters for the device tile cache (process-wide, lock-protected).
 
     ``uploads`` counts ``jax.device_put`` calls on leaf-block / COO arrays —
     the acceptance criterion "warm repeat performs zero host->device
     transfers" is asserted as ``uploads`` staying flat across the repeat.
+
+    Backed by :mod:`repro.obs.metrics` counters (``device_cache_<field>`` on
+    the process registry), so the same values feed Prometheus exports and
+    ``telemetry_report()``; each increment holds the field's counter lock,
+    so concurrent readers racing on hit/miss paths never lose counts.
     """
 
-    hits: int = 0
-    misses: int = 0
-    uploads: int = 0
-    bytes_uploaded: int = 0
-    releases: int = 0
+    _FIELDS = ("hits", "misses", "uploads", "bytes_uploaded", "releases")
+
+    def __init__(self, registry: Optional[_metrics.MetricsRegistry] = None) -> None:
+        reg = registry if registry is not None else _metrics.REGISTRY
+        self._c = {f: reg.counter("device_cache_" + f) for f in self._FIELDS}
+
+    def __getattr__(self, name: str):
+        c = self.__dict__["_c"].get(name)
+        if c is None:
+            raise AttributeError(name)
+        return c.value
+
+    def add(self, name: str, delta: int = 1) -> None:
+        self._c[name].add(delta)
+
+    def hit_ratio(self) -> float:
+        """Fraction of tile requests served without an upload (0.0 when idle)."""
+        h, m = self._c["hits"].value, self._c["misses"].value
+        return h / (h + m) if (h + m) else 0.0
 
     def reset(self) -> None:
-        self.hits = 0
-        self.misses = 0
-        self.uploads = 0
-        self.bytes_uploaded = 0
-        self.releases = 0
+        for c in self._c.values():
+            c.reset()
 
     def snapshot(self) -> Tuple[int, int, int, int, int]:
-        return (self.hits, self.misses, self.uploads, self.bytes_uploaded, self.releases)
+        return tuple(self._c[f].value for f in self._FIELDS)
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        body = ", ".join(f"{f}={self._c[f].value}" for f in self._FIELDS)
+        return f"CacheStats({body})"
 
 
 stats = CacheStats()
-_lock = threading.Lock()
+_metrics.REGISTRY.gauge("device_cache_hit_ratio", fn=stats.hit_ratio)
 # Serializes the miss path: without it two readers racing on a fresh
 # snapshot would both materialize + upload (benign data-wise — snapshots are
 # immutable — but it double-counts stats and transiently doubles device
@@ -119,26 +141,28 @@ def enabled() -> bool:
 def _device_put(host_arrays: Sequence[np.ndarray], wait: bool = True) -> tuple:
     import jax
 
+    tok = _trc.begin()
     out = tuple(jax.device_put(a) for a in host_arrays)
     if wait:
         for o in out:
             o.block_until_ready()
-    with _lock:
-        stats.uploads += len(host_arrays)
-        # charge the *device* bytes: device_put canonicalizes int64 -> int32
-        # under default x64-disabled JAX, halving the resident size
-        stats.bytes_uploaded += int(sum(o.nbytes for o in out))
+    stats.add("uploads", len(host_arrays))
+    # charge the *device* bytes: device_put canonicalizes int64 -> int32
+    # under default x64-disabled JAX, halving the resident size
+    nbytes = int(sum(o.nbytes for o in out))
+    stats.add("bytes_uploaded", nbytes)
+    if tok:
+        _trc.end(tok, "upload", cat="read",
+                 args={"nbytes": nbytes, "n_arrays": len(host_arrays)})
     return out
 
 
 def _hit() -> None:
-    with _lock:
-        stats.hits += 1
+    stats.add("hits")
 
 
 def _miss() -> None:
-    with _lock:
-        stats.misses += 1
+    stats.add("misses")
 
 
 # ---------------------------------------------------------------------------
@@ -186,18 +210,23 @@ def _pad_tiles_on_device(data, lens, B: int):
 
     from .leaf_pool import SENTINEL
 
+    tok = _trc.begin()
     n = int(lens.shape[0])
     if int(data.shape[0]) == 0:
         # no live values (possibly no tiles at all): pure-SENTINEL tiles,
         # derived from ``lens`` so the result stays on its device
-        return jnp.broadcast_to(lens[:, None] * 0 + jnp.int32(SENTINEL), (n, B))
-    off = jnp.cumsum(lens) - lens
-    col = jnp.arange(B, dtype=lens.dtype)
-    mask = col[None, :] < lens[:, None]
-    safe = jnp.where(mask, off[:, None] + col[None, :], 0)
-    return jnp.where(
-        mask, jnp.take(data, safe.reshape(-1)).reshape(n, B), jnp.int32(SENTINEL)
-    )
+        out = jnp.broadcast_to(lens[:, None] * 0 + jnp.int32(SENTINEL), (n, B))
+    else:
+        off = jnp.cumsum(lens) - lens
+        col = jnp.arange(B, dtype=lens.dtype)
+        mask = col[None, :] < lens[:, None]
+        safe = jnp.where(mask, off[:, None] + col[None, :], 0)
+        out = jnp.where(
+            mask, jnp.take(data, safe.reshape(-1)).reshape(n, B), jnp.int32(SENTINEL)
+        )
+    if tok:
+        _trc.end(tok, "tier_repad", cat="read", args={"n_tiles": n, "B": B})
+    return out
 
 
 def split_stream_by_tier(data, lens, keys, tiers):
@@ -303,8 +332,7 @@ def note_release(snap) -> None:
         or snap._dev_coo_cache is not None
         or snap._shard_dev_cache
     ):
-        with _lock:
-            stats.releases += 1
+        stats.add("releases")
 
 
 # ---------------------------------------------------------------------------
@@ -328,14 +356,18 @@ def _shard_cache_put(snap, key, host_arrays, device, wait, finish=None):
     """
     import jax
 
+    tok = _trc.begin()
     up = tuple(jax.device_put(a, device) for a in host_arrays)
     if wait:
         for t in up:
             t.block_until_ready()
     nbytes = int(sum(int(t.nbytes) for t in up))
-    with _lock:
-        stats.uploads += len(host_arrays)
-        stats.bytes_uploaded += nbytes
+    stats.add("uploads", len(host_arrays))
+    stats.add("bytes_uploaded", nbytes)
+    if tok:
+        _trc.end(tok, "upload", cat="read",
+                 args={"nbytes": nbytes, "n_arrays": len(host_arrays),
+                       "device": int(device.id)})
     tiles = up if finish is None else finish(up)
     if snap._shard_dev_cache is None:
         snap._shard_dev_cache = {}

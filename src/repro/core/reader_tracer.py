@@ -17,6 +17,8 @@ from __future__ import annotations
 import threading
 from typing import List
 
+from ..obs.metrics import REGISTRY as _REGISTRY
+
 _STATUS_BIT = 1 << 63
 _TS_MASK = _STATUS_BIT - 1
 FREE_TS = _TS_MASK  # "maximum representable" timestamp per the paper
@@ -50,6 +52,10 @@ class ReaderTracer:
                 if not self._slots[slot] & _STATUS_BIT:
                     self._slots[slot] = _STATUS_BIT | start_ts
                     return slot
+        # slot exhaustion is an operational event, not just an exception:
+        # count it on the process registry so dashboards and the telemetry
+        # report surface the pressure even when callers retry and succeed
+        _REGISTRY.counter("reader_slots_exhausted").add()
         raise RuntimeError(f"reader tracer full (k={self.k})")
 
     def update(self, slot: int, start_ts: int) -> None:
@@ -93,6 +99,16 @@ class ReaderTracer:
 
     def n_active(self) -> int:
         return sum(1 for v in self._slots if v & _STATUS_BIT)
+
+    def busy_slots(self) -> int:
+        """Occupancy gauge: claimed slots out of ``k`` (lock-free scan).
+
+        Exported as the ``reader_tracer_busy_slots`` gauge on the owning
+        store's registry; ``busy_slots() == k`` is the saturation signal
+        that precedes the ``reader tracer full`` RuntimeError (which is
+        additionally counted as ``reader_slots_exhausted``).
+        """
+        return self.n_active()
 
     def slot_value(self, slot: int) -> int:
         """Raw 8-byte slot encoding (status_bit | ts) — for tests."""

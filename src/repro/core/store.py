@@ -23,6 +23,7 @@ through the decoupled group-commit pipeline (``apply_async``/``flush``,
 from __future__ import annotations
 
 import threading
+import time
 import weakref
 from contextlib import contextmanager
 from dataclasses import dataclass
@@ -32,32 +33,49 @@ import numpy as np
 
 from .clock import LogicalClock
 from .leaf_pool import LeafPool, TieredLeafPool, env_leaf_tiers, parse_leaf_tiers
-from .reader_tracer import ReaderTracer
+from .reader_tracer import FREE_TS, ReaderTracer
 from .snapshot import SnapshotView
 from .subgraph import SubgraphSnapshot, build_subgraph
 from .version_chain import CommitLineage, VersionChain
 from . import txn as _txn
+from ..obs import metrics as _metrics
+from ..obs.trace import TRACER as _trc
 
 
 class StoreStats(dict):
-    """Thread-safe counter dict: all increments go through :meth:`add`.
+    """Thread-safe counter dict, backed by telemetry-plane counters.
 
     A plain ``stats[key] += 1`` is a read-modify-write of two bytecodes —
     two writers with disjoint subgraph sets hold no common lock, so
-    concurrent increments could interleave and lose updates.  ``add`` takes
-    one internal lock per increment; reads stay plain dict reads (benign:
-    single monotone int).
+    concurrent increments could interleave and lose updates.  ``add``
+    routes every increment through one locked
+    :class:`repro.obs.metrics.Counter` (named ``store_<key>``, registered
+    on the owning store's registry so it shows up in Prometheus/report
+    exports); the counter mirrors its value back into this dict *under
+    its lock*, so plain dict reads stay exact under concurrency.
     """
 
-    def __init__(self, *args, **kwargs) -> None:
-        super().__init__(*args, **kwargs)
-        self._lock = threading.Lock()
+    def __init__(self, *args, registry: Optional[_metrics.MetricsRegistry] = None,
+                 **kwargs) -> None:
+        super().__init__()
+        self.registry = registry if registry is not None else _metrics.MetricsRegistry()
+        for key, value in dict(*args, **kwargs).items():
+            self._counter(key)
+            if value:
+                self.add(key, value)
+
+    def _counter(self, key: str) -> _metrics.Counter:
+        c = self.registry.counter("store_" + key)
+        if c.mirror is None:
+            # mirror runs under the counter's lock; bind dict.__setitem__
+            # directly so the view update is exact (no re-read)
+            store_view = super().__setitem__
+            c.mirror = lambda v, _set=store_view, _k=key: _set(_k, v)
+            super().setdefault(key, c.value)
+        return c
 
     def add(self, key: str, delta: int = 1) -> int:
-        with self._lock:
-            value = self.get(key, 0) + delta
-            self[key] = value
-            return value
+        return self._counter(key).add(delta)
 
 
 @dataclass
@@ -65,6 +83,7 @@ class ReadHandle:
     slot: int
     ts: int
     view: SnapshotView
+    trace_token: int = 0
 
 
 def _make_pool(leaf_tiers, B, initial_rows):
@@ -125,7 +144,10 @@ class RapidStore:
         # vertex lifecycle (paper §6.5): reusable-id queue + atomic grow
         self._vid_lock = threading.Lock()
         self._free_vids: List[int] = []
-        self.stats: Dict[str, int] = StoreStats(commits=0, versions_reclaimed=0)
+        self.registry = _metrics.MetricsRegistry()
+        self.stats: Dict[str, int] = StoreStats(
+            commits=0, versions_reclaimed=0, registry=self.registry
+        )
         # delta plane: commit lineage + the most recent retired view's
         # assembly bundle (strong here, weak in views — see begin_read)
         self.lineage = CommitLineage()
@@ -141,6 +163,25 @@ class RapidStore:
         # frozen base level: the compactor's fully-materialized packed-stream
         # bundle (strong ref) — the view assembler's base+delta splice source
         self._base_assembly = None
+        self._register_gauges()
+
+    def _register_gauges(self) -> None:
+        """Derived health gauges (callback-backed: evaluated at export time)."""
+        reg = self.registry
+        reg.gauge("reader_horizon_lag", fn=self.reader_horizon_lag)
+        reg.gauge("reader_tracer_busy_slots", fn=self.tracer.busy_slots)
+        reg.gauge(
+            "wal_backlog_bytes",
+            fn=lambda: self.wal.backlog_bytes() if self.wal is not None else 0,
+        )
+        for component in ("pool", "versions", "retired", "base", "lineage",
+                          "pipeline"):
+            reg.gauge(
+                "store_memory_bytes",
+                fn=lambda c=component: self.memory_breakdown()[c],
+                component=component,
+            )
+        self._h_read = reg.histogram("read_latency_seconds")
 
     # -- construction -------------------------------------------------------------
     @classmethod
@@ -173,7 +214,10 @@ class RapidStore:
         store.locks = [threading.Lock() for _ in range(store.n_subgraphs)]
         store._vid_lock = threading.Lock()
         store._free_vids = []
-        store.stats = StoreStats(commits=0, versions_reclaimed=0)
+        store.registry = _metrics.MetricsRegistry()
+        store.stats = StoreStats(
+            commits=0, versions_reclaimed=0, registry=store.registry
+        )
         store.lineage = CommitLineage()
         store._retired_assembly = None
         store._retire_lock = threading.Lock()
@@ -182,6 +226,7 @@ class RapidStore:
         store.wal = None
         store.compactor = None
         store._base_assembly = None
+        store._register_gauges()
 
         store.chains = []
         if len(edges):
@@ -331,6 +376,7 @@ class RapidStore:
         between the two timestamps (delta plane) instead of re-concatenating
         all S.  Weak linkage keeps GC free to reclaim superseded bundles.
         """
+        token = _trc.begin()
         t = self.clock.read_timestamp()
         slot = self.tracer.register(t)
         # Close the register/GC race: re-read t_r after publishing our slot;
@@ -348,11 +394,18 @@ class RapidStore:
             plane=self.shard_plane,
             base=self._base_assembly,
         )
-        return ReadHandle(slot=slot, ts=t, view=view)
+        self.stats.add("reads_begun")
+        return ReadHandle(slot=slot, ts=t, view=view, trace_token=token)
 
     def end_read(self, handle: ReadHandle) -> None:
         self.tracer.unregister(handle.slot)
         self._retire_view(handle.view)
+        self.stats.add("reads_ended")
+        if handle.trace_token:
+            _trc.end(handle.trace_token, "read", cat="read", ts=handle.ts)
+            self._h_read.observe(
+                (time.perf_counter_ns() - handle.trace_token) / 1e9
+            )
 
     def _retire_view(self, view: SnapshotView) -> None:
         """Keep the newest retired view's assembly state for successors.
@@ -692,35 +745,61 @@ class RapidStore:
         self.clock.restore(rec.ts)
 
     # -- introspection ------------------------------------------------------------
-    def memory_bytes(self) -> int:
-        total = self.pool.memory_bytes()
+    def memory_breakdown(self) -> Dict[str, int]:
+        """Per-component byte accounting (exported as ``store_memory_bytes``
+        gauges, one per component; :meth:`memory_bytes` is their sum)."""
+        versions = 0
         for chain in self.chains:
             # capture the list reference once, the lock-free convention
             # resolve() follows: collect()/link() replace the attribute with
             # a new list, so a captured reference is a stable snapshot
-            versions = chain._versions
-            for snap in versions:
-                total += snap.ci.values.nbytes + snap.ci.offsets.nbytes
-                total += snap.active.nbytes
-                total += snap.cache_bytes()
-                total += snap.device_cache_bytes()
+            snaps = chain._versions
+            for snap in snaps:
+                versions += snap.ci.values.nbytes + snap.ci.offsets.nbytes
+                versions += snap.active.nbytes
+                versions += snap.cache_bytes()
+                versions += snap.device_cache_bytes()
                 for d in snap.dirs.values():
-                    total += d.leaf_ids.nbytes + d.leaf_min.nbytes
+                    versions += d.leaf_ids.nbytes + d.leaf_min.nbytes
         retired = self._retired_assembly
-        if retired is not None:
-            # the one retained delta-plane bundle (successor splice source)
-            total += retired.host_bytes() + retired.device_bytes()
+        # the one retained delta-plane bundle (successor splice source)
+        retired_b = (
+            retired.host_bytes() + retired.device_bytes()
+            if retired is not None else 0
+        )
         base = self._base_assembly
-        if base is not None and base is not retired:
-            # the compactor's frozen base level (strong ref, splice source)
-            total += base.host_bytes() + base.device_bytes()
-        # commit-lineage log (trimmed by the compactor's fold horizon)
-        total += self.lineage.memory_bytes()
+        # the compactor's frozen base level (strong ref, splice source)
+        base_b = (
+            base.host_bytes() + base.device_bytes()
+            if base is not None and base is not retired else 0
+        )
         # logical writes queued/prepared in the pipeline but not yet linked
         wp = self.write_pipeline
-        if wp is not None:
-            total += wp.queued_bytes()
-        return total
+        return {
+            "pool": self.pool.memory_bytes(),
+            "versions": versions,
+            "retired": retired_b,
+            "base": base_b,
+            # commit-lineage log (trimmed by the compactor's fold horizon)
+            "lineage": self.lineage.memory_bytes(),
+            "pipeline": wp.queued_bytes() if wp is not None else 0,
+        }
+
+    def memory_bytes(self) -> int:
+        return sum(self.memory_breakdown().values())
+
+    def reader_horizon_lag(self) -> int:
+        """How far the oldest active reader pins behind ``t_r`` (0: none)."""
+        oldest = self.tracer.min_active_timestamp()
+        if oldest == FREE_TS:
+            return 0
+        return max(0, self.clock.read_timestamp() - oldest)
+
+    def telemetry_report(self) -> str:
+        """Human-readable snapshot of counters, gauges, histograms, spans."""
+        from ..obs import export as _export
+
+        return _export.telemetry_report(self)
 
     def fill_ratio(self) -> float:
         return self.pool.fill_ratio()

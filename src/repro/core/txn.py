@@ -46,6 +46,8 @@ from typing import Dict, Iterable, List, Optional
 
 import numpy as np
 
+from ..obs.trace import TRACER as _trc
+
 _EMPTY = np.empty((0, 2), np.int64)
 
 
@@ -224,19 +226,27 @@ def commit(
     timestamp and publishing abandons it (``clock.abandon``) so later
     committers never stall against the gap.  Returns the commit timestamp.
     """
+    tok_commit = _trc.begin()
     t = ts if ts is not None else store.clock.next_commit_timestamp()
     try:
         wal = store.wal
         if wal is not None and rw is not None:
+            tok = _trc.begin()
             wal.append_commit(t, rw.ins, rw.dels, rw.vset, store.n_vertices)
             wal.sync()
+            _trc.end(tok, "wal_sync", cat="write", ts=t)
+        tok = _trc.begin()
         link_at(store, t, new_snaps, n_writes=n_writes)
+        _trc.end(tok, "link", cat="write", ts=t)
     except BaseException:
         if ts is None:  # we drew it; a reserving caller owns its own range
             store.clock.abandon(t)
         raise
+    tok = _trc.begin()
     store.clock.publish(t)
+    _trc.end(tok, "publish", cat="write", ts=t)
     store.stats.add("commits", 1)
+    _trc.end(tok_commit, "commit", cat="write", ts=t)
     return t
 
 
@@ -263,7 +273,9 @@ def execute_write(
     Returns the commit timestamp (> 0) when a version was created, or 0
     when every edit was a no-op (no version linked, clock untouched).
     """
+    tok = _trc.begin()
     rw = route(store, ins, dels, vset)
+    _trc.end(tok, "route", cat="write")
     if rw is None:
         return 0
 
@@ -271,11 +283,15 @@ def execute_write(
     for sid in rw.sids:
         store.locks[sid].acquire()
     try:
+        tok = _trc.begin()
         new_snaps = prepare(store, rw)
+        _trc.end(tok, "prepare", cat="write", args={"n_writes": 1})
         if not new_snaps:
             return 0
         t = commit(store, new_snaps, rw=rw)
+        tok = _trc.begin()
         reclaim(store, new_snaps)
+        _trc.end(tok, "reclaim", cat="write", ts=t)
         return t
     finally:
         for sid in reversed(rw.sids):

@@ -56,18 +56,20 @@ by tests and benchmarks.
 
 from __future__ import annotations
 
+import functools
 import os
-import threading
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ..obs import metrics as _metrics
+from ..obs.trace import TRACER as _trc
+
 
 # ---------------------------------------------------------------------------
 # Stats — the observable O(d) contract
 # ---------------------------------------------------------------------------
-@dataclass
 class AssemblyStats:
     """Counters for delta-plane assembly (process-wide, lock-protected).
 
@@ -75,42 +77,80 @@ class AssemblyStats:
     calls made during view assembly; a spliced assembly touches exactly the
     dirty subgraphs, a full concat touches all S.  ``reuses`` counts
     assemblies satisfied entirely from the predecessor (empty dirty set).
+
+    Backed by :mod:`repro.obs.metrics` counters (``assembler_<field>`` on
+    the process registry) so the values appear in Prometheus exports and
+    ``telemetry_report()``; attribute reads are live counter views and
+    every increment holds the field's counter lock, so concurrent
+    assemblies on different threads never lose counts.
     """
 
-    splices: int = 0
-    full_concats: int = 0
-    reuses: int = 0
-    snapshot_touches: int = 0
-    spliced_segments: int = 0
-    spliced_bytes: int = 0
-    prefetch_uploads: int = 0
-    base_splices: int = 0
-    fallback_no_pred: int = 0
-    fallback_lineage: int = 0
-    fallback_dirty_frac: int = 0
+    _FIELDS = (
+        "splices",
+        "full_concats",
+        "reuses",
+        "snapshot_touches",
+        "spliced_segments",
+        "spliced_bytes",
+        "prefetch_uploads",
+        "base_splices",
+        "fallback_no_pred",
+        "fallback_lineage",
+        "fallback_dirty_frac",
+    )
+
+    def __init__(self, registry: Optional[_metrics.MetricsRegistry] = None) -> None:
+        reg = registry if registry is not None else _metrics.REGISTRY
+        self._c = {f: reg.counter("assembler_" + f) for f in self._FIELDS}
+
+    def __getattr__(self, name: str) -> int:
+        c = self.__dict__["_c"].get(name)
+        if c is None:
+            raise AttributeError(name)
+        return c.value
+
+    def add(self, name: str, delta: int = 1) -> None:
+        self._c[name].add(delta)
 
     def reset(self) -> None:
-        self.splices = 0
-        self.full_concats = 0
-        self.reuses = 0
-        self.snapshot_touches = 0
-        self.spliced_segments = 0
-        self.spliced_bytes = 0
-        self.prefetch_uploads = 0
-        self.base_splices = 0
-        self.fallback_no_pred = 0
-        self.fallback_lineage = 0
-        self.fallback_dirty_frac = 0
+        for c in self._c.values():
+            c.reset()
+
+    def __repr__(self) -> str:  # pragma: no cover - debug aid
+        body = ", ".join(f"{f}={self._c[f].value}" for f in self._FIELDS)
+        return f"AssemblyStats({body})"
 
 
 stats = AssemblyStats()
-_lock = threading.Lock()
 
 
 def _count(**kw: int) -> None:
-    with _lock:
-        for k, v in kw.items():
-            setattr(stats, k, getattr(stats, k) + v)
+    for k, v in kw.items():
+        stats.add(k, v)
+
+
+def _traced(kind: str):
+    """Record an ``assemble`` span (cat ``read``) around a materializer.
+
+    The span carries the view timestamp, so a read's assembly cost lines
+    up with the commit that dirtied it in the Perfetto timeline; which
+    path it took (splice / base splice / full concat / reuse) is visible
+    in the ``assembler_*`` counters.
+    """
+
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(view, *args, **kwargs):
+            tok = _trc.begin()
+            out = fn(view, *args, **kwargs)
+            if tok:
+                _trc.end(tok, "assemble", cat="read", ts=view.ts,
+                         args={"kind": kind})
+            return out
+
+        return wrapper
+
+    return deco
 
 
 def splice_enabled() -> bool:
@@ -376,6 +416,7 @@ def _freeze(arrays) -> None:
 # ---------------------------------------------------------------------------
 # Host COO
 # ---------------------------------------------------------------------------
+@_traced("host_coo")
 def host_coo(view) -> Tuple[np.ndarray, np.ndarray]:
     """Global (src, dst) in (u, v) order — spliced from the predecessor when
     the lineage diff allows, full per-subgraph concat otherwise."""
@@ -438,6 +479,7 @@ def _patched_degrees(view, pred, dirty, seg_src: Dict[int, np.ndarray]) -> np.nd
     return offsets
 
 
+@_traced("host_csr")
 def host_csr(view):
     """Global CSR via the cross-snapshot delta.
 
@@ -532,6 +574,7 @@ def _host_stream_segs(view, dirty) -> Dict[int, tuple]:
     return segs
 
 
+@_traced("host_stream")
 def host_stream(view):
     """Global compacted leaf-tile stream — the host blocks materialization.
 
@@ -609,6 +652,7 @@ def host_stream(view):
     return a.host_stream
 
 
+@_traced("host_blocks")
 def host_blocks(view):
     """Global padded leaf-tile stream — the fixed-B compatibility layout.
 
@@ -775,6 +819,7 @@ def _device_blocks_tiered(view, a):
     return a.dev_blocks
 
 
+@_traced("device_blocks")
 def device_blocks(view):
     """Device-resident global leaf-tile stream (delta-spliced when possible).
 
@@ -834,6 +879,7 @@ def device_blocks(view):
     return a.dev_blocks
 
 
+@_traced("device_coo")
 def device_coo(view) -> tuple:
     """Device-resident global (src, dst) COO (delta-spliced when possible)."""
     from . import device_cache
@@ -873,6 +919,7 @@ def device_coo(view) -> tuple:
     return a.dev_coo
 
 
+@_traced("device_csr")
 def device_csr(view):
     """Device CSR over the (spliced) device COO; offsets computed on device,
     so no per-subgraph work beyond :func:`device_coo`'s."""

@@ -177,6 +177,7 @@ class WriteAheadLog:
         self.records_appended = 0
         self.syncs = 0
         self.bytes_appended = 0
+        self._unsynced_bytes = 0
         self.hook_before_sync = None
         self.hook_after_sync = None
         self._lock = threading.Lock()
@@ -209,6 +210,7 @@ class WriteAheadLog:
             self._dirty = True
             self.records_appended += 1
             self.bytes_appended += len(frame) + len(payload)
+            self._unsynced_bytes += len(frame) + len(payload)
 
     def append_commit(self, ts: int, ins, dels, vset, n_vertices: int) -> None:
         """Log one commit's net write.  Call BEFORE publishing ``ts``."""
@@ -235,6 +237,7 @@ class WriteAheadLog:
                     os.fsync(self._f.fileno())
                 self._dirty = False
                 self.syncs += 1
+                self._unsynced_bytes = 0
         hook = self.hook_after_sync
         if hook is not None:
             hook()
@@ -274,6 +277,17 @@ class WriteAheadLog:
             self._f = open(self.path, "r+b")
             self._f.seek(0, os.SEEK_END)
             self._dirty = False
+            self._unsynced_bytes = 0
+
+    def backlog_bytes(self) -> int:
+        """Bytes appended but not yet durability-barriered by :meth:`sync`.
+
+        Exported as the ``wal_backlog_bytes`` gauge on the owning store's
+        registry — a growing backlog means commits are outrunning the sync
+        cadence (or a committer died between append and sync).  Lock-free
+        read of a single int (benign: monotone between syncs).
+        """
+        return self._unsynced_bytes
 
     def size_bytes(self) -> int:
         with self._lock:

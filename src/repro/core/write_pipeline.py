@@ -65,18 +65,21 @@ from typing import Dict, List, Optional
 import numpy as np
 
 from . import txn as _txn
+from ..obs import metrics as _metrics
+from ..obs.trace import TRACER as _trc
 
 
 class WriteTicket:
     """Handle for one submitted logical write; resolves at publish time."""
 
-    __slots__ = ("seq", "_event", "_ts", "_error")
+    __slots__ = ("seq", "_event", "_ts", "_error", "_t0")
 
     def __init__(self, seq: int) -> None:
         self.seq = seq  # global submission order (per-store monotone)
         self._event = threading.Event()
         self._ts: Optional[int] = None
         self._error: Optional[BaseException] = None
+        self._t0 = 0  # submit-time perf ns (telemetry on only)
 
     def done(self) -> bool:
         return self._event.is_set()
@@ -134,19 +137,45 @@ class _PreparedBatch:
 
 
 class PipelineStats:
-    """Pipeline-side counters (store-wide counters live in ``store.stats``)."""
+    """Pipeline-side counters (store-wide counters live in ``store.stats``).
 
-    __slots__ = ("batches", "writes", "fences", "noop_batches", "max_batch",
-                 "publish_runs", "max_publish_run")
+    Backed by locked :mod:`repro.obs.metrics` counters/gauges on the
+    store's registry: the old plain ``self.stats.writes += n`` attributes
+    were unlocked read-modify-writes hit concurrently by every shard
+    worker (and the committer), so counts could be lost under contention.
+    Attribute *reads* (``stats.writes`` etc.) are preserved via
+    ``__getattr__`` as live counter views, so existing tests and
+    benchmarks keep working unchanged.
+    """
 
-    def __init__(self) -> None:
-        self.batches = 0        # group commits handed to the committer
-        self.writes = 0         # logical writes drained into batches
-        self.fences = 0         # multi-shard writes executed
-        self.noop_batches = 0   # drained runs that netted to nothing
-        self.max_batch = 0      # largest coalesced run
-        self.publish_runs = 0   # committer publish_range calls
-        self.max_publish_run = 0  # most batches published in one range
+    _COUNTERS = ("batches", "writes", "fences", "noop_batches", "publish_runs")
+    _MAXES = ("max_batch", "max_publish_run")
+
+    def __init__(self, registry: Optional[_metrics.MetricsRegistry] = None) -> None:
+        registry = registry if registry is not None else _metrics.MetricsRegistry()
+        # batches: group commits handed to the committer
+        # writes: logical writes drained into batches
+        # fences: multi-shard writes executed
+        # noop_batches: drained runs that netted to nothing
+        # publish_runs: committer publish_range calls
+        # max_batch / max_publish_run: high watermarks
+        self._c = {n: registry.counter("pipeline_" + n) for n in self._COUNTERS}
+        self._m = {n: registry.gauge("pipeline_" + n) for n in self._MAXES}
+
+    def add(self, name: str, delta: int = 1) -> None:
+        self._c[name].add(delta)
+
+    def note_max(self, name: str, value: int) -> None:
+        self._m[name].set_max(value)
+
+    def __getattr__(self, name: str):
+        c = self.__dict__["_c"].get(name)
+        if c is not None:
+            return c.value
+        g = self.__dict__["_m"].get(name)
+        if g is not None:
+            return int(g.value)
+        raise AttributeError(name)
 
     def __repr__(self) -> str:  # pragma: no cover - debug aid
         return (
@@ -170,8 +199,22 @@ class WritePipeline:
         self.store = store
         self.n_shards = int(n_shards)
         self.max_batch = int(max_batch)
-        self.stats = PipelineStats()
+        registry = getattr(store, "registry", None)
+        self.stats = PipelineStats(registry)
         self._queues = [_ShardQueue() for _ in range(self.n_shards)]
+        if registry is not None:
+            # per-shard backlog gauges: the sensing input of the elastic
+            # resharding rebalancer (ROADMAP item 3). len(deque) is an
+            # atomic read, so the callbacks are safe without the queue lock
+            for i, q in enumerate(self._queues):
+                registry.gauge(
+                    "pipeline_queue_depth",
+                    fn=lambda q=q: len(q.items),
+                    shard=str(i),
+                )
+            self._h_visibility = registry.histogram("commit_visibility_seconds")
+        else:  # pragma: no cover - store always has a registry
+            self._h_visibility = _metrics.Histogram("commit_visibility_seconds")
         # prepared-but-not-yet-linked chain heads; only a sid's owning
         # worker (or a fence executor while the owners are parked) touches
         # its entry, so plain dict ops under the GIL suffice
@@ -215,9 +258,11 @@ class WritePipeline:
             raise RuntimeError("write pipeline is detached")
         if self._fatal is not None:
             raise RuntimeError("write pipeline failed") from self._fatal
+        tok = _trc.begin()
         rw = _txn.route(self.store, ins, dels, vset)
         with self._enqueue_lock:
             ticket = WriteTicket(self._seq)
+            ticket._t0 = tok
             self._seq += 1
             if rw is None:
                 ticket._ts = 0
@@ -238,6 +283,7 @@ class WritePipeline:
                     with q.cond:
                         q.items.append(fence)
                         q.cond.notify()
+        _trc.end(tok, "enqueue", cat="write", args={"seq": ticket.seq})
         return ticket
 
     def flush(self, timeout: Optional[float] = None) -> None:
@@ -343,6 +389,12 @@ class WritePipeline:
         for t in self._threads:
             t.join(timeout=30)
         self._committer.join(timeout=30)
+        registry = getattr(self.store, "registry", None)
+        if registry is not None:
+            # drop the per-shard depth gauges: a detached pipeline's queues
+            # must not linger in the store's exports
+            for i in range(self.n_shards):
+                registry.unregister("pipeline_queue_depth", shard=str(i))
 
     # -- worker side --------------------------------------------------------
     def _worker(self, shard: int) -> None:
@@ -377,20 +429,26 @@ class WritePipeline:
 
     def _run_batch(self, writes, tickets) -> None:
         """Coalesce a drained run, prepare on the pending heads, hand off."""
+        tok = _trc.begin()
         net = _txn.coalesce(writes)
-        self.stats.writes += len(writes)
-        self.stats.max_batch = max(self.stats.max_batch, len(writes))
+        self.stats.add("writes", len(writes))
+        self.stats.note_max("max_batch", len(writes))
         if net is None:
-            self.stats.noop_batches += 1
+            self.stats.add("noop_batches")
             self._complete(tickets, ts=0)
             return
         new_snaps = _txn.prepare(self.store, net, heads=self._heads)
+        _trc.end(tok, "prepare", cat="write", args={
+            "n_writes": len(writes),
+            "seq_first": tickets[0].seq,
+            "seq_last": tickets[-1].seq,
+        })
         if not new_snaps:
-            self.stats.noop_batches += 1
+            self.stats.add("noop_batches")
             self._complete(tickets, ts=0)
             return
         self._heads.update(new_snaps)
-        self.stats.batches += 1
+        self.stats.add("batches")
         with self._prep_cond:
             self._prepared.append(
                 _PreparedBatch(new_snaps, tickets, n_writes=len(writes), net=net)
@@ -412,7 +470,7 @@ class WritePipeline:
             if fence.arrived == len(fence.shards):
                 execute = True
         if execute:
-            self.stats.fences += 1
+            self.stats.add("fences")
             self._run_batch([fence.rw], [fence.ticket])
             fence.done.set()
         else:
@@ -433,10 +491,12 @@ class WritePipeline:
                 self._prepared.clear()
             try:
                 k = len(run)
+                tok_run = _trc.begin()
                 first = store.clock.reserve(k)
                 linked = 0
                 try:
                     wal = store.wal
+                    tok = _trc.begin()
                     for i, pb in enumerate(run):
                         if wal is not None and pb.net is not None:
                             wal.append_commit(
@@ -446,10 +506,16 @@ class WritePipeline:
                         _txn.link_at(store, first + i, pb.new_snaps,
                                      n_writes=pb.n_writes)
                         linked += 1
+                    _trc.end(tok, "link", cat="write", ts=first,
+                             args={"ts_first": first, "ts_last": first + k - 1})
                     if wal is not None:
                         # ONE durability barrier per drained run, mirroring
                         # the single publish_range below
+                        tok = _trc.begin()
                         wal.sync()
+                        _trc.end(tok, "wal_sync", cat="write", ts=first, args={
+                            "ts_first": first, "ts_last": first + k - 1,
+                        })
                 except BaseException:
                     # Renounce the reserved-but-unlinked suffix so later
                     # committers step over it instead of stalling to
@@ -466,25 +532,41 @@ class WritePipeline:
                         except BaseException:  # pragma: no cover
                             pass  # don't mask the original failure
                     raise
+                tok = _trc.begin()
                 store.clock.publish_range(first, first + k - 1)
+                _trc.end(tok, "publish", cat="write", ts=first, args={
+                    "ts_first": first, "ts_last": first + k - 1,
+                })
                 store.stats.add("commits", k)
                 store.stats.add("group_commits", k)
                 store.stats.add(
                     "writes_coalesced", sum(pb.n_writes for pb in run)
                 )
-                self.stats.publish_runs += 1
-                self.stats.max_publish_run = max(self.stats.max_publish_run, k)
+                self.stats.add("publish_runs")
+                self.stats.note_max("max_publish_run", k)
+                if tok_run:
+                    # one commit span per batch (so the span count matches
+                    # stats["commits"]), each carrying its own timestamp
+                    for i, pb in enumerate(run):
+                        _trc.end(tok_run, "commit", cat="write", ts=first + i,
+                                 args={"n_writes": pb.n_writes})
                 for i, pb in enumerate(run):
                     self._complete(pb.tickets, ts=first + i)
+                tok = _trc.begin()
                 for pb in run:
                     _txn.reclaim(store, pb.new_snaps)
+                _trc.end(tok, "reclaim", cat="write", ts=first)
             except BaseException as exc:  # pragma: no cover - defensive
                 self._abort(exc, [tk for pb in run for tk in pb.tickets])
                 return
 
     # -- completion ---------------------------------------------------------
     def _complete(self, tickets, ts: int) -> None:
+        now = _trc.begin()  # 0 when telemetry is off
         for tk in tickets:
+            if now and tk._t0:
+                # submit -> publish: the write's visibility latency
+                self._h_visibility.observe((now - tk._t0) / 1e9)
             tk._ts = ts
             tk._event.set()
         with self._pending_cond:

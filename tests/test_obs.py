@@ -1,0 +1,299 @@
+"""Telemetry plane: metric exactness under concurrency, histogram error
+bounds vs numpy, span-ring wraparound, the disabled no-op contract, and
+Prometheus / Chrome-trace export round-trips."""
+
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import RapidStore
+from repro.core import device_cache
+from repro.core import view_assembler
+from repro.core.write_pipeline import PipelineStats
+from repro.obs.export import chrome_trace, prometheus_text, telemetry_report
+from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.trace import Span, SpanRing, Tracer
+
+EMPTY = np.empty((0, 2), np.int64)
+
+
+def _hammer(n_threads, n_iter, fn):
+    """Run ``fn(thread_idx, iter_idx)`` from ``n_threads`` threads in lockstep."""
+    start = threading.Barrier(n_threads)
+
+    def work(t):
+        start.wait()
+        for i in range(n_iter):
+            fn(t, i)
+
+    threads = [threading.Thread(target=work, args=(t,)) for t in range(n_threads)]
+    for th in threads:
+        th.start()
+    for th in threads:
+        th.join()
+
+
+# ---------------------------------------------------------------------------
+# counters / gauges / registry
+# ---------------------------------------------------------------------------
+def test_counter_exact_under_concurrency():
+    c = MetricsRegistry().counter("x")
+    _hammer(8, 5000, lambda t, i: c.add())
+    assert c.value == 8 * 5000
+
+
+def test_counter_mirror_runs_under_lock():
+    """The mirror callback sees every post-increment value exactly once —
+    the mechanism StoreStats uses to keep its dict view exact."""
+    c = Counter("x")
+    view = {}
+    c.mirror = lambda v: view.__setitem__("x", v)
+    _hammer(8, 2000, lambda t, i: c.add())
+    assert c.value == 8 * 2000
+    assert view["x"] == 8 * 2000
+
+
+def test_gauge_set_max_and_callback():
+    g = Gauge("g")
+    g.set_max(5)
+    g.set_max(3)
+    assert g.value == 5
+    g.set_fn(lambda: 42)
+    assert g.value == 42
+
+
+def test_registry_identity_and_type_conflict():
+    reg = MetricsRegistry()
+    assert reg.counter("a") is reg.counter("a")
+    assert reg.counter("a", shard="0") is not reg.counter("a", shard="1")
+    # same (name, labels) re-requested as a different kind is an error
+    with pytest.raises(TypeError):
+        reg.gauge("a")
+    reg.unregister("a")
+    assert isinstance(reg.gauge("a"), Gauge)
+
+
+# ---------------------------------------------------------------------------
+# histogram: log2-bucket error bound vs numpy
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_histogram_percentiles_bracket_numpy(seed):
+    rng = np.random.default_rng(seed)
+    # spread over ~6 decades: microseconds to hundreds of ms
+    data = 10.0 ** rng.uniform(-6, -0.5, size=2000)
+    h = Histogram("lat")
+    for x in data:
+        h.observe(float(x))
+    assert h.count == len(data)
+    assert h.sum == pytest.approx(float(data.sum()))
+    assert h.max == pytest.approx(float(data.max()))
+    for q in (50, 90, 99):
+        lo = float(np.percentile(data, q, method="lower"))
+        hi = float(np.percentile(data, q, method="higher"))
+        est = h.percentile(q)
+        # bucket upper bound: true sample <= estimate < 2 * true sample
+        assert lo <= est <= 2 * hi, (q, lo, est, hi)
+
+
+def test_histogram_single_value_bound():
+    for v in (1e-9, 3e-7, 1e-3, 0.75):
+        h = Histogram("one")
+        h.observe(v)
+        est = h.p50()
+        assert v <= est <= 2 * v or est == h.percentile(50)
+        assert est >= v  # never under-reports
+        assert est <= 2 * v + 1e-12
+
+
+def test_histogram_buckets_cumulative_and_reset():
+    h = Histogram("b")
+    for v in (1e-6, 1e-6, 1e-3):
+        h.observe(v)
+    b = h.buckets()
+    assert [c for _, c in b] == sorted(c for _, c in b)  # cumulative
+    assert b[-1][1] == h.count == 3
+    h.reset()
+    assert h.count == 0 and h.buckets() == [] and h.percentile(99) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# span ring: wraparound, striping, disabled no-op
+# ---------------------------------------------------------------------------
+def test_ring_wraparound_under_concurrent_writers():
+    ring = SpanRing(capacity=64, n_stripes=4)
+    n_threads, n_iter = 8, 500
+    _hammer(
+        n_threads, n_iter,
+        lambda t, i: ring.record(Span("s", "c", start_ns=i, dur_ns=1, tid=t)),
+    )
+    assert ring.recorded() == n_threads * n_iter
+    retained = ring.spans()
+    assert len(retained) <= ring.capacity
+    assert ring.dropped() == ring.recorded() - len(retained)
+
+
+def test_tracer_counts_survive_wraparound():
+    tr = Tracer(capacity=32)
+    tr.enabled = True
+    n_threads, n_iter = 4, 300
+    def rec(t, i):
+        tok = tr.begin()
+        tr.end(tok, "commit" if i % 2 else "read")
+    _hammer(n_threads, n_iter, rec)
+    total = n_threads * n_iter
+    assert tr.count("commit") + tr.count("read") == total
+    assert tr.count("commit") == total // 2
+    assert len(tr.spans()) <= tr.ring.capacity  # ring bounded, counts exact
+    tr.clear()
+    assert tr.counts() == {} and tr.spans() == []
+
+
+def test_tracer_disabled_is_noop():
+    tr = Tracer(capacity=64)
+    tr.enabled = False
+    tok = tr.begin()
+    assert tok == 0
+    tr.end(tok, "x")
+    tr.end(12345, "x")  # stale token after disable: also dropped
+    tr.instant("marker")
+    assert tr.ring.recorded() == 0
+    assert tr.counts() == {}
+
+
+# ---------------------------------------------------------------------------
+# exporters
+# ---------------------------------------------------------------------------
+def test_prometheus_text_roundtrip():
+    reg = MetricsRegistry()
+    reg.counter("pipeline_writes").add(7)
+    reg.gauge("wal_backlog_bytes").set(123.0)
+    h = reg.histogram("read_latency_seconds")
+    for v in (1e-6, 2e-6, 1e-3):
+        h.observe(v)
+    text = prometheus_text(reg)
+    lines = text.strip().splitlines()
+    assert "# TYPE rapidstore_pipeline_writes_total counter" in lines
+    assert "rapidstore_pipeline_writes_total 7" in lines
+    assert "rapidstore_wal_backlog_bytes 123.0" in lines
+    assert "rapidstore_read_latency_seconds_count 3" in lines
+    bucket_lines = [l for l in lines if "_bucket{" in l]
+    assert bucket_lines and bucket_lines[-1].startswith(
+        'rapidstore_read_latency_seconds_bucket{le="+Inf"}'
+    )
+    cums = [int(l.rsplit(" ", 1)[1]) for l in bucket_lines]
+    assert cums == sorted(cums) and cums[-1] == 3
+    # every sample line is "name{labels} value"
+    for l in lines:
+        if not l.startswith("#"):
+            name, val = l.rsplit(" ", 1)
+            assert name.startswith("rapidstore_")
+            float(val)
+
+
+def test_chrome_trace_json_roundtrip(tmp_path):
+    tr = Tracer(capacity=128)
+    tr.enabled = True
+    tok = tr.begin()
+    tr.end(tok, "commit", cat="write", ts=17, args={"n_writes": 3})
+    tok = tr.begin()
+    tr.end(tok, "read", cat="read", ts=17)
+    doc = json.loads(json.dumps(chrome_trace(tr)))
+    evs = doc["traceEvents"]
+    assert len(evs) == 2
+    by_name = {e["name"]: e for e in evs}
+    commit = by_name["commit"]
+    assert commit["ph"] == "X" and commit["cat"] == "write"
+    assert commit["args"]["ts"] == 17 and commit["args"]["n_writes"] == 3
+    assert commit["dur"] >= 0 and 0 <= commit["tid"] < (1 << 31)
+    assert by_name["read"]["args"]["ts"] == 17
+    # file round-trip
+    from repro.obs.export import write_chrome_trace
+
+    p = write_chrome_trace(tmp_path / "trace.json", tr)
+    assert json.load(open(p))["traceEvents"]
+
+
+def test_telemetry_report_renders():
+    store = RapidStore(64, partition_size=16, B=32)
+    store.insert_edge(1, 2)
+    with store.read_view() as v:
+        v.edge_set()
+    off = Tracer(capacity=8)
+    off.enabled = False  # a fresh Tracer inherits REPRO_TELEMETRY from env
+    rep = telemetry_report(store, tracer=off)
+    assert "store_commits" in rep
+    assert "reader_horizon_lag" in rep
+    assert "store_memory_bytes" in rep
+    assert "tracing disabled" in rep
+    tr = Tracer(capacity=8)
+    tr.enabled = True
+    tr.instant("commit")
+    rep2 = telemetry_report(store, tracer=tr)
+    assert "commit" in rep2 and "ring:" in rep2
+
+
+# ---------------------------------------------------------------------------
+# legacy stat surfaces are registry-backed and exact under threads
+# (the PR's racy-counter regression: these used to be unlocked += sites)
+# ---------------------------------------------------------------------------
+def test_store_stats_dict_view_exact_under_threads():
+    store = RapidStore(64, partition_size=16, B=32)
+    base = store.stats["commits"]
+    _hammer(8, 2000, lambda t, i: store.stats.add("commits"))
+    assert store.stats["commits"] == base + 8 * 2000
+    assert store.registry.counter("store_commits").value == base + 8 * 2000
+
+
+def test_assembler_stats_exact_under_threads():
+    view_assembler.stats.reset()
+    _hammer(8, 2000, lambda t, i: view_assembler._count(
+        snapshot_touches=1, spliced_bytes=3))
+    assert view_assembler.stats.snapshot_touches == 8 * 2000
+    assert view_assembler.stats.spliced_bytes == 8 * 2000 * 3
+    view_assembler.stats.reset()
+    assert view_assembler.stats.snapshot_touches == 0
+
+
+def test_device_cache_stats_exact_under_threads():
+    before = device_cache.stats.snapshot()
+    _hammer(8, 2000, lambda t, i: (device_cache._hit(), device_cache._miss()))
+    after = device_cache.stats.snapshot()
+    assert after[0] - before[0] == 8 * 2000  # hits
+    assert after[1] - before[1] == 8 * 2000  # misses
+    ratio = device_cache.stats.hit_ratio()
+    assert 0.0 <= ratio <= 1.0
+
+
+def test_pipeline_stats_exact_under_threads():
+    ps = PipelineStats(MetricsRegistry())
+    _hammer(8, 2000, lambda t, i: ps.add("writes"))
+    assert ps.writes == 8 * 2000
+    ps.note_max("max_batch", 7)
+    ps.note_max("max_batch", 3)
+    assert ps.max_batch == 7
+
+
+# ---------------------------------------------------------------------------
+# reader tracer occupancy gauge + slot exhaustion event
+# ---------------------------------------------------------------------------
+def test_reader_busy_slots_gauge_and_exhaustion_counter():
+    from repro.obs.metrics import REGISTRY
+
+    store = RapidStore(64, partition_size=16, B=32, tracer_k=2)
+    store.insert_edge(1, 2)
+    gauge = store.registry.gauge("reader_tracer_busy_slots")
+    assert gauge.value == 0
+    h1 = store.begin_read()
+    h2 = store.begin_read()
+    assert gauge.value == 2
+    exhausted = REGISTRY.counter("reader_slots_exhausted")
+    before = exhausted.value
+    with pytest.raises(RuntimeError):
+        store.begin_read()
+    assert exhausted.value == before + 1
+    store.end_read(h1)
+    store.end_read(h2)
+    assert gauge.value == 0
+    assert store.stats["reads_begun"] == store.stats["reads_ended"] == 2
