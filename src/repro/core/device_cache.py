@@ -206,6 +206,7 @@ def _pad_tiles_on_device(data, lens, B: int):
     where the tiles live.  Runs on whatever device ``data``/``lens`` are
     committed to.
     """
+    import jax
     import jax.numpy as jnp
 
     from .leaf_pool import SENTINEL
@@ -213,9 +214,14 @@ def _pad_tiles_on_device(data, lens, B: int):
     tok = _trc.begin()
     n = int(lens.shape[0])
     if int(data.shape[0]) == 0:
-        # no live values (possibly no tiles at all): pure-SENTINEL tiles,
-        # derived from ``lens`` so the result stays on its device
-        out = jnp.broadcast_to(lens[:, None] * 0 + jnp.int32(SENTINEL), (n, B))
+        # no live values (possibly no tiles at all): pure-SENTINEL tiles.
+        # Zero-element results fall off their committed device (jax places
+        # any 0-sized output on the default device), and this tuple is
+        # cached per-(snapshot, device) — re-commit explicitly.
+        out = jax.device_put(
+            jnp.broadcast_to(lens[:, None] * 0 + jnp.int32(SENTINEL), (n, B)),
+            next(iter(lens.devices())),
+        )
     else:
         off = jnp.cumsum(lens) - lens
         col = jnp.arange(B, dtype=lens.dtype)
@@ -425,6 +431,84 @@ def shard_leaf_tiles(snap, device, wait: bool = True) -> Tuple[tuple, int]:
                 up[2], _pad_tiles_on_device(up[0], up[1], snap.pool.B), up[1]
             ),
         )
+
+
+# ---------------------------------------------------------------------------
+# Migration staging — the SEND/RECV/FREE halves of the reshard runtime
+# (repro.core.reshard).  SEND uploads WITHOUT installing into the snapshot
+# cache, so an aborted migration leaves no trace; RECV commits the staged
+# tiles under the same lock + generation stamp the normal fetch path uses;
+# FREE drops a device's entries after the placement flip (any straggler
+# reader at the old placement just re-uploads — correctness is unaffected,
+# only the one transfer is repaid).
+# ---------------------------------------------------------------------------
+def stage_shard_tiles(snap, device, kind: str, wait: bool = False):
+    """SEND: upload one snapshot's ``kind`` tiles to ``device``, unstaged.
+
+    Returns ``(key, tiles, uploaded_bytes)``; 0 bytes when the tiles are
+    already resident (the migration then degenerates to a cache no-op).
+    Raises RuntimeError on a released snapshot, like the fetch paths.
+    """
+    import jax
+
+    key = (kind, device.id)
+    cache = snap._shard_dev_cache
+    if cache is not None and key in cache:
+        return key, cache[key], 0
+    tok = _trc.begin()
+    if kind == "coo":
+        host = snap.to_coo_global()
+        up = tuple(jax.device_put(a, device) for a in host)
+        tiles = up
+    else:
+        data, _offsets, lens, keys, _tiers = snap.to_leaf_stream_global()
+        up = tuple(jax.device_put(a, device) for a in (data, lens, keys))
+        tiles = (up[2], _pad_tiles_on_device(up[0], up[1], snap.pool.B), up[1])
+    if wait:
+        for t in up:
+            t.block_until_ready()
+    nbytes = int(sum(int(t.nbytes) for t in up))
+    stats.add("uploads", len(up))
+    stats.add("bytes_uploaded", nbytes)
+    if tok:
+        _trc.end(tok, "upload", cat="read",
+                 args={"nbytes": nbytes, "n_arrays": len(up),
+                       "device": int(device.id)})
+    return key, tiles, nbytes
+
+
+def install_shard_tiles(snap, key, tiles) -> None:
+    """RECV: commit staged tiles into the per-(snapshot, device) cache.
+
+    ``setdefault`` under the materialization lock: if a concurrent view
+    assembly already uploaded the same (snapshot, device) entry, its tiles
+    win and the staged copy is dropped — both are bitwise-identical
+    materializations of the same immutable snapshot.
+    """
+    with _mat_lock:
+        if snap._shard_dev_cache is None:
+            snap._shard_dev_cache = {}
+        if snap._dev_gen_stamp is None:
+            snap._dev_gen_stamp = _gen_stamp(snap)
+        snap._shard_dev_cache.setdefault(key, tiles)
+
+
+def drop_shard_tiles(snap, device, kinds=("coo", "blocks")) -> int:
+    """FREE: drop ``snap``'s cache entries pinned on ``device``.
+
+    Returns the bytes released.  Safe against concurrent readers: pinned
+    view bundles hold the tile arrays directly, so dropping the cache entry
+    only forces a future assembly at the old placement to re-upload.
+    """
+    freed = 0
+    with _mat_lock:
+        cache = snap._shard_dev_cache
+        if cache:
+            for kind in kinds:
+                tiles = cache.pop((kind, device.id), None)
+                if tiles is not None:
+                    freed += int(sum(int(t.nbytes) for t in tiles))
+    return freed
 
 
 # ---------------------------------------------------------------------------

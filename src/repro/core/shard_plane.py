@@ -22,10 +22,23 @@ index per subgraph.  Built-ins:
   skewed graphs where modulo would land several hubs on one device.
 
 Custom callables ``(weights, n_shards) -> assignment`` are accepted.
-Placement is computed once at attach and is *append-only*: a subgraph's
-device never changes afterwards (new subgraphs go to the policy's choice
-for the extended id), so a predecessor bundle's clean shards stay reusable
-forever.
+
+Placement is **versioned**, not an attach-time constant.  The attach-time
+policy result seeds *epoch 0*; each migration committed by the rebalancer
+(:mod:`repro.core.reshard`) appends a new epoch ``(commit_ts, placement)``
+with the migrated subgraphs re-assigned.  A view resolves the placement of
+the newest epoch at or below its own timestamp (:meth:`ShardPlane.
+placement_at`), so every view at ``ts >= epoch`` sees the new placement and
+every older view keeps resolving the old one — the exact MVCC rule the
+version chains apply to graph data, applied to placement.  Within one
+epoch, placement is still append-only (appended subgraphs get the policy's
+choice for the extended id, identically across all epochs), so a
+predecessor bundle's clean shards stay reusable for same-epoch successors;
+across an epoch boundary, only the shards a migration or commit actually
+touched are rebuilt and every other shard's arrays are still reused by
+object identity.  Epochs are recorded in :class:`~repro.core.version_chain.
+CommitLineage` (``record_placement``) and WAL-logged as no-write commits,
+so recovery restores the same placement history.
 
 Residency lifecycle
 -------------------
@@ -111,6 +124,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Union
 import numpy as np
 
 from ..obs.trace import TRACER as _trc
+from .hooks import RESHARD_HOOKS
 from .leaf_pool import SENTINEL
 
 
@@ -196,6 +210,7 @@ class ShardPlaneStats:
     spliced_segments: int = 0
     operand_uploads: int = 0
     collective_calls: int = 0
+    migration_rebuilds: int = 0
 
     def __post_init__(self) -> None:
         if not self.uploads:
@@ -215,6 +230,7 @@ class ShardPlaneStats:
         self.spliced_segments = 0
         self.operand_uploads = 0
         self.collective_calls = 0
+        self.migration_rebuilds = 0
 
 
 # ---------------------------------------------------------------------------
@@ -381,35 +397,163 @@ class ShardPlane:
         weights = np.array(
             [c.head.n_edges for c in store.chains], np.int64
         )
-        self._placement = np.asarray(
-            self._policy(weights, self.n_shards), np.int64
-        ).copy()
+        base = np.asarray(self._policy(weights, self.n_shards), np.int64).copy()
+        # versioned placement: ascending (epoch_ts, placement) pairs; epoch 0
+        # is the attach-time policy result, each migration flip appends a new
+        # pair.  Arrays are immutable once stored (extension and flips both
+        # append fresh arrays), so slices handed to views stay valid forever.
+        self._epochs: List[tuple] = [(0, base)]
         self._loads = np.bincount(
-            self._placement, weights=weights, minlength=self.n_shards
+            base, weights=weights, minlength=self.n_shards
         ).astype(np.int64)
         # nominal weight charged per appended subgraph: without it the
         # least-loaded argmin below would keep answering the same shard and
         # every append would pile onto one device
         self._nominal = max(1, int(weights.mean()) if len(weights) else 1)
+        self._registered: List[tuple] = []
+        self._register_metrics()
+
+    # -- telemetry -----------------------------------------------------------
+    def _register_metrics(self) -> None:
+        """Per-shard gauges on the owning store's registry.
+
+        These are the rebalancer's primary signals (alongside the write
+        pipeline's ``pipeline_queue_depth``): per-shard upload counters and
+        the current-epoch edge load.  :meth:`close` unregisters every one —
+        ``detach_shard_plane`` must leave the registry exactly as it found
+        it (regression-pinned in ``tests/test_obs.py``).
+        """
+        reg = getattr(self.store, "registry", None)
+        if reg is None:  # pragma: no cover - stores always carry a registry
+            return
+        for k in range(self.n_shards):
+            labels = {"shard": str(k)}
+            reg.gauge("shard_plane_uploads",
+                      fn=lambda k=k: self.stats.uploads[k], **labels)
+            reg.gauge("shard_plane_bytes_uploaded",
+                      fn=lambda k=k: self.stats.bytes_uploaded[k], **labels)
+            reg.gauge("shard_plane_load",
+                      fn=lambda k=k: self.shard_load(k), **labels)
+            self._registered += [
+                ("shard_plane_uploads", labels),
+                ("shard_plane_bytes_uploaded", labels),
+                ("shard_plane_load", labels),
+            ]
+        reg.gauge("shard_plane_epoch", fn=lambda: self.current_epoch)
+        self._registered.append(("shard_plane_epoch", {}))
+
+    def close(self) -> None:
+        """Unregister this plane's per-shard metrics (idempotent)."""
+        reg = getattr(self.store, "registry", None)
+        if reg is not None:
+            for name, labels in self._registered:
+                reg.unregister(name, **labels)
+        self._registered = []
+
+    def shard_load(self, k: int) -> int:
+        """Edge weight resident on shard ``k`` under the current placement."""
+        with self._lock:
+            placement = self._epochs[-1][1]
+        chains = self.store.chains
+        lim = min(len(placement), len(chains))
+        return int(sum(
+            chains[sid].head.n_edges
+            for sid in range(lim) if int(placement[sid]) == k
+        ))
 
     # -- placement -----------------------------------------------------------
-    def placement_for(self, S: int) -> np.ndarray:
-        """Device index per subgraph id, append-only extended to ``S``.
+    @property
+    def current_epoch(self) -> int:
+        """Commit timestamp of the newest placement epoch (0 = attach)."""
+        return self._epochs[-1][0]
 
-        Existing assignments never move (clean-shard reuse depends on it);
-        appended subgraphs go to ``sid % K`` under modulo and to the
-        least-loaded device otherwise.
+    def _extend_locked(self, S: int) -> None:
+        """Append-extend every epoch's placement to length ``S``.
+
+        Appended subgraphs get the SAME assignment in every epoch — they
+        did not exist when older epochs were committed, so there is nothing
+        for those epochs to disagree about, and sharing the assignment
+        keeps old-timestamp views (which can still see an appended
+        subgraph's empty version-0 snapshot) consistent with new ones.
+        """
+        cur = self._epochs[-1][1]
+        while len(cur) < S:
+            sid = len(cur)
+            if self._policy is modulo_placement:
+                k = sid % self.n_shards
+            else:
+                k = int(np.argmin(self._loads))
+                self._loads[k] += self._nominal
+            self._epochs = [
+                (ts, np.append(arr, k)) for ts, arr in self._epochs
+            ]
+            cur = self._epochs[-1][1]
+
+    def placement_for(self, S: int) -> np.ndarray:
+        """The *current* (newest-epoch) placement, append-extended to ``S``.
+
+        Within an epoch, assignments never move (clean-shard reuse depends
+        on it); appended subgraphs go to ``sid % K`` under modulo and to
+        the least-loaded device otherwise.  Views resolve placement by
+        their own timestamp via :meth:`placement_at`.
         """
         with self._lock:
-            while len(self._placement) < S:
-                sid = len(self._placement)
-                if self._policy is modulo_placement:
-                    k = sid % self.n_shards
+            self._extend_locked(S)
+            return self._epochs[-1][1][:S]
+
+    def placement_at(self, ts: int, S: int) -> np.ndarray:
+        """Placement of the newest epoch with ``epoch_ts <= ts``.
+
+        The MVCC read rule for placement: a view pinned at ``ts`` resolves
+        the epoch that was current when ``ts`` was published, so a
+        migration flip at epoch E never changes what an older view sees.
+        """
+        with self._lock:
+            self._extend_locked(S)
+            lo, hi = 0, len(self._epochs) - 1
+            while lo < hi:  # rightmost epoch with epoch_ts <= ts
+                mid = (lo + hi + 1) // 2
+                if self._epochs[mid][0] <= ts:
+                    lo = mid
                 else:
-                    k = int(np.argmin(self._loads))
-                    self._loads[k] += self._nominal
-                self._placement = np.append(self._placement, k)
-            return self._placement[:S]
+                    hi = mid - 1
+            return self._epochs[lo][1][:S]
+
+    def record_epoch(self, ts: int, moves: Dict[int, int]) -> None:
+        """Append a placement epoch at commit timestamp ``ts``.
+
+        Called by the migration runtime after its WAL record is durable and
+        BEFORE ``ts`` publishes (record-before-publish, like lineage), and
+        by ``attach_shard_plane`` replaying a recovered store's placement
+        log.  Destination shard indices are folded ``% n_shards`` so a log
+        recorded on a larger mesh re-attaches deterministically to a
+        smaller one (restoration is exact when the mesh size matches).
+        """
+        with self._lock:
+            prev_ts, prev = self._epochs[-1]
+            if ts <= prev_ts:
+                raise ValueError(
+                    f"placement epoch {ts} not after newest epoch {prev_ts}"
+                )
+            if moves:
+                self._extend_locked(max(int(s) for s in moves) + 1)
+                prev = self._epochs[-1][1]
+            nxt = prev.copy()
+            for sid, k in moves.items():
+                nxt[int(sid)] = int(k) % self.n_shards
+            self._epochs.append((int(ts), nxt))
+            weights = np.array(
+                [c.head.n_edges for c in self.store.chains], np.int64
+            )
+            lim = min(len(weights), len(nxt))
+            self._loads = np.bincount(
+                nxt[:lim], weights=weights[:lim], minlength=self.n_shards
+            ).astype(np.int64)
+
+    def placement_epochs(self) -> List[tuple]:
+        """Snapshot of the epoch history: ``[(epoch_ts, placement), ...]``."""
+        with self._lock:
+            return [(ts, arr.copy()) for ts, arr in self._epochs]
 
     # -- residency -----------------------------------------------------------
     def _fetch(self, snap, k: int, fetch_fn) -> tuple:
@@ -446,10 +590,19 @@ class ShardPlane:
             False,
         )
 
-    def _finalize_cols(self, live_cols, cap: int, pad_vals, with_valid: bool, n_live: int):
+    def _finalize_cols(self, live_cols, cap: int, pad_vals, with_valid: bool, n_live: int, device):
         """Pad 1-D-leading live columns to ``cap`` and lift them into the
         ``[1, cap, ...]`` global component layout (one device-local reshape
-        per rebuilt shard — clean shards and global assembly never copy)."""
+        per rebuilt shard — clean shards and global assembly never copy).
+
+        Every finished column is committed to ``device``: zero-element
+        intermediates (an all-deleted subgraph's live columns) lose their
+        committed device under jax — any op with a 0-sized output lands on
+        the default device — and a shard bundle whose buffers sit on the
+        wrong device breaks ``make_array_from_single_device_arrays``.  The
+        ``device_put`` is a no-op for the already-resident common case.
+        """
+        import jax
         import jax.numpy as jnp
 
         cols = []
@@ -458,10 +611,13 @@ class ShardPlane:
             if pad:
                 widths = ((0, pad),) + ((0, 0),) * (col.ndim - 1)
                 col = jnp.pad(col, widths, constant_values=pv)
-            cols.append(col[None])
+            cols.append(jax.device_put(col[None], device))
         valid = None
         if with_valid:
-            valid = (jnp.cumsum(jnp.ones_like(cols[0], jnp.int32), axis=1) - 1) < n_live
+            valid = jax.device_put(
+                (jnp.cumsum(jnp.ones_like(cols[0], jnp.int32), axis=1) - 1) < n_live,
+                device,
+            )
         return tuple(cols), valid
 
     def _empty_cols(self, k: int, kind: str, B: int):
@@ -509,7 +665,7 @@ class ShardPlane:
             offsets = np.zeros(len(counts) + 1, np.int64)
             np.cumsum(counts, out=offsets[1:])
             cols, valid = self._finalize_cols(
-                live_cols, cap, pad_vals, with_valid, lives[k]
+                live_cols, cap, pad_vals, with_valid, lives[k], self.devices[k]
             )
             shards.append(
                 ShardBundle(
@@ -585,6 +741,7 @@ class ShardPlane:
                     cols, valid = self._finalize_cols(
                         tuple(c[0, : pred_shard.n_live] for c in pred_shard.cols),
                         cap, pad_vals, with_valid, pred_shard.n_live,
+                        pred_shard.device,
                     )
                     shards.append(
                         ShardBundle(
@@ -682,7 +839,8 @@ class ShardPlane:
                 else:
                     live_cols = self._empty_cols(k, kind, view.B)
                 cols, valid = self._finalize_cols(
-                    live_cols, cap, pad_vals, with_valid, n_live
+                    live_cols, cap, pad_vals, with_valid, n_live,
+                    pred_shard.device,
                 )
                 shards.append(
                     ShardBundle(
@@ -694,13 +852,120 @@ class ShardPlane:
             self.stats.spliced_segments += n_spliced
         return ShardedKind(cap, shards, seg_counts)
 
+    def _rebuild_moved(
+        self,
+        view,
+        placement: np.ndarray,
+        pred_kind: ShardedKind,
+        pred_placement: np.ndarray,
+        pred_S: int,
+        dirty: Sequence[int],
+        kind: str,
+    ) -> ShardedKind:
+        """Cross-epoch splice: predecessor from an older placement epoch.
+
+        Only the shards a migration or commit actually touched rebuild —
+        the source and destination shard of every moved subgraph, plus the
+        shard of every lineage-dirty or appended subgraph; every other
+        shard's arrays are reused by object identity (counter-asserted in
+        ``tests/test_property_reshard.py``).  Touched shards refetch all of
+        their subgraphs' tiles, which is a per-(snapshot, device) cache hit
+        for every clean already-resident subgraph and an upload only for
+        the moved/dirty ones (the migration runtime pre-stages the moved
+        tiles, so even those are usually hits).
+        """
+        import jax.numpy as jnp
+
+        fetch_fn, floor, pad_vals, with_valid = self._kind_params(kind, view)
+        S = len(view.snaps)
+        lim = min(int(pred_S), S)
+        moved = [
+            sid for sid in range(lim)
+            if int(pred_placement[sid]) != int(placement[sid])
+        ]
+        touched = {int(placement[s]) for s in list(dirty) + moved}
+        touched |= {int(pred_placement[s]) for s in moved}
+        seg_counts = np.zeros(S, np.int64)
+        seg_counts[:lim] = pred_kind.seg_counts[:lim]
+        fetched: Dict[int, Dict[int, tuple]] = {k: {} for k in touched}
+        for sid in range(S):
+            k = int(placement[sid])
+            if k in fetched:
+                tiles = self._fetch(view.snaps[sid], k, fetch_fn)
+                fetched[k][sid] = tiles
+                seg_counts[sid] = int(tiles[0].shape[0])
+        lives_touched = [
+            sum(int(t[0].shape[0]) for t in fk.values())
+            for fk in fetched.values()
+        ]
+        cap = max(
+            pred_kind.cap,
+            _round_cap(max(lives_touched) if lives_touched else 0, floor),
+        )
+        shards: List[ShardBundle] = []
+        for k in range(self.n_shards):
+            pred_shard = pred_kind.shards[k]
+            if k not in touched:
+                # no subgraph moved in or out and none dirty: this shard's
+                # sid set and contents are unchanged across the epoch flip
+                if cap == pred_kind.cap:
+                    shards.append(pred_shard)
+                    with self._lock:
+                        self.stats.shard_reuses += 1
+                else:
+                    cols, valid = self._finalize_cols(
+                        tuple(c[0, : pred_shard.n_live] for c in pred_shard.cols),
+                        cap, pad_vals, with_valid, pred_shard.n_live,
+                        pred_shard.device,
+                    )
+                    shards.append(
+                        ShardBundle(
+                            pred_shard.device, pred_shard.sids,
+                            pred_shard.offsets, pred_shard.n_live, cap, cols,
+                            valid,
+                        )
+                    )
+                    with self._lock:
+                        self.stats.repads += 1
+                continue
+            fk = fetched[k]
+            sids_k = np.asarray(sorted(fk), np.int64)
+            counts = [int(fk[int(s)][0].shape[0]) for s in sids_k]
+            offsets = np.zeros(len(counts) + 1, np.int64)
+            np.cumsum(counts, out=offsets[1:])
+            n_live = int(offsets[-1])
+            tiles_k = [fk[int(s)] for s in sids_k]
+            if tiles_k:
+                n_cols = len(tiles_k[0])
+                live_cols = tuple(
+                    jnp.concatenate([t[i] for t in tiles_k])
+                    if len(tiles_k) > 1 else tiles_k[0][i]
+                    for i in range(n_cols)
+                )
+            else:
+                live_cols = self._empty_cols(k, kind, view.B)
+            cols, valid = self._finalize_cols(
+                live_cols, cap, pad_vals, with_valid, n_live, self.devices[k]
+            )
+            shards.append(
+                ShardBundle(
+                    self.devices[k], sids_k, offsets, n_live, cap, cols, valid
+                )
+            )
+        with self._lock:
+            self.stats.migration_rebuilds += 1
+        return ShardedKind(cap, shards, seg_counts)
+
     def _sharded_kind(self, view, kind: str) -> ShardedKind:
         from . import view_assembler
 
         a = view_assembler._bundle(view)
         sh = a.sharded
         S = len(view.snaps)
-        placement = self.placement_for(S)
+        # versioned placement: resolve the epoch current at THIS view's
+        # timestamp, so a migration flip never changes an older view
+        placement = self.placement_at(view.ts, S)
+        RESHARD_HOOKS.fire("hook_before_assembly", ts=view.ts, kind=kind)
         if sh is None:
             sh = ShardedViewAssembly(view.ts, S, np.array(placement))
             a.sharded = sh
@@ -711,6 +976,7 @@ class ShardPlane:
             self.stats.assemblies += 1
         plan = view_assembler._plan(view)
         pred_kind = None
+        pred_moved = None  # predecessor from an older placement epoch
         pred_S = 0
         if plan is not None:
             pred_b, dirty = plan
@@ -720,7 +986,6 @@ class ShardPlane:
                 cand is not None
                 and psh.placement is not None
                 and len(psh.placement) <= S
-                and np.array_equal(psh.placement, placement[: len(psh.placement)])
                 # the bundle must have been built against THIS plane's mesh:
                 # a re-attached plane with a different shard count or device
                 # order cannot splice (or reuse) the old per-shard arrays
@@ -729,8 +994,16 @@ class ShardPlane:
                     b.device == d for b, d in zip(cand.shards, self.devices)
                 )
             ):
-                pred_kind = cand
-                pred_S = psh.S
+                if np.array_equal(
+                    psh.placement, placement[: len(psh.placement)]
+                ):
+                    pred_kind = cand
+                    pred_S = psh.S
+                else:
+                    # the predecessor was assembled under a different
+                    # placement epoch: its untouched shards are still
+                    # reusable, only migrated/dirty shards rebuild
+                    pred_moved = (cand, psh.placement, psh.S)
         if pred_kind is not None:
             if not dirty and pred_S == S:
                 setattr(sh, kind, pred_kind)  # wholesale bundle reuse
@@ -738,6 +1011,11 @@ class ShardPlane:
                     self.stats.reuses += 1
                 return pred_kind
             built = self._splice_kind(view, placement, pred_kind, pred_S, dirty, kind)
+        elif pred_moved is not None:
+            built = self._rebuild_moved(
+                view, placement, pred_moved[0], pred_moved[1], pred_moved[2],
+                dirty, kind,
+            )
         else:
             built = self._build_full(view, placement, kind)
         setattr(sh, kind, built)

@@ -155,6 +155,11 @@ class RapidStore:
         self._retire_lock = threading.Lock()
         # mesh shard plane (attach_shard_plane); None = single-device paths
         self.shard_plane = None
+        # durable placement-epoch history [(ts, {sid: dst})] — replayed into
+        # a freshly attached plane so placement survives detach/recover
+        self._placement_log: List[Tuple[int, Dict[int, int]]] = []
+        # elastic rebalancer (attach_rebalancer); None = static placement
+        self.rebalancer = None
         # decoupled write pipeline (attach_write_pipeline); None = single-shot
         self.write_pipeline = None
         # durability + tiering (attach_wal / attach_compactor)
@@ -222,6 +227,8 @@ class RapidStore:
         store._retired_assembly = None
         store._retire_lock = threading.Lock()
         store.shard_plane = None
+        store._placement_log = []
+        store.rebalancer = None
         store.write_pipeline = None
         store.wal = None
         store.compactor = None
@@ -447,12 +454,19 @@ class RapidStore:
         ``shard_map`` kernels over mesh-pinned tiles.  ``symmetric=True``
         declares the store holds a symmetrized graph, enabling the
         bitwise-exact pull-form PageRank (see the shard_plane docstring).
+
+        Any placement epochs in the store's durable log (earlier
+        migrations, or WAL-replayed migrate records) are replayed into the
+        fresh plane, so a re-attach — including after :meth:`recover` —
+        resolves the same placement history as before.
         """
         from .shard_plane import ShardPlane
 
         plane = ShardPlane(
             self, mesh=mesh, n_devices=n_devices, policy=policy, symmetric=symmetric
         )
+        for ts, moves in self._placement_log:
+            plane.record_epoch(ts, moves)
         self.shard_plane = plane
         return plane
 
@@ -489,14 +503,58 @@ class RapidStore:
     def detach_shard_plane(self) -> None:
         """Drop the plane; new views take the single-device paths again.
 
-        The retained retired bundle's sharded twin is released so the
-        per-shard arrays do not outlive the plane that built them.
+        Releases everything the plane pinned: its per-shard telemetry
+        metrics (``plane.close()`` — leaving them registered would leak
+        dead gauges into every export and keep the plane alive through
+        their closures), the retired AND frozen-base bundles' sharded
+        twins, and every snapshot's per-(snapshot, device) shard tile
+        cache, so ``memory_bytes()`` returns to its pre-attach level.
         """
+        if self.rebalancer is not None:
+            self.detach_rebalancer()
+        plane = self.shard_plane
         self.shard_plane = None
+        if plane is not None:
+            plane.close()
         with self._retire_lock:
             retired = self._retired_assembly
             if retired is not None:
                 retired.sharded = None
+        base = self._base_assembly
+        if base is not None:
+            base.sharded = None
+        from . import device_cache as _dc
+
+        with _dc._mat_lock:
+            for chain in self.chains:
+                for snap in chain._versions:
+                    cache = getattr(snap, "_shard_dev_cache", None)
+                    if cache:
+                        cache.clear()
+
+    # -- elastic rebalancer -------------------------------------------------------
+    def attach_rebalancer(self, **kw):
+        """Attach a :class:`~repro.core.reshard.Rebalancer` (see its doc).
+
+        Requires an attached shard plane.  Keyword arguments are forwarded
+        (``imbalance_threshold``, ``max_moves``, ``queue_weight``).  Drive
+        it with ``rebalancer.rebalance_once()`` or ``rebalancer.start()``.
+        """
+        from .reshard import Rebalancer
+
+        if self.rebalancer is not None:
+            raise RuntimeError("a rebalancer is already attached")
+        self.rebalancer = Rebalancer(self, **kw)
+        return self.rebalancer
+
+    def detach_rebalancer(self) -> None:
+        rb = self.rebalancer
+        if rb is None:
+            return
+        try:
+            rb.stop()
+        finally:
+            self.rebalancer = None
 
     # -- durability: WAL + compactor + checkpoint + recovery ----------------------
     def attach_wal(self, path, fsync: bool = True):
@@ -711,10 +769,22 @@ class RapidStore:
         never-synced commits) are stepped over exactly as the live clock
         stepped over them.
         """
-        from .wal import KIND_REPACK
+        from .wal import KIND_MIGRATE, KIND_REPACK
         from .subgraph import build_subgraph as _build
 
         self._ensure_vertices(rec.n_vertices)
+        if rec.kind == KIND_MIGRATE:
+            # placement flip: a no-write commit — restore the epoch into the
+            # durable log (and the plane, if one is already attached) at its
+            # original timestamp so recovered views resolve the same
+            # placement history the crashed store did
+            moves = dict(rec.moves)
+            self._placement_log.append((rec.ts, moves))
+            self.lineage.record_placement(rec.ts, moves)
+            if self.shard_plane is not None:
+                self.shard_plane.record_epoch(rec.ts, moves)
+            self.clock.restore(rec.ts)
+            return
         if rec.kind == KIND_REPACK:
             for sid in rec.sids:
                 head = self.chains[sid].head

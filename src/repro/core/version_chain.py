@@ -48,7 +48,7 @@ class CommitLineage:
 
     __slots__ = (
         "_lock", "_ts", "_sids", "_counts", "_base_ts", "max_records",
-        "total_writes",
+        "total_writes", "_ep_ts", "_ep_moves",
     )
 
     def __init__(self, max_records: int = 4096) -> None:
@@ -59,6 +59,11 @@ class CommitLineage:
         self._base_ts = 0  # every commit with ts > _base_ts is recorded
         self.max_records = int(max_records)
         self.total_writes = 0  # logical writes ever recorded (survives trim)
+        # placement epochs (core.reshard): the no-write commits that flipped
+        # the shard plane's placement map, recorded here like any other
+        # commit so placement is a lineage artifact, not plane-private state
+        self._ep_ts: List[int] = []
+        self._ep_moves: List[dict] = []  # {sid: dst shard index} per epoch
 
     def record(self, ts: int, sids: Iterable[int], n_writes: int = 1) -> None:
         """Log one commit.  Called by the writer before publishing ``ts``.
@@ -78,6 +83,40 @@ class CommitLineage:
                 del self._ts[0]
                 del self._sids[0]
                 del self._counts[0]
+
+    def record_placement(self, ts: int, moves) -> None:
+        """Log a placement-epoch flip committed at ``ts``.
+
+        Called by the migration runtime (:mod:`repro.core.reshard`) before
+        publishing the epoch timestamp, mirroring :meth:`record`'s
+        record-before-publish contract: once a reader observes
+        ``t_r >= ts`` the epoch is queryable.  ``moves`` maps subgraph id
+        to its new shard index.
+        """
+        with self._lock:
+            i = bisect.bisect_right(self._ep_ts, ts)
+            self._ep_ts.insert(i, int(ts))
+            self._ep_moves.insert(i, {int(s): int(k) for s, k in moves.items()})
+
+    def placement_epochs_between(self, a: int, b: int):
+        """Placement epochs committed in ``(min(a,b), max(a,b)]``.
+
+        Returns ``[(ts, moves), ...]`` ascending, or ``None`` when the
+        window reaches into the trimmed region (mirrors
+        :meth:`dirty_between`); an empty list means the two timestamps
+        resolve the same placement.
+        """
+        lo, hi = (a, b) if a <= b else (b, a)
+        if lo == hi:
+            return []
+        with self._lock:
+            if lo < self._base_ts:
+                return None
+            i = bisect.bisect_right(self._ep_ts, lo)
+            j = bisect.bisect_right(self._ep_ts, hi)
+            return [
+                (self._ep_ts[k], dict(self._ep_moves[k])) for k in range(i, j)
+            ]
 
     def dirty_between(self, a: int, b: int) -> Optional[FrozenSet[int]]:
         """Union of dirty sets for commits in ``(min(a,b), max(a,b)]``.
@@ -134,6 +173,9 @@ class CommitLineage:
             del self._ts[:i]
             del self._sids[:i]
             del self._counts[:i]
+            j = bisect.bisect_right(self._ep_ts, ts)
+            del self._ep_ts[:j]
+            del self._ep_moves[:j]
             self._base_ts = int(ts)
             return i
 
@@ -153,9 +195,12 @@ class CommitLineage:
         with self._lock:
             n = len(self._ts)
             sid_entries = sum(len(s) for s in self._sids)
+            ep_n = len(self._ep_ts)
+            ep_entries = sum(len(m) for m in self._ep_moves)
         # ~88 bytes/record: 3 list slots (24) + small int (28 avg, shared for
-        # tiny values but not for timestamps) + frozenset header amortized
-        return 88 * n + 8 * sid_entries
+        # tiny values but not for timestamps) + frozenset header amortized;
+        # placement epochs: 2 list slots + dict header + 16B per move entry
+        return 88 * n + 8 * sid_entries + 80 * ep_n + 16 * ep_entries
 
     def __len__(self) -> int:
         return len(self._ts)

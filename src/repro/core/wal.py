@@ -33,6 +33,7 @@ File format (all little-endian)::
                        | dels int64 [n_dels, 2]
                        | vset (int64 vid, u8 flag) * n_vset
       kind 1 (repack): u32 n_sids | sids int64 [n_sids]
+      kind 2 (migrate): u32 n_moves | (int64 sid, int64 dst_shard) * n_moves
 
 A torn tail (crash mid-append) is detected by the length/CRC frame and
 truncated on reopen; everything before it replays.  ``start_ts`` is the
@@ -57,19 +58,23 @@ _HEADER = struct.Struct("<4sIQ")   # magic, version, start_ts
 _FRAME = struct.Struct("<II")      # payload_len, crc32
 _COMMIT_HEAD = struct.Struct("<BQQIII")  # kind, ts, n_vertices, n_ins, n_dels, n_vset
 _REPACK_HEAD = struct.Struct("<BQQI")    # kind, ts, n_vertices, n_sids
+_MIGRATE_HEAD = struct.Struct("<BQQI")   # kind, ts, n_vertices, n_moves
 _VSET_ENTRY = struct.Struct("<qB")
+_MOVE_ENTRY = struct.Struct("<qq")       # sid, dst shard index
 
 KIND_COMMIT = 0
 KIND_REPACK = 1
+KIND_MIGRATE = 2
 
 
 class WalRecord:
     """One decoded log record (see the module docstring for the format)."""
 
-    __slots__ = ("kind", "ts", "n_vertices", "ins", "dels", "vset", "sids")
+    __slots__ = ("kind", "ts", "n_vertices", "ins", "dels", "vset", "sids",
+                 "moves")
 
     def __init__(self, kind, ts, n_vertices, ins=None, dels=None, vset=None,
-                 sids=None) -> None:
+                 sids=None, moves=None) -> None:
         self.kind = kind
         self.ts = ts
         self.n_vertices = n_vertices
@@ -77,10 +82,13 @@ class WalRecord:
         self.dels = dels
         self.vset = vset
         self.sids = sids
+        self.moves = moves  # KIND_MIGRATE: {sid: dst shard index}
 
     def __repr__(self) -> str:  # pragma: no cover - debug aid
         if self.kind == KIND_REPACK:
             return f"WalRecord(repack, ts={self.ts}, sids={self.sids})"
+        if self.kind == KIND_MIGRATE:
+            return f"WalRecord(migrate, ts={self.ts}, moves={self.moves})"
         return (
             f"WalRecord(commit, ts={self.ts}, ins={len(self.ins)}, "
             f"dels={len(self.dels)}, vset={len(self.vset or {})})"
@@ -105,6 +113,13 @@ def _encode_commit(ts, ins, dels, vset, n_vertices) -> bytes:
 def _encode_repack(ts, sids, n_vertices) -> bytes:
     sids = np.ascontiguousarray(np.asarray(sids, np.int64).reshape(-1))
     return _REPACK_HEAD.pack(KIND_REPACK, ts, n_vertices, len(sids)) + sids.tobytes()
+
+
+def _encode_migrate(ts, moves, n_vertices) -> bytes:
+    parts = [_MIGRATE_HEAD.pack(KIND_MIGRATE, ts, n_vertices, len(moves))]
+    for sid in sorted(moves):
+        parts.append(_MOVE_ENTRY.pack(int(sid), int(moves[sid])))
+    return b"".join(parts)
 
 
 def _decode(payload: bytes) -> WalRecord:
@@ -132,6 +147,17 @@ def _decode(payload: bytes) -> WalRecord:
         if off + n_sids * 8 != len(payload):
             raise ValueError("repack record length mismatch")
         return WalRecord(KIND_REPACK, ts, n_vertices, sids=[int(s) for s in sids])
+    if kind == KIND_MIGRATE:
+        _, ts, n_vertices, n_moves = _MIGRATE_HEAD.unpack_from(payload)
+        off = _MIGRATE_HEAD.size
+        moves: Dict[int, int] = {}
+        for _ in range(n_moves):
+            sid, dst = _MOVE_ENTRY.unpack_from(payload, off)
+            moves[int(sid)] = int(dst)
+            off += _MOVE_ENTRY.size
+        if off != len(payload):
+            raise ValueError("migrate record length mismatch")
+        return WalRecord(KIND_MIGRATE, ts, n_vertices, moves=moves)
     raise ValueError(f"unknown WAL record kind {kind}")
 
 
@@ -220,6 +246,16 @@ class WriteAheadLog:
         """Log a compactor repack (layout-only commit) at ``ts``."""
         self._append(_encode_repack(int(ts), sids, int(n_vertices)))
 
+    def append_migrate(self, ts: int, moves, n_vertices: int) -> None:
+        """Log a placement-epoch flip (no-write commit) at ``ts``.
+
+        ``moves`` maps subgraph id -> destination shard index.  Like
+        repacks, migrations carry no edge-set effect but ARE replayed by
+        :meth:`RapidStore.recover` so the restored store's placement
+        history matches the crashed store's.
+        """
+        self._append(_encode_migrate(int(ts), moves, int(n_vertices)))
+
     def sync(self) -> None:
         """Durability barrier: flush buffered records (+fsync when enabled).
 
@@ -263,6 +299,8 @@ class WriteAheadLog:
                 for r in keep:
                     if r.kind == KIND_REPACK:
                         payload = _encode_repack(r.ts, r.sids, r.n_vertices)
+                    elif r.kind == KIND_MIGRATE:
+                        payload = _encode_migrate(r.ts, r.moves, r.n_vertices)
                     else:
                         payload = _encode_commit(
                             r.ts, r.ins, r.dels, r.vset, r.n_vertices
@@ -327,4 +365,5 @@ class WriteAheadLog:
         return int(start_ts), records, clean and end == len(raw)
 
 
-__all__ = ["KIND_COMMIT", "KIND_REPACK", "WalRecord", "WriteAheadLog"]
+__all__ = ["KIND_COMMIT", "KIND_MIGRATE", "KIND_REPACK", "WalRecord",
+           "WriteAheadLog"]

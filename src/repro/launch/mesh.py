@@ -8,6 +8,8 @@ optional int8 compression, optim/compression.py).
 
 from __future__ import annotations
 
+import os
+
 from repro.jax_compat import make_mesh  # noqa: F401  (canonical compat home)
 
 
@@ -48,3 +50,73 @@ def make_shard_mesh(n_devices=None, axis: str = "shard"):
     if k < 1 or k > len(devs):
         raise ValueError(f"n_devices={k} outside [1, {len(devs)}]")
     return Mesh(np.array(devs[:k]), (axis,))
+
+
+def multihost_enabled() -> bool:
+    """True when ``REPRO_MULTIHOST=1``: the shard mesh spans processes."""
+    return os.environ.get("REPRO_MULTIHOST", "") == "1"
+
+
+def init_distributed(
+    coordinator_address=None,
+    num_processes=None,
+    process_id=None,
+) -> bool:
+    """Initialize the ``jax.distributed`` runtime when multi-host is on.
+
+    The multi-process entry point for the shard plane: each host process
+    calls this before touching jax, then builds its mesh with
+    :func:`distributed_shard_mesh`.  Behind ``REPRO_MULTIHOST=1`` —
+    flag off (the default, and the whole tier-1 matrix) this is a no-op
+    returning False, so every single-process path is untouched.  The
+    coordinator/process arguments fall back to the standard
+    ``JAX_COORDINATOR_ADDRESS`` / ``JAX_NUM_PROCESSES`` /
+    ``JAX_PROCESS_ID`` environment variables; with none of them set the
+    runtime auto-detects (cluster environments) or comes up as a
+    single-process service.  Idempotent: a second call is a no-op.
+    """
+    if not multihost_enabled():
+        return False
+    import jax
+
+    client = getattr(jax.distributed, "global_state", None)
+    if client is not None and getattr(client, "client", None) is not None:
+        return True  # already initialized
+    kw = {}
+    addr = coordinator_address or os.environ.get("JAX_COORDINATOR_ADDRESS")
+    if addr:
+        kw["coordinator_address"] = addr
+    n = num_processes if num_processes is not None \
+        else os.environ.get("JAX_NUM_PROCESSES")
+    if n is not None:
+        kw["num_processes"] = int(n)
+    pid = process_id if process_id is not None \
+        else os.environ.get("JAX_PROCESS_ID")
+    if pid is not None:
+        kw["process_id"] = int(pid)
+    jax.distributed.initialize(**kw)
+    return True
+
+
+def distributed_shard_mesh(n_devices=None, axis: str = "shard"):
+    """Shard-plane mesh for single- OR multi-process runs.
+
+    With ``REPRO_MULTIHOST=1`` this initializes ``jax.distributed`` (see
+    :func:`init_distributed`) and builds the mesh over the *global* device
+    list — every process must call it with the same ``n_devices`` (the
+    collective-launch contract).  Flag off, it is exactly
+    :func:`make_shard_mesh` over the local devices: the forced-host-device
+    tier-1 legs and every notebook keep working unchanged.
+    """
+    if multihost_enabled():
+        import jax
+        import numpy as np
+        from jax.sharding import Mesh
+
+        init_distributed()
+        devs = jax.devices()  # global across processes once initialized
+        k = len(devs) if n_devices is None else int(n_devices)
+        if k < 1 or k > len(devs):
+            raise ValueError(f"n_devices={k} outside [1, {len(devs)}]")
+        return Mesh(np.array(devs[:k]), (axis,))
+    return make_shard_mesh(n_devices, axis)

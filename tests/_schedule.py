@@ -1,0 +1,142 @@
+"""Deterministic concurrency-schedule harness for interleaving tests.
+
+Forces a specific thread interleaving through the named hook points the
+runtime fires (:data:`repro.core.hooks.RESHARD_HOOKS` — e.g.
+``hook_before_flip`` between a migration's staging and its placement flip)
+instead of sleeping and hoping.  A test builds a :class:`Schedule`,
+*traps* the hook points it wants to park the runtime at, spawns the
+concurrent parties, and then scripts the interleaving explicitly:
+
+    with Schedule() as sched:
+        sched.trap("hook_before_flip")
+        t = sched.spawn(lambda: rb.execute(plan))
+        sched.wait("hook_before_flip")   # migration parked pre-flip
+        ...open a reader view here...
+        sched.release("hook_before_flip")
+        sched.join()
+
+``trap`` installs a hook that signals arrival and then blocks until the
+test releases it — the trapped thread is parked *inside* the runtime's
+critical section, so whatever the test does between ``wait`` and
+``release`` is genuinely concurrent with that program point.  ``sync``
+gives symmetric barrier-style rendezvous for thread-vs-thread schedules
+that don't involve a hook point.
+
+Every blocking primitive carries the schedule's timeout, and any failure
+(a spawned thread raising, a barrier breaking, a timeout) aborts the whole
+schedule — traps release, barriers break, and ``join`` re-raises — so a
+wrong schedule fails the test instead of deadlocking the suite.
+"""
+
+import threading
+
+from repro.core.hooks import RESHARD_HOOKS
+
+
+class ScheduleTimeout(AssertionError):
+    """A schedule primitive timed out — the forced interleaving is wrong."""
+
+
+class Schedule:
+    def __init__(self, timeout: float = 60.0, hooks=RESHARD_HOOKS):
+        self.timeout = float(timeout)
+        self.hooks = hooks
+        self._traps = {}      # name -> (reached Event, release Event)
+        self._barriers = {}   # name -> threading.Barrier
+        self._threads = []
+        self._errors = []
+        self._lock = threading.Lock()
+
+    # -- hook traps ----------------------------------------------------------
+    def trap(self, name: str) -> None:
+        """Install a trap: the next thread firing ``name`` parks until
+        :meth:`release`.  The trap re-arms on every firing."""
+        reached, release = threading.Event(), threading.Event()
+        self._traps[name] = (reached, release)
+
+        def _hook(**info):
+            reached.set()
+            if not release.wait(self.timeout):
+                raise ScheduleTimeout(f"trap {name!r} never released")
+
+        self.hooks.set(name, _hook)
+
+    def wait(self, name: str) -> None:
+        """Block until a thread is parked at trap ``name``."""
+        reached, _ = self._traps[name]
+        if not reached.wait(self.timeout):
+            self._abort()
+            raise ScheduleTimeout(f"trap {name!r} never reached")
+
+    def release(self, name: str) -> None:
+        """Unpark the thread at trap ``name`` (and any future arrivals)."""
+        self._traps[name][1].set()
+
+    def reached(self, name: str) -> bool:
+        return self._traps[name][0].is_set()
+
+    # -- barrier rendezvous ---------------------------------------------------
+    def sync(self, name: str, parties: int = 2) -> None:
+        """Rendezvous ``parties`` threads at a named point (memoized)."""
+        with self._lock:
+            bar = self._barriers.get(name)
+            if bar is None:
+                bar = self._barriers[name] = threading.Barrier(
+                    parties, timeout=self.timeout
+                )
+        try:
+            bar.wait()
+        except threading.BrokenBarrierError:
+            raise ScheduleTimeout(f"barrier {name!r} broken")
+
+    # -- threads --------------------------------------------------------------
+    def spawn(self, fn, *args) -> threading.Thread:
+        """Run ``fn`` on a schedule-tracked thread; its exception (if any)
+        aborts the schedule and re-raises at :meth:`join`."""
+
+        def _run():
+            try:
+                fn(*args)
+            except BaseException as exc:  # noqa: BLE001 - reported via join
+                self.fail(exc)
+
+        t = threading.Thread(target=_run, daemon=True)
+        self._threads.append(t)
+        t.start()
+        return t
+
+    def join(self) -> None:
+        """Wait for every spawned thread; re-raise the first failure."""
+        for t in self._threads:
+            t.join(self.timeout)
+            if t.is_alive():
+                self._abort()
+                raise ScheduleTimeout("spawned thread did not finish")
+        if self._errors:
+            raise self._errors[0]
+
+    def fail(self, exc: BaseException) -> None:
+        """Record a failure and abort everything blocked on the schedule."""
+        with self._lock:
+            self._errors.append(exc)
+        self._abort()
+
+    def _abort(self) -> None:
+        for bar in self._barriers.values():
+            bar.abort()
+        for _, release in self._traps.values():
+            release.set()
+
+    # -- lifecycle ------------------------------------------------------------
+    def close(self) -> None:
+        """Uninstall every trap hook and release anything still parked."""
+        for name in self._traps:
+            self.hooks.set(name, None)
+        self._abort()
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+        return False

@@ -1,0 +1,154 @@
+"""Hypothesis property tests for elastic resharding (core.reshard).
+
+Random interleavings of symmetric writes, deletes, compactions, and tile
+migrations against a shard-plane store: every checkpoint view must stay
+bitwise-identical to the ``*_uncached`` oracles
+(:func:`tests._parity.assert_view_matches_oracles`), every ``*_view`` entry
+point must match its independent oracle at the end of the example, and the
+edge set must track a plain dict-of-sets oracle — i.e. migration is a pure
+placement change, never a data change.
+
+The suite runs on whatever device count the session has: on the
+single-device unit-test session every migration folds to a no-op epoch
+(the machinery still runs; the placement cannot change), while the
+``host-mesh-4-reshard`` tier-1 leg runs it on a forced 4-device mesh where
+migrations genuinely move tiles.  With ``REPRO_RESHARD_LIVE=1`` (that CI
+leg) a background rebalancer daemon runs *during* every example, so the
+random interleavings race a live migration loop.
+
+The deterministic clean-shard identity-reuse contract (shards untouched by
+a migration keep their bundles by object identity) runs as a 4-device
+subprocess test alongside.
+"""
+
+import os
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from _parity import (
+    ENTRY_CASES,
+    assert_view_matches_oracles,
+    hypothesis_examples as _examples,
+    make_entry_ctx,
+)
+from repro.core import RapidStore
+
+N_VERTICES = 64
+P = 8  # 8 subgraphs
+B = 8
+
+RESHARD_LIVE = os.environ.get("REPRO_RESHARD_LIVE", "") == "1"
+
+edge = st.tuples(
+    st.integers(0, N_VERTICES - 1), st.integers(0, N_VERTICES - 1)
+).filter(lambda e: e[0] != e[1])
+
+step = st.one_of(
+    st.tuples(st.just("write"), st.lists(edge, min_size=1, max_size=6),
+              st.lists(edge, min_size=0, max_size=4)),
+    st.tuples(st.just("migrate"), st.integers(0, 7), st.integers(1, 3)),
+    st.tuples(st.just("compact")),
+    st.tuples(st.just("read")),
+)
+
+
+def _sym(pairs):
+    """Both directions of every pair (the store stays symmetric, so the
+    plane's pull-form analytics keep the bitwise contract)."""
+    if not pairs:
+        return np.empty((0, 2), np.int64)
+    a = np.array(pairs, np.int64)
+    return np.concatenate([a, a[:, ::-1]])
+
+
+@settings(max_examples=_examples(20), deadline=None)
+@given(steps=st.lists(step, min_size=3, max_size=16))
+def test_random_migrate_interleavings_bitmatch_oracles(steps):
+    store = RapidStore(N_VERTICES, partition_size=P, B=B, high_threshold=4)
+    plane = store.attach_shard_plane(symmetric=True)
+    rb = store.attach_rebalancer()
+    comp = store.attach_compactor(min_waste_rows=0)
+    if RESHARD_LIVE:
+        rb.start(interval=0.01)
+    oracle = set()
+    epochs0 = len(plane.placement_epochs())
+    try:
+        for s in steps:
+            if s[0] == "write":
+                _, ins, dels = s
+                store.apply(_sym(ins), _sym(dels))
+                oracle |= {tuple(map(int, e)) for e in ins}
+                oracle |= {(int(v), int(u)) for u, v in ins}
+                oracle -= {tuple(map(int, e)) for e in dels}
+                oracle -= {(int(v), int(u)) for u, v in dels}
+            elif s[0] == "migrate":
+                _, sid, delta = s
+                cur = int(plane.placement_for(store.n_subgraphs)[sid])
+                dst = (cur + delta) % plane.n_shards
+                rb.execute(rb.plan_moves({sid: dst}))
+            elif s[0] == "compact":
+                comp.compact_once()
+            else:  # read
+                with store.read_view() as view:
+                    assert_view_matches_oracles(view)
+                    assert view.edge_set() == oracle
+        with store.read_view() as view:
+            assert_view_matches_oracles(view)
+            assert view.edge_set() == oracle
+            ctx = make_entry_ctx(view)
+            for name, case in ENTRY_CASES.items():
+                assert case(view, ctx), f"entry point diverged: {name}"
+        # epochs are monotone and every migration that committed is in the
+        # durable placement log
+        hist = plane.placement_epochs()
+        ts_list = [ts for ts, _ in hist]
+        assert ts_list == sorted(ts_list) and len(set(ts_list)) == len(ts_list)
+        assert len(store._placement_log) == len(hist) - epochs0
+        store.check_invariants()
+    finally:
+        if RESHARD_LIVE:
+            rb.stop()
+        store.detach_compactor()
+
+
+@settings(max_examples=_examples(10), deadline=None)
+@given(steps=st.lists(step, min_size=2, max_size=10), seed=st.integers(0, 99))
+def test_old_views_pinned_across_migrations(steps, seed):
+    """A view pinned before a run of migrations/writes must keep resolving
+    its own placement and stay bitwise-stable while newer epochs land."""
+    rng = np.random.default_rng(seed)
+    e = rng.integers(0, N_VERTICES, size=(120, 2), dtype=np.int64)
+    e = e[e[:, 0] != e[:, 1]]
+    store = RapidStore.from_edges(
+        N_VERTICES, e, undirected=True, partition_size=P, B=B, high_threshold=4
+    )
+    plane = store.attach_shard_plane(symmetric=True)
+    rb = store.attach_rebalancer()
+    h = store.begin_read()
+    pinned_ts = h.view.ts
+    frozen = h.view.edge_set()
+    placement0 = plane.placement_at(pinned_ts, store.n_subgraphs).copy()
+    try:
+        for s in steps:
+            if s[0] == "write":
+                _, ins, dels = s
+                store.apply(_sym(ins), _sym(dels))
+            elif s[0] == "migrate":
+                _, sid, delta = s
+                cur = int(plane.placement_for(store.n_subgraphs)[sid])
+                rb.execute(
+                    rb.plan_moves({sid: (cur + delta) % plane.n_shards})
+                )
+        assert h.view.edge_set() == frozen
+        assert_view_matches_oracles(h.view)
+        # the pinned timestamp still resolves the pre-migration placement
+        assert np.array_equal(
+            plane.placement_at(pinned_ts, store.n_subgraphs)[: len(placement0)],
+            placement0,
+        )
+    finally:
+        store.end_read(h)

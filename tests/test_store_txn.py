@@ -120,7 +120,7 @@ def test_batch_update_matches_incremental():
 
 
 def test_barriered_pinned_reader_never_sees_mixed_ts_or_stale_tiles():
-    """Deterministic writer/reader interleaving (two-thread barrier protocol).
+    """Deterministic writer/reader interleaving on the schedule harness.
 
     Each round: the reader pins a view and materializes its device tiles;
     the writer then commits several transactions (triggering writer-driven
@@ -131,68 +131,58 @@ def test_barriered_pinned_reader_never_sees_mixed_ts_or_stale_tiles():
     the reader unpins, the writer's next commit reclaims the old versions;
     the epilogue checks they dropped their tiles and refuse to rebuild.
     """
+    from _schedule import Schedule
+
     n = 96
     store = RapidStore.from_edges(
         n, rand_edges(n, 700, seed=31), partition_size=16, B=8,
         high_threshold=4, tracer_k=8,
     )
     rounds = 4
-    bar = threading.Barrier(2, timeout=60)
-    errors = []
     pinned_history = []  # snaps each round's reader held
 
-    def reader():
-        try:
-            for _ in range(rounds):
-                h = store.begin_read()
-                frozen = h.view.edge_set()
-                rows0 = np.asarray(h.view.to_leaf_blocks_device().rows).copy()
-                stream0 = h.view.to_leaf_stream().data.copy()
-                pinned_history.append(h.view.snaps)
-                bar.wait()  # (a) -> writer commits while we stay pinned
-                bar.wait()  # (b) <- writer done committing + GC
-                assert h.view.ts < store.clock.read_timestamp()
-                for sid, snap in enumerate(h.view.snaps):
-                    assert snap.ts <= h.view.ts, "snapshot from the future"
-                    assert store.chains[sid].resolve(h.view.ts) is snap, (
-                        "mixed-timestamp view: pinned subgraph version "
-                        "no longer resolves at the pinned ts"
-                    )
-                assert h.view.edge_set() == frozen
-                dev = h.view.to_leaf_blocks_device()
-                assert np.array_equal(np.asarray(dev.rows), rows0)
-                assert all(device_cache.tiles_fresh(s) for s in h.view.snaps)
-                # the pinned compacted stream is byte-stable too, and its
-                # host generation stamps survive the churn
-                assert np.array_equal(h.view.to_leaf_stream().data, stream0)
-                assert all(s.stream_fresh() for s in h.view.snaps)
-                store.end_read(h)
-                bar.wait()  # (c) -> writer may now reclaim our versions
-        except Exception as e:  # pragma: no cover - surfaced via errors
-            errors.append(e)
-            bar.abort()
+    def reader(sched):
+        for r in range(rounds):
+            h = store.begin_read()
+            frozen = h.view.edge_set()
+            rows0 = np.asarray(h.view.to_leaf_blocks_device().rows).copy()
+            stream0 = h.view.to_leaf_stream().data.copy()
+            pinned_history.append(h.view.snaps)
+            sched.sync(f"pinned-{r}")  # (a) -> writer commits, we stay pinned
+            sched.sync(f"churned-{r}")  # (b) <- writer done committing + GC
+            assert h.view.ts < store.clock.read_timestamp()
+            for sid, snap in enumerate(h.view.snaps):
+                assert snap.ts <= h.view.ts, "snapshot from the future"
+                assert store.chains[sid].resolve(h.view.ts) is snap, (
+                    "mixed-timestamp view: pinned subgraph version "
+                    "no longer resolves at the pinned ts"
+                )
+            assert h.view.edge_set() == frozen
+            dev = h.view.to_leaf_blocks_device()
+            assert np.array_equal(np.asarray(dev.rows), rows0)
+            assert all(device_cache.tiles_fresh(s) for s in h.view.snaps)
+            # the pinned compacted stream is byte-stable too, and its
+            # host generation stamps survive the churn
+            assert np.array_equal(h.view.to_leaf_stream().data, stream0)
+            assert all(s.stream_fresh() for s in h.view.snaps)
+            store.end_read(h)
+            sched.sync(f"unpinned-{r}")  # (c) -> writer may reclaim now
 
-    def writer():
-        try:
-            for r in range(rounds):
-                bar.wait()  # (a) <- reader pinned
-                for i in range(5):
-                    store.insert_edges(rand_edges(n, 30, seed=1000 + 10 * r + i))
-                    store.delete_edges(rand_edges(n, 20, seed=2000 + 10 * r + i))
-                bar.wait()  # (b) -> reader validates under churn
-                bar.wait()  # (c) <- reader unpinned
-                # this commit's GC can now reclaim the versions it pinned
-                store.insert_edges(rand_edges(n, 10, seed=3000 + r))
-        except Exception as e:  # pragma: no cover
-            errors.append(e)
-            bar.abort()
+    def writer(sched):
+        for r in range(rounds):
+            sched.sync(f"pinned-{r}")  # (a) <- reader pinned
+            for i in range(5):
+                store.insert_edges(rand_edges(n, 30, seed=1000 + 10 * r + i))
+                store.delete_edges(rand_edges(n, 20, seed=2000 + 10 * r + i))
+            sched.sync(f"churned-{r}")  # (b) -> reader validates under churn
+            sched.sync(f"unpinned-{r}")  # (c) <- reader unpinned
+            # this commit's GC can now reclaim the versions it pinned
+            store.insert_edges(rand_edges(n, 10, seed=3000 + r))
 
-    threads = [threading.Thread(target=reader), threading.Thread(target=writer)]
-    for t in threads:
-        t.start()
-    for t in threads:
-        t.join()
-    assert not errors, errors
+    with Schedule() as sched:
+        sched.spawn(reader, sched)
+        sched.spawn(writer, sched)
+        sched.join()
     assert store.stats["versions_reclaimed"] > 0
     live = {id(s) for c in store.chains for s in c._versions}
     reclaimed = [s for snaps in pinned_history for s in snaps if id(s) not in live]

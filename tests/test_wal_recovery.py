@@ -14,7 +14,7 @@ from repro.core.clock import LogicalClock
 from repro.core.wal import _HEADER, KIND_REPACK, WriteAheadLog
 
 from _parity import assert_view_matches_oracles
-from _subproc import run_sub_killable
+from _subproc import run_sub, run_sub_killable
 
 
 def rand_ops(n, rounds, seed=7):
@@ -582,6 +582,96 @@ def test_sigkill_tiered_recovers_consistently(tmp_path):
         assert np.array_equal(lb1.length, lb2.length)
         assert_view_matches_oracles(v1)
     rec1.check_invariants()
+
+
+_CRASH_CHILD_RESHARD = """
+import os, signal
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import numpy as np
+from repro.core import RapidStore
+from repro.core.hooks import RESHARD_HOOKS
+
+root = {root!r}
+store = RapidStore(96, partition_size=16, B=8, high_threshold=4)
+store.attach_wal(os.path.join(root, "wal.log"))
+rng = np.random.default_rng(7)
+for i in range(40):
+    e = rng.integers(0, 96, (6, 2), dtype=np.int64)
+    if i % 3 == 2:
+        store.delete_edges(e[:2])
+    else:
+        store.insert_edges(e)
+plane = store.attach_shard_plane()
+assert plane.n_shards == 4, plane.n_shards
+rb = store.attach_rebalancer()
+RESHARD_HOOKS.set({hook!r}, lambda **info: os.kill(os.getpid(), signal.SIGKILL))
+rb.execute(rb.plan_moves({{0: 1, 5: 2}}))
+raise SystemExit("child outlived its kill point")
+"""
+
+
+@pytest.mark.parametrize("hook", [
+    "hook_after_send",   # tiles staged only: no migrate record, no flip
+    "hook_before_flip",  # migrate record synced, flip never published
+    "hook_after_flip",   # flip published before the kill
+])
+def test_sigkill_mid_migration_recovers_consistent_placement(tmp_path, hook):
+    """SIGKILL a live migration at each stage of its lifecycle: recovery
+    must land on a consistent placement — the pre-migration one when the
+    kill beat the WAL record, the post-migration one once the migrate
+    record is durable — and the recovered views stay bitwise-consistent
+    (a migration is a placement change, never a data change)."""
+    from repro.core.wal import KIND_MIGRATE, WriteAheadLog
+
+    root = str(tmp_path)
+    res = run_sub_killable(_CRASH_CHILD_RESHARD.format(root=root, hook=hook))
+    assert res.returncode == -9, f"child survived: {res.stdout} {res.stderr}"
+
+    _, records, _ = WriteAheadLog.replay(os.path.join(root, "wal.log"))
+    migrates = [r for r in records if r.kind == KIND_MIGRATE]
+    want = set()
+    for r in records:
+        if r.kind == KIND_MIGRATE:
+            continue
+        want |= {(int(u), int(v)) for u, v in r.ins}
+        want -= {(int(u), int(v)) for u, v in r.dels}
+    durable = hook != "hook_after_send"
+    assert len(migrates) == (1 if durable else 0)
+    if durable:
+        assert migrates[0].moves == {0: 1, 5: 2}
+
+    rec = RapidStore.recover(root, n_vertices=96, partition_size=16, B=8,
+                             high_threshold=4, attach=False)
+    assert [m for _, m in rec._placement_log] == (
+        [{0: 1, 5: 2}] if durable else []
+    )
+    if durable:
+        assert rec._placement_log[0][0] == migrates[0].ts
+        assert rec.lineage.placement_epochs_between(
+            0, rec.clock.read_timestamp()
+        ) == [(migrates[0].ts, {0: 1, 5: 2})]
+    with rec.read_view() as v:
+        assert v.edge_set() == want
+        assert_view_matches_oracles(v)
+    rec.check_invariants()
+
+    if durable:
+        # on the child's own 4-device mesh the recovered store re-attaches
+        # a plane that resolves the committed placement exactly: new reads
+        # see the moved shards, timestamps below the migration epoch still
+        # resolve the pre-migration placement
+        run_sub(f"""
+import numpy as np
+from repro.core import RapidStore
+rec = RapidStore.recover({root!r}, n_vertices=96, partition_size=16, B=8,
+                         high_threshold=4, attach=False)
+plane = rec.attach_shard_plane()
+pl = plane.placement_for(rec.n_subgraphs)
+assert int(pl[0]) == 1 and int(pl[5]) == 2, pl
+ts0 = rec._placement_log[0][0]
+old = plane.placement_at(ts0 - 1, rec.n_subgraphs)
+assert int(old[0]) == 0 and int(old[5]) == 1, old
+""", devices=4)
 
 
 def test_sigkill_mid_group_commit_recovers_consistently(tmp_path):
